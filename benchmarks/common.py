@@ -1,0 +1,82 @@
+"""Shared benchmark utilities: trained reference CNN + PTQ evaluation."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes
+from repro.data import SyntheticClassification
+from repro.models import convnet
+from repro.models.layers import QuantPolicy
+from repro.optim import adamw, apply_updates
+
+
+def make_task(seed: int = 0):
+    """The stand-in for the paper's image-classification task."""
+    cfg = convnet.MINI_CNN
+    data = SyntheticClassification(
+        n_classes=cfg.n_classes, dim=cfg.input_hw * cfg.input_hw * cfg.in_ch,
+        global_batch=128, seed=seed, noise=1.6)
+    return cfg, data
+
+
+def _images(cfg, batch):
+    return batch["x"].reshape(-1, cfg.input_hw, cfg.input_hw, cfg.in_ch)
+
+
+@functools.lru_cache(maxsize=1)
+def trained_reference(steps: int = 400, seed: int = 0):
+    """Train the fp32 reference model once; cached across benchmarks."""
+    cfg, data = make_task(seed)
+    params = convnet.init_params(cfg, jax.random.key(seed))
+    opt = adamw(1e-2, weight_decay=0.0)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        def loss_fn(p):
+            logits = convnet.apply(p, cfg, _images(cfg, batch))
+            logp = jax.nn.log_softmax(logits)
+            return -jnp.take_along_axis(
+                logp, batch["y"][:, None], axis=1).mean()
+        loss, grads = jax.value_and_grad(loss_fn)(params)
+        updates, state = opt.update(grads, state, params)
+        return apply_updates(params, updates), state, loss
+
+    for i in range(steps):
+        params, state, loss = step(params, state, data.batch(i))
+    return cfg, params, float(loss)
+
+
+def top1(params, cfg, policy: QuantPolicy, *, n_batches: int = 8,
+         seed: int = 1234) -> float:
+    """Validation top-1 under a quantization policy (held-out stream)."""
+    _, data = make_task(0)
+    correct = total = 0
+
+    @jax.jit
+    def logits_of(batch):
+        return convnet.apply(params, cfg, _images(cfg, batch),
+                             policy=policy)
+
+    for i in range(n_batches):
+        batch = data.batch(seed + i)          # indices never seen in training
+        pred = jnp.argmax(logits_of(batch), axis=-1)
+        correct += int((pred == batch["y"]).sum())
+        total += batch["y"].shape[0]
+    return correct / total
+
+
+def ptq_policy(a_bits: int | None, *, w_bits: int | None = 8,
+               granularity: str = "per_group", group_size: int = 27):
+    """Paper Table-2 setup: weights static 8-bit, inputs a_bits, DQ vs LQ.
+
+    Default region 27 = the mini CNN's conv kernel size (3x3x3), mirroring
+    the paper's region = kernel size choice (section VI.D).
+    """
+    cfg = schemes.QuantConfig(w_bits=w_bits, a_bits=a_bits,
+                              granularity=granularity,
+                              group_size=group_size)
+    return QuantPolicy.qat(cfg)   # fake-quant forward = PTQ numerics

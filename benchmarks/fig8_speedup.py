@@ -1,0 +1,65 @@
+"""Paper Fig. 8: speedup of fixed-point over fp32 (paper: ~2x on Edison).
+
+Two measurements stand in for the Edison board (DESIGN.md §5, assumption
+b):
+  (1) measured CPU wall-clock: int8 GEMM (int32 accumulate) vs fp32 GEMM
+      on this host — the direct analogue of the paper's experiment;
+  (2) the TPU roofline model: decode/serving GEMMs are HBM-bound, so
+      projected speedup = fp bytes / packed bytes per weight
+      (16/bits for bf16 baseline), the deployment-relevant number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(verbose: bool = True, n: int = 1024) -> dict:
+    key = jax.random.key(0)
+    a = jax.random.normal(key, (n, n), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 1), (n, n), jnp.float32)
+    a8 = (a * 16).astype(jnp.int8)
+    b8 = (b * 16).astype(jnp.int8)
+
+    f32 = jax.jit(lambda x, y: x @ y)
+    i8 = jax.jit(lambda x, y: jax.lax.dot(
+        x, y, preferred_element_type=jnp.int32))
+
+    t_f32 = _time(f32, a, b)
+    t_i8 = _time(i8, a8, b8)
+
+    rows = {"cpu_fp32_s": t_f32, "cpu_int8_s": t_i8,
+            "cpu_speedup": t_f32 / t_i8}
+    # TPU roofline projection: HBM bytes per weight at each width
+    w = jax.random.normal(key, (4096, 4096))
+    fp_bytes = w.size * 2                          # bf16 deployment baseline
+    for bits in (8, 4, 2):
+        qw = ops.quantize_weight(w, bits, 128)
+        rows[f"tpu_proj_speedup_{bits}bit"] = fp_bytes / qw.nbytes()
+
+    if verbose:
+        print("\n== Fig. 8: fixed-point speedup ==")
+        print(f"  CPU GEMM {n}^3: fp32 {t_f32 * 1e3:.1f} ms, "
+              f"int8 {t_i8 * 1e3:.1f} ms -> {t_f32 / t_i8:.2f}x "
+              f"(paper: ~2x on Edison)")
+        for bits in (8, 4, 2):
+            print(f"  TPU memory-roofline projection {bits}-bit: "
+                  f"{rows[f'tpu_proj_speedup_{bits}bit']:.1f}x over bf16")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

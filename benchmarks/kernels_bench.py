@@ -1,0 +1,59 @@
+"""Per-kernel microbenchmark: ref-path wall time + bytes accounting.
+
+Wall-times on this CPU host are indicative only (the kernels target TPU;
+interpret mode is a correctness harness, ~1000x slower than compiled),
+so the table reports the REF path (XLA-compiled jnp) plus the
+bytes-moved model that determines TPU performance.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+
+
+def _time(fn, reps=3):
+    fn().block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / reps
+
+
+def run(verbose: bool = True) -> dict:
+    m, k, n, gs = 256, 4096, 4096, 128
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (m, k), jnp.float32)
+    w = jax.random.normal(jax.random.fold_in(key, 1), (k, n))
+    rows = {}
+
+    t_fp = _time(jax.jit(lambda: x @ w.astype(x.dtype)))
+    rows["fp32_matmul_ms"] = t_fp * 1e3
+    for bits in (8, 4, 2):
+        qw = ops.quantize_weight(w, bits, gs)
+        t = _time(jax.jit(lambda qw=qw: ops.quant_matmul(
+            x, qw, backend="ref")))
+        rows[f"quant_matmul_b{bits}_ms"] = t * 1e3
+        rows[f"quant_matmul_b{bits}_bytes"] = qw.nbytes()
+    t_aq = _time(jax.jit(lambda: ops.act_quant(
+        x, bits=4, group_size=gs, backend="ref")[0]))
+    rows["act_quant_b4_ms"] = t_aq * 1e3
+
+    if verbose:
+        print("\n== kernel microbench (ref path on CPU host) ==")
+        print(f"  fp32 matmul {m}x{k}x{n}: {rows['fp32_matmul_ms']:.1f} ms "
+              f"({w.size * 4:,} weight bytes)")
+        for bits in (8, 4, 2):
+            print(f"  quant_matmul {bits}-bit: "
+                  f"{rows[f'quant_matmul_b{bits}_ms']:.1f} ms "
+                  f"({rows[f'quant_matmul_b{bits}_bytes']:,} weight bytes)")
+        print(f"  act_quant 4-bit: {rows['act_quant_b4_ms']:.1f} ms")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

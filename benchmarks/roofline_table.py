@@ -1,0 +1,82 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json).
+
+Prints the full 40-cell x 2-mesh table: the three terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, bytes/device — the §Roofline
+deliverable (also written to experiments/roofline_table.md).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+ROOT = os.path.join(os.path.dirname(__file__), "..", "experiments")
+DRYRUN = os.path.join(ROOT, "dryrun")
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(quant: str | None = None) -> list:
+    rows = []
+    if not os.path.isdir(DRYRUN):
+        return rows
+    for fn in sorted(os.listdir(DRYRUN)):
+        if not fn.endswith(".json"):
+            continue
+        is_quant = "_lq" in fn or "_dq" in fn
+        if (quant is None) == is_quant:
+            continue
+        rec = json.load(open(os.path.join(DRYRUN, fn)))
+        if quant is not None and rec.get("quant") != quant:
+            continue
+        if quant is None and rec.get("variant"):
+            continue              # §Perf variants live in EXPERIMENTS.md
+        rows.append(rec)
+    rows.sort(key=lambda r: (r["arch"], SHAPE_ORDER.index(r["shape"]),
+                             r["mesh"]))
+    return rows
+
+
+def fmt_row(r: dict) -> str:
+    if r.get("status") == "skipped":
+        return (f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                f"skipped: sub-quadratic attention required |||||")
+    c, m, k = r["compute_s"], r["memory_s"], r["collective_s"]
+    mem_gib = r["memory"]["per_chip_total"] / 2 ** 30
+    return (f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {c * 1e3:.1f} | {m * 1e3:.1f} | {k * 1e3:.1f} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {mem_gib:.1f} |")
+
+
+HEADER = ("| arch | shape | mesh | compute ms | memory ms | collective ms "
+          "| bound | 6ND/HLO | GiB/chip |\n"
+          "|---|---|---|---|---|---|---|---|---|")
+
+
+def run(verbose: bool = True, quant: str | None = None):
+    rows = load(quant)
+    if not rows:
+        if verbose:
+            print("\n== roofline: no dry-run artifacts found — run "
+                  "`python -m repro.launch.dryrun --all` first ==")
+        return {}
+    lines = [HEADER] + [fmt_row(r) for r in rows]
+    table = "\n".join(lines)
+    if verbose:
+        print(f"\n== roofline table ({len(rows)} cells"
+              + (f", quant={quant}" if quant else "") + ") ==")
+        print(table)
+        ok = [r for r in rows if r.get("status") == "ok"]
+        for dom in ("compute", "memory", "collective"):
+            n = sum(1 for r in ok if r.get("dominant") == dom)
+            print(f"  {dom}-bound cells: {n}/{len(ok)}")
+    out = os.path.join(ROOT, "roofline_table"
+                       + (f"_{quant}" if quant else "") + ".md")
+    with open(out, "w") as f:
+        f.write(table + "\n")
+    return {r["arch"] + "/" + r["shape"] + "/" + r["mesh"]: r
+            for r in rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark aggregator: ``python -m benchmarks.run [names...]``.
+
+One benchmark per paper table/figure:
+  table2   DQ-vs-LQ accuracy at 8/6/4/2-bit        (paper Table 2)
+  fig10    2-bit accuracy vs region size           (paper Fig. 10)
+  table3   LUT multiply/add reduction              (paper Table 3)
+  fig8     fixed-point speedup (CPU + TPU model)   (paper Fig. 8)
+  table45  per-format hardware cost model          (paper Tables 4/5)
+  kernels  per-kernel microbench
+  roofline dry-run roofline table (reads experiments/dryrun/)
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main(argv=None):
+    names = (argv if argv is not None else sys.argv[1:]) or [
+        "table3", "fig8", "table45", "kernels", "table2", "fig10",
+        "roofline"]
+    results = {}
+    for name in names:
+        if name == "table2":
+            from . import table2_accuracy as m
+        elif name == "fig10":
+            from . import fig10_region_sweep as m
+        elif name == "table3":
+            from . import table3_opcounts as m
+        elif name == "fig8":
+            from . import fig8_speedup as m
+        elif name == "table45":
+            from . import table45_hw_cost as m
+        elif name == "kernels":
+            from . import kernels_bench as m
+        elif name == "roofline":
+            from . import roofline_table as m
+        else:
+            raise SystemExit(f"unknown benchmark {name!r}")
+        results[name] = m.run()
+    print("\nall benchmarks complete:", ", ".join(results))
+    return results
+
+
+if __name__ == "__main__":
+    main()

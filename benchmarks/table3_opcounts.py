@@ -1,0 +1,40 @@
+"""Paper Table 3: multiply/add reduction from the 2-bit LUT scheme.
+
+Counts from the EXACT AlexNet / VGG-16 conv shapes (models/convnet.py
+reproduces 666M / 15347M conv MACs to the paper's figures), with the
+paper's section-V accounting: per local region, bucket-combine costs
+(2^bits - 1) adds and the dequantization affine 1 multiply.
+"""
+from __future__ import annotations
+
+from repro.core import lut
+from repro.models import convnet
+
+PAPER = {                # network -> (orig_mult, lut_mult, lut_add), in M
+    "alexnet": (666, 74, 222),
+    "vgg16": (15347, 1705, 5116),
+}
+
+
+def run(verbose: bool = True) -> dict:
+    rows = {}
+    for cfg in (convnet.ALEXNET, convnet.VGG16):
+        macs = convnet.conv_macs(cfg, conv_only=True)
+        summary = lut.reduction_summary(macs, bits=2, region_size=9)
+        rows[cfg.name] = summary
+        if verbose:
+            pm, plm, pla = PAPER[cfg.name]
+            print(f"\n== Table 3 [{cfg.name}]: 2-bit LUT op counts ==")
+            print(f"  original : {summary['orig_mult'] / 1e6:8.0f}M mult "
+                  f"{summary['orig_add'] / 1e6:8.0f}M add   "
+                  f"(paper {pm}M / {pm}M)")
+            print(f"  2-bit LUT: {summary['lut_mult'] / 1e6:8.0f}M mult "
+                  f"{summary['lut_add'] / 1e6:8.0f}M add   "
+                  f"(paper {plm}M / {pla}M)")
+            print(f"  reduction: {summary['mult_reduction']:.1f}x mult, "
+                  f"{summary['add_reduction']:.1f}x add")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-parameter LM for a few hundred steps.
+
+Exercises the full production stack on CPU: synthetic sharded data,
+AdamW + cosine schedule, microbatch gradient accumulation, LQ gradient
+compression (the paper's format on the DP all-reduce), atomic
+checkpoints, and kill-resume fault tolerance (the run checkpoints every
+50 steps; re-running this script resumes from the newest one).
+
+Run:  PYTHONPATH=src python examples/train_lm.py [--steps 300]
+"""
+import argparse
+
+from repro.data import DataConfig, SyntheticLM
+from repro.models.config import ModelConfig
+from repro.optim import warmup_cosine
+from repro.train import TrainHParams, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    # ~100M params: 12 x d512 GQA blocks + 32k vocab
+    cfg = ModelConfig(name="lm-100m", family="dense", n_layers=12,
+                      d_model=512, vocab_size=32000, n_heads=8,
+                      n_kv_heads=4, d_ff=2048, dtype="float32",
+                      remat="none")
+    n = cfg.param_count()
+    print(f"model: {n / 1e6:.1f}M params")
+
+    data = SyntheticLM(DataConfig(vocab_size=32000, seq_len=256,
+                                  global_batch=16))
+    hp = TrainHParams(
+        lr=warmup_cosine(3e-4, warmup_steps=50, total_steps=args.steps),
+        microsteps=2,
+        grad_compress_bits=8,        # paper-format compressed all-reduce
+        clip_norm=1.0)
+    trainer = Trainer(cfg, hp, data,
+                      TrainerConfig(total_steps=args.steps, ckpt_every=50,
+                                    ckpt_dir=args.ckpt_dir, log_every=20))
+    trainer.run()
+    h = trainer.history
+    print(f"\nloss: {h[0]['loss']:.3f} -> {h[-1]['loss']:.3f} over "
+          f"{len(h)} steps "
+          f"({1e3 * sum(r['wall_s'] for r in h[1:]) / max(len(h) - 1, 1):.0f}"
+          f" ms/step)")
+    print(f"checkpoints in {args.ckpt_dir} — re-run to resume.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""AlexNet (the paper's first example task) — exact Caffe shapes for the
+op-count tables + the reduced trainable CNN for accuracy benchmarks."""
+from repro.models.convnet import ALEXNET as CONFIG, MINI_CNN as SMOKE  # noqa

@@ -1,0 +1,34 @@
+"""granite-3-2b [dense] — 40L d_model=2048 32H (GQA kv=8) d_ff=8192
+vocab=49155  [hf:ibm-granite/granite-3.0-2b-base]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-3-2b",
+    family="dense",
+    n_layers=40,
+    d_model=2048,
+    vocab_size=49155,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=8192,
+    ffn_kind="swiglu",
+    rope=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    pattern=(("attn", "swiglu"),),
+)
+
+SMOKE = ModelConfig(
+    name="granite-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    ffn_kind="swiglu",
+    tie_embeddings=True,
+    pattern=(("attn", "swiglu"),),
+    dtype="float32",
+)

@@ -1,0 +1,49 @@
+"""internvl2-1b [vlm] — Qwen2-0.5B LM backbone: 24L d_model=896 14H
+(GQA kv=2) d_ff=4864 vocab=151655  [arXiv:2404.16821].
+
+The InternViT-300M vision frontend is a STUB per the assignment:
+``input_specs`` supplies 256 precomputed patch embeddings (ViT hidden 1024
+-> frontend Dense 1024->896) prepended to the token sequence.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    n_layers=24,
+    d_model=896,
+    vocab_size=151655,
+    n_heads=14,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    ffn_kind="swiglu",
+    rope=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    attn_bias=True,          # Qwen2 uses QKV biases
+    pattern=(("attn", "swiglu"),),
+    frontend="patch_stub",
+    n_patches=256,
+    frontend_dim=1024,
+)
+
+SMOKE = ModelConfig(
+    name="internvl2-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    ffn_kind="swiglu",
+    tie_embeddings=True,
+    attn_bias=True,
+    pattern=(("attn", "swiglu"),),
+    frontend="patch_stub",
+    n_patches=4,
+    frontend_dim=32,
+    dtype="float32",
+)

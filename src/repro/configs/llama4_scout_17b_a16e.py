@@ -1,0 +1,65 @@
+"""llama4-scout-17b-a16e [moe] — 48L d_model=5120 40H (GQA kv=8)
+moe_d_ff=8192 (+ shared expert 8192), vocab=202048, MoE 16e top-1,
+head_dim=128  [hf:meta-llama/Llama-4-Scout-17B-16E].
+
+Layer layout: 3 chunked-local-attention layers (chunk 8192) : 1 global
+full-attention layer (NoPE in the original; kept RoPE-free on the global
+layers is immaterial to the systems study, we keep RoPE uniform).  Every
+layer is MoE (interleave step 1) with one shared expert.
+
+The ``long_500k`` cell runs: 3/4 of layers are chunk-8192 local (O(L*c)),
+the 12 global layers hold the full 512k KV (sharded; DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    vocab_size=202048,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=0,
+    rope=True,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+    pattern=(
+        ("attn_chunked", "moe"),
+        ("attn_chunked", "moe"),
+        ("attn_chunked", "moe"),
+        ("attn", "moe"),
+    ),
+    chunk=8192,
+    n_experts=16,
+    top_k=1,
+    moe_d_ff=8192,
+    shared_ff=8192,
+)
+
+SMOKE = ModelConfig(
+    name="llama4-smoke",
+    family="moe",
+    n_layers=4,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=0,
+    tie_embeddings=False,
+    pattern=(
+        ("attn_chunked", "moe"),
+        ("attn_chunked", "moe"),
+        ("attn_chunked", "moe"),
+        ("attn", "moe"),
+    ),
+    chunk=8,
+    n_experts=4,
+    top_k=1,
+    moe_d_ff=96,
+    shared_ff=96,
+    capacity_factor=8.0,   # no-drop at smoke scale: decode/prefill/forward agree exactly
+    dtype="float32",
+)

@@ -1,0 +1,46 @@
+"""mamba2-130m [ssm] — 24L d_model=768 (attention-free) vocab=50280,
+ssm_state=128, SSD (state-space duality)  [arXiv:2405.21060].
+
+No KV cache: the ``decode_32k`` / ``long_500k`` cells carry the O(1)
+recurrent state (conv tail + per-head SSM state), which is what makes this
+arch run the 512k cell.  LQR applies to in/out projections; the SSM state
+quantization replaces KV-cache quantization (DESIGN.md §4).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    n_layers=24,
+    d_model=768,
+    vocab_size=50280,
+    d_ff=0,
+    rope=False,
+    tie_embeddings=True,
+    pattern=(("mamba2", "none"),),
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_groups=1,
+    conv_kernel=4,
+    ssd_chunk=256,
+)
+
+SMOKE = ModelConfig(
+    name="mamba2-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    d_ff=0,
+    rope=False,
+    tie_embeddings=True,
+    pattern=(("mamba2", "none"),),
+    ssm_state=16,
+    ssm_head_dim=16,
+    ssm_expand=2,
+    ssm_groups=1,
+    conv_kernel=4,
+    ssd_chunk=8,
+    dtype="float32",
+)

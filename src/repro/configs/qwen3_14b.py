@@ -1,0 +1,38 @@
+"""qwen3-14b [dense] — 40L d_model=5120 40H (GQA kv=8) d_ff=17408
+vocab=151936, qk_norm, head_dim=128  [hf:Qwen/Qwen3-14B family]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-14b",
+    family="dense",
+    n_layers=40,
+    d_model=5120,
+    vocab_size=151936,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=17408,
+    ffn_kind="swiglu",
+    qk_norm=True,
+    rope=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    pattern=(("attn", "swiglu"),),
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-14b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=80,
+    vocab_size=256,
+    n_heads=5,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=160,
+    ffn_kind="swiglu",
+    qk_norm=True,
+    tie_embeddings=False,
+    pattern=(("attn", "swiglu"),),
+    dtype="float32",
+)

@@ -1,0 +1,38 @@
+"""qwen3-8b [dense] — 36L d_model=4096 32H (GQA kv=8) d_ff=12288
+vocab=151936, qk_norm, head_dim=128  [hf:Qwen/Qwen3-8B]."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    vocab_size=151936,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    ffn_kind="swiglu",
+    qk_norm=True,
+    rope=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    pattern=(("attn", "swiglu"),),
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=128,
+    ffn_kind="swiglu",
+    qk_norm=True,
+    tie_embeddings=False,
+    pattern=(("attn", "swiglu"),),
+    dtype="float32",
+)

@@ -1,0 +1,48 @@
+"""qwen3-moe-235b-a22b [moe] — 94L d_model=4096 64H (GQA kv=4)
+moe_d_ff=1536, vocab=151936, MoE 128 experts top-8, qk_norm, head_dim=128
+[hf:Qwen/Qwen3-235B-A22B family].
+
+Analytic check: total ~235B params, ~22B active per token
+(see ModelConfig.param_count / active_param_count; asserted in tests).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    vocab_size=151936,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=0,
+    qk_norm=True,
+    rope=True,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+    pattern=(("attn", "moe"),),
+    n_experts=128,
+    top_k=8,
+    moe_d_ff=1536,
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=16,
+    d_ff=0,
+    qk_norm=True,
+    tie_embeddings=False,
+    pattern=(("attn", "moe"),),
+    n_experts=8,
+    top_k=2,
+    moe_d_ff=96,
+    capacity_factor=8.0,   # no-drop at smoke scale: decode/prefill/forward agree exactly
+    dtype="float32",
+)

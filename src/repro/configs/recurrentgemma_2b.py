@@ -1,0 +1,56 @@
+"""recurrentgemma-2b [hybrid] — 26L d_model=2560 10H (GQA kv=1) d_ff=7680
+vocab=256000, RG-LRU + local attention 1:2 (rec, rec, attn), window 2048
+[arXiv:2402.19427].
+
+26 layers / pattern length 3 -> 8 scan-stacked superblocks + 2 tail layers
+(rec, rec) — exercises the unscanned-tail path.  Sub-quadratic (window
+attention + linear recurrence) -> runs the ``long_500k`` cell.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b",
+    family="hybrid",
+    n_layers=26,
+    d_model=2560,
+    vocab_size=256000,
+    n_heads=10,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=7680,
+    ffn_kind="gelu",
+    rope=True,
+    rope_theta=10_000.0,
+    tie_embeddings=True,
+    pattern=(
+        ("rglru", "gelu"),
+        ("rglru", "gelu"),
+        ("attn_local", "gelu"),
+    ),
+    window=2048,
+    lru_width=2560,
+    conv_kernel=4,
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke",
+    family="hybrid",
+    n_layers=5,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=16,
+    d_ff=128,
+    ffn_kind="gelu",
+    tie_embeddings=True,
+    pattern=(
+        ("rglru", "gelu"),
+        ("rglru", "gelu"),
+        ("attn_local", "gelu"),
+    ),
+    window=8,
+    lru_width=64,
+    conv_kernel=4,
+    dtype="float32",
+)

@@ -1,0 +1,146 @@
+"""Assigned input-shape cells and ``input_specs()`` stand-ins.
+
+Four shapes per LM arch (the assignment's 40 cells):
+
+  train_4k      seq_len=4096    global_batch=256   -> lowers train_step
+  prefill_32k   seq_len=32768   global_batch=32    -> lowers prefill
+  decode_32k    seq_len=32768   global_batch=128   -> lowers serve_step
+                                                      (1 new token, KV=32k)
+  long_500k     seq_len=524288  global_batch=1     -> lowers serve_step
+
+``long_500k`` needs sub-quadratic attention: it RUNS for mamba2-130m (SSM),
+recurrentgemma-2b (RG-LRU + window-2048 local attn) and llama4-scout
+(3/4 chunk-8192 layers; the 12 global layers' 512k KV is sharded).  It is
+SKIPPED for the pure full-attention archs (DESIGN.md §4) — a dense 512k KV
+at batch 1 is not those models' claimed regime.
+
+All specs are ``jax.ShapeDtypeStruct`` — weak-type-correct, shardable, no
+device allocation; decode cells build the cache skeleton via ``eval_shape``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                    # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCell("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCell("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCell("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCell("long_500k", 524288, 1, "decode"),
+}
+
+# archs with sub-quadratic paths that run the 512k cell
+LONG_CONTEXT_ARCHS = ("mamba2-130m", "recurrentgemma-2b",
+                      "llama4-scout-17b-a16e")
+
+
+def cell_supported(arch: str, shape: str) -> tuple:
+    """(supported, reason) for one (arch, shape) cell."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, ("full quadratic attention at 512k/batch-1 is outside "
+                       "this arch's regime (DESIGN.md §4 shape-cell skips)")
+    return True, ""
+
+
+def cells():
+    """All 40 (arch, shape) cells with support status."""
+    from repro.configs import ARCHS
+    out = []
+    for arch in ARCHS:
+        for shape in SHAPES:
+            ok, why = cell_supported(arch, shape)
+            out.append((arch, shape, ok, why))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# spec builders
+# ---------------------------------------------------------------------------
+
+def _frontend_specs(cfg: ModelConfig, batch: int) -> dict:
+    if cfg.frontend == "audio_stub":
+        return {"frames": jax.ShapeDtypeStruct(
+            (batch, cfg.enc_len, cfg.frontend_dim), jnp.float32)}
+    if cfg.frontend == "patch_stub":
+        return {"patches": jax.ShapeDtypeStruct(
+            (batch, cfg.n_patches, cfg.frontend_dim), jnp.float32)}
+    return {}
+
+
+def _token_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Token count s.t. tokens + patch prefix == seq_len positions."""
+    if cfg.frontend == "patch_stub":
+        return seq_len - cfg.n_patches
+    return seq_len
+
+
+def train_specs(cfg: ModelConfig, seq_len: int, global_batch: int) -> dict:
+    """Inputs of train_step: tokens + next-token labels (+ frontend)."""
+    lt = _token_len(cfg, seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((global_batch, lt), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((global_batch, lt), jnp.int32)}
+    specs.update(_frontend_specs(cfg, global_batch))
+    return specs
+
+
+def prefill_specs(cfg: ModelConfig, seq_len: int, global_batch: int) -> dict:
+    lt = _token_len(cfg, seq_len)
+    specs = {"tokens": jax.ShapeDtypeStruct((global_batch, lt), jnp.int32)}
+    specs.update(_frontend_specs(cfg, global_batch))
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, global_batch: int, max_len: int):
+    """Abstract KV/state cache skeleton (eval_shape — no allocation)."""
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, global_batch, max_len))
+
+
+def decode_specs(cfg: ModelConfig, seq_len: int, global_batch: int) -> dict:
+    """Inputs of serve_step: one new token + the KV cache of ``seq_len``."""
+    return {"tokens": jax.ShapeDtypeStruct((global_batch, 1), jnp.int32),
+            "cache": cache_specs(cfg, global_batch, seq_len)}
+
+
+def input_specs(cfg: ModelConfig, shape: str) -> dict:
+    cell = SHAPES[shape]
+    if cell.kind == "train":
+        return train_specs(cfg, cell.seq_len, cell.global_batch)
+    if cell.kind == "prefill":
+        return prefill_specs(cfg, cell.seq_len, cell.global_batch)
+    return decode_specs(cfg, cell.seq_len, cell.global_batch)
+
+
+# ---------------------------------------------------------------------------
+# concrete (small) batches for smoke tests
+# ---------------------------------------------------------------------------
+
+def demo_batch(cfg: ModelConfig, batch: int, seq_len: int, key=None) -> dict:
+    """Concrete batch matching train_specs, for CPU smoke tests."""
+    key = key if key is not None else jax.random.key(0)
+    k1, k2 = jax.random.split(key)
+    lt = _token_len(cfg, seq_len)
+    out = {"tokens": jax.random.randint(k1, (batch, lt), 0, cfg.vocab_size,
+                                        jnp.int32)}
+    out["labels"] = jnp.roll(out["tokens"], -1, axis=1)
+    if cfg.frontend == "audio_stub":
+        out["frames"] = jax.random.normal(
+            k2, (batch, cfg.enc_len, cfg.frontend_dim), jnp.float32)
+    elif cfg.frontend == "patch_stub":
+        out["patches"] = jax.random.normal(
+            k2, (batch, cfg.n_patches, cfg.frontend_dim), jnp.float32)
+    return out

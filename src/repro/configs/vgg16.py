@@ -1,0 +1,3 @@
+"""VGG-16 (the paper's second example task) — exact shapes for the
+op-count tables; accuracy benchmarks share the reduced CNN."""
+from repro.models.convnet import VGG16 as CONFIG, MINI_CNN as SMOKE  # noqa

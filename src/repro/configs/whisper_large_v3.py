@@ -1,0 +1,57 @@
+"""whisper-large-v3 [audio] — enc-dec transformer backbone.
+
+32 decoder layers (+ 32 encoder layers), d_model=1280, 20 heads (MHA:
+kv=20), d_ff=5120, vocab=51866.  GELU FFN, LayerNorm, learned positions,
+attention biases, no RoPE  [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs`` supplies
+1500 precomputed frame embeddings (80 mel bins -> frontend Dense 80->1280).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    n_layers=32,
+    d_model=1280,
+    vocab_size=51866,
+    n_heads=20,
+    n_kv_heads=20,
+    d_ff=5120,
+    ffn_kind="gelu",
+    rope=False,
+    pos_embed="learned",
+    attn_bias=True,
+    norm_kind="layer",
+    tie_embeddings=True,
+    pattern=(("attn", "gelu"),),
+    n_enc_layers=32,
+    enc_len=1500,
+    frontend="audio_stub",
+    frontend_dim=80,
+    max_seq=32768,          # covers the decode_32k cell (learned positions)
+)
+
+SMOKE = ModelConfig(
+    name="whisper-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=64,
+    vocab_size=256,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=128,
+    ffn_kind="gelu",
+    rope=False,
+    pos_embed="learned",
+    attn_bias=True,
+    norm_kind="layer",
+    tie_embeddings=True,
+    pattern=(("attn", "gelu"),),
+    n_enc_layers=2,
+    enc_len=12,
+    frontend="audio_stub",
+    frontend_dim=16,
+    max_seq=128,
+    dtype="float32",
+)

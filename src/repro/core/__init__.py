@@ -1,0 +1,21 @@
+"""Core: the paper's contribution — local quantization regions (LQ).
+
+Public surface:
+  QTensor                       packed per-region tensor format
+  quantize / dequantize / fake_quant / quant_error
+  QuantConfig, schemes.get      scheme registry ("fp32", "dq8".."lq1", ...)
+  lut.lut_matmul                paper section-V LUT forward
+  calibration                   PTQ range observers
+  qat.ste_fake_quant            QAT straight-through fake quant
+  gradcomp                      LQ-block gradient compression (beyond paper)
+"""
+from .qtensor import QTensor, num_groups
+from .quantize import quantize, dequantize, fake_quant, quant_error
+from .schemes import QuantConfig, FP32, get as get_scheme, names as scheme_names
+from . import packing, lut, calibration, qat, gradcomp
+
+__all__ = [
+    "QTensor", "num_groups", "quantize", "dequantize", "fake_quant",
+    "quant_error", "QuantConfig", "FP32", "get_scheme", "scheme_names",
+    "packing", "lut", "calibration", "qat", "gradcomp",
+]

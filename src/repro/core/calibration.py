@@ -1,0 +1,104 @@
+"""Activation-range calibration for post-training quantization.
+
+The paper quantizes inputs *at runtime* from each batch's own min/max
+(section IV.C: "the inputs have to be converted into fixed point in
+runtime").  That is the ``dynamic`` observer here.  For deployment paths
+where the range must be frozen offline (e.g. pre-computed LUT affine
+params), we provide running min/max and percentile observers over a
+calibration stream -- the standard PTQ substrate the paper's BLAImark
+pipeline (Fig. 6) implies but does not spell out.
+
+All observers are pure-functional: ``init() -> state``,
+``update(state, x) -> state``, ``bounds(state) -> (lo, hi)`` -- so they can
+live inside jitted evaluation loops.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("lo", "hi", "count", "hist"),
+         meta_fields=("kind", "momentum", "percentile", "hist_lo", "hist_hi"))
+@dataclasses.dataclass(frozen=True)
+class ObserverState:
+    lo: jnp.ndarray          # scalar f32
+    hi: jnp.ndarray
+    count: jnp.ndarray       # scalar i32, batches seen
+    hist: jnp.ndarray        # (bins,) f32 histogram (percentile observer)
+    kind: str                # 'minmax' | 'ema' | 'percentile'
+    momentum: float
+    percentile: float
+    hist_lo: float
+    hist_hi: float
+
+
+_BINS = 2048
+
+
+def init(kind: str = "minmax", *, momentum: float = 0.99,
+         percentile: float = 99.9, hist_range: tuple = (-30.0, 30.0)
+         ) -> ObserverState:
+    if kind not in ("minmax", "ema", "percentile"):
+        raise ValueError(f"unknown observer {kind!r}")
+    return ObserverState(
+        lo=jnp.float32(jnp.inf), hi=jnp.float32(-jnp.inf),
+        count=jnp.int32(0), hist=jnp.zeros((_BINS,), jnp.float32),
+        kind=kind, momentum=momentum, percentile=percentile,
+        hist_lo=float(hist_range[0]), hist_hi=float(hist_range[1]))
+
+
+def update(state: ObserverState, x: jnp.ndarray) -> ObserverState:
+    xf = x.astype(jnp.float32)
+    blo, bhi = xf.min(), xf.max()
+    if state.kind == "minmax":
+        lo = jnp.minimum(state.lo, blo)
+        hi = jnp.maximum(state.hi, bhi)
+        hist = state.hist
+    elif state.kind == "ema":
+        m = state.momentum
+        first = state.count == 0
+        lo = jnp.where(first, blo, m * state.lo + (1 - m) * blo)
+        hi = jnp.where(first, bhi, m * state.hi + (1 - m) * bhi)
+        hist = state.hist
+    else:  # percentile: accumulate a histogram, bounds read from quantiles
+        lo = jnp.minimum(state.lo, blo)
+        hi = jnp.maximum(state.hi, bhi)
+        edges = jnp.linspace(state.hist_lo, state.hist_hi, _BINS + 1)
+        idx = jnp.clip(jnp.searchsorted(edges, xf.ravel()) - 1, 0, _BINS - 1)
+        hist = state.hist.at[idx].add(1.0)
+    return dataclasses.replace(state, lo=lo, hi=hi, hist=hist,
+                               count=state.count + 1)
+
+
+def bounds(state: ObserverState) -> tuple:
+    """Calibrated (lo, hi) range for quantizer construction."""
+    if state.kind in ("minmax", "ema"):
+        return state.lo, state.hi
+    total = state.hist.sum()
+    cdf = jnp.cumsum(state.hist) / jnp.maximum(total, 1.0)
+    q = state.percentile / 100.0
+    centers = jnp.linspace(state.hist_lo, state.hist_hi, _BINS)
+    lo_i = jnp.argmax(cdf >= (1 - q))
+    hi_i = jnp.argmax(cdf >= q)
+    # fall back to true min/max if the histogram is empty
+    lo = jnp.where(total > 0, centers[lo_i], state.lo)
+    hi = jnp.where(total > 0, centers[hi_i], state.hi)
+    return lo, hi
+
+
+def calibrate(fn, stream, kind: str = "minmax", **kw) -> tuple:
+    """Run ``fn(batch)`` over a calibration stream; observe its outputs.
+
+    Returns final (lo, hi).  ``fn`` maps a batch to the activation tensor
+    whose range is being calibrated.
+    """
+    state = init(kind, **kw)
+    step = jax.jit(lambda s, b: update(s, fn(b)))
+    for batch in stream:
+        state = step(state, batch)
+    return bounds(state)

@@ -1,0 +1,109 @@
+"""LQ-block gradient compression for data-parallel all-reduce (beyond paper).
+
+The multi-pod tie-in of the paper's technique: the *identical* local
+quantization region format (per-group affine, section IV.C) is applied to
+gradients before the data-parallel all-reduce, cutting cross-pod ICI/DCN
+bytes by 4x (8-bit) or 8x (4-bit).  Error feedback (residual carried to the
+next step) keeps SGD convergence unbiased-in-the-limit -- the standard
+1-bit-Adam / PowerSGD-style correction.
+
+Wire format per leaf: (codes uint8-packed, scale f32/G, zmin f32/G) --
+compress -> all_gather(codes+affine) over the dp axis -> dequantize+mean.
+Inside shard_map the gather moves exactly the compressed bytes; the HLO
+collective-bytes parser (roofline/) then sees the reduction.
+
+All functions are leaf-wise and pytree-mapped; flat (1-D-reshaped) leaves use
+regions of ``group_size`` contiguous elements, mirroring Fig. 4.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .quantize import _affine_params  # shared affine derivation
+
+
+def _pad_to(x, multiple):
+    n = x.size
+    pad = (-n) % multiple
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def compress_leaf(g: jnp.ndarray, bits: int, group_size: int):
+    """Quantize one gradient leaf into the LQ wire format.
+
+    Returns (packed codes uint8 (G, group_size/cpb), scale (G,), zmin (G,)).
+    The leaf is flattened and zero-padded to a multiple of group_size.
+    """
+    flat, _ = _pad_to(g.astype(jnp.float32), group_size)
+    grp = flat.reshape(-1, group_size)
+    scale, zmin = _affine_params(grp.min(-1), grp.max(-1), bits)
+    levels = (1 << bits) - 1
+    codes = jnp.clip(jnp.round((grp - zmin[:, None]) / scale[:, None]),
+                     0, levels).astype(jnp.uint8)
+    return packing.pack(codes, bits), scale, zmin
+
+
+def decompress_leaf(packed, scale, zmin, bits: int, group_size: int,
+                    shape, size: int):
+    codes = packing.unpack(packed, bits, group_size).astype(jnp.float32)
+    flat = (codes * scale[:, None] + zmin[:, None]).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def compress(grads, bits: int = 8, group_size: int = 128):
+    """Pytree-wide compression. Returns a pytree of wire triples."""
+    return jax.tree.map(lambda g: compress_leaf(g, bits, group_size), grads,
+                        is_leaf=lambda x: isinstance(x, jnp.ndarray))
+
+
+def decompress(wire, like, bits: int = 8, group_size: int = 128):
+    return jax.tree.map(
+        lambda w, g: decompress_leaf(*w, bits, group_size, g.shape, g.size),
+        wire, like, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def roundtrip_leaf(g, bits: int, group_size: int):
+    """compress -> decompress one leaf (the quantization the wire applies)."""
+    wire = compress_leaf(g, bits, group_size)
+    return decompress_leaf(*wire, bits, group_size, g.shape, g.size)
+
+
+# ---------------------------------------------------------------------------
+# Error feedback
+# ---------------------------------------------------------------------------
+
+def init_error_state(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+
+def apply_error_feedback(grads, err):
+    """g' = g + e  (inject last step's quantization residual)."""
+    return jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, err)
+
+
+def new_error(grads_corrected, grads_quantized):
+    """e' = g' - Q(g')  (residual left behind by this step's quantization)."""
+    return jax.tree.map(lambda g, q: g - q, grads_corrected, grads_quantized)
+
+
+def compressed_mean_over_axis(grads, axis_name: str, *, bits: int = 8,
+                              group_size: int = 128):
+    """Compressed data-parallel gradient mean, for use inside shard_map.
+
+    Each replica quantizes its local gradient into the LQ wire format,
+    all_gathers the compressed payload over ``axis_name`` (this is where the
+    bytes cross the interconnect -- bits/32 of the fp32 volume), then
+    dequantizes and averages locally.
+    """
+    def leaf(g):
+        packed, scale, zmin = compress_leaf(g, bits, group_size)
+        pk = jax.lax.all_gather(packed, axis_name)      # (R, G, gp)
+        sc = jax.lax.all_gather(scale, axis_name)
+        zm = jax.lax.all_gather(zmin, axis_name)
+        codes = packing.unpack(pk, bits, group_size).astype(jnp.float32)
+        vals = codes * sc[..., None] + zm[..., None]    # (R, G, group)
+        flat = vals.mean(axis=0).reshape(-1)[:g.size]
+        return flat.reshape(g.shape)
+    return jax.tree.map(leaf, grads)

@@ -1,0 +1,117 @@
+"""LQ-quantized KV-cache (+ SSM-state) wire format (core format layer).
+
+The paper quantizes layer *inputs* at runtime (section V.B: "the inputs
+have to be converted into fixed point in runtime").  The serving-era
+analogue is the KV cache: decode is memory-bound on cache reads, so
+storing K/V in the local-quantization-region format cuts HBM traffic by
+16/bits x — the same roofline win as packed weights (DESIGN.md §5.1).
+
+Wire format per cached tensor (quantized along the head/feature dim):
+
+    {"packed": uint8 (..., D/cpb), "scale": f32 (..., G), "zmin": f32 (..., G)}
+
+``bits`` is *inferred from shapes* (cpb = D // packed_D in {1,2,4,8} ->
+bits in {8,4,2,1}), so the cache stays a plain pytree — it flows through
+scan / pjit / donation with no static metadata.  6/5/3-bit KV is therefore
+not expressible here (weights support it; the cache keeps the power-of-two
+set — noted in DESIGN.md).
+
+Supported leaves: attention K/V (B, S, KV, D) and mamba2 SSM state
+(B, H, P, N) — the attention-free arch's "cache" (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing
+
+
+def _infer(packed_d: int, d: int, scale_g: int):
+    cpb = d // packed_d
+    bits = {1: 8, 2: 4, 4: 2, 8: 1}[cpb]
+    group_size = d // scale_g
+    return bits, group_size
+
+
+def is_quant_kv(leaf) -> bool:
+    return isinstance(leaf, dict) and "packed" in leaf
+
+
+is_quant_state = is_quant_kv
+
+
+def kv_bits_of(q: dict, d: int) -> int:
+    return _infer(q["packed"].shape[-1], d, q["scale"].shape[-1])[0]
+
+
+def quantize_kv(x: jnp.ndarray, bits: int, group_size: int) -> dict:
+    """x (..., D) -> wire dict, regions along the last dim."""
+    d = x.shape[-1]
+    if d % group_size:
+        raise ValueError(f"D={d} not divisible by group_size={group_size}")
+    g = d // group_size
+    xg = x.astype(jnp.float32).reshape(*x.shape[:-1], g, group_size)
+    xmin = xg.min(-1)
+    xmax = xg.max(-1)
+    levels = (1 << bits) - 1
+    rng = xmax - xmin
+    scale = jnp.where(rng > 0, rng / levels, jnp.ones_like(rng))
+    codes = jnp.clip(jnp.round((xg - xmin[..., None]) / scale[..., None]),
+                     0, levels).astype(jnp.uint8)
+    return {"packed": packing.pack(codes.reshape(*x.shape), bits),
+            "scale": scale, "zmin": xmin}
+
+
+def dequantize_kv(q: dict, d: int, dtype=jnp.float32) -> jnp.ndarray:
+    bits, group_size = _infer(q["packed"].shape[-1], d, q["scale"].shape[-1])
+    codes = packing.unpack(q["packed"], bits, d).astype(jnp.float32)
+    g = d // group_size
+    cg = codes.reshape(*codes.shape[:-1], g, group_size)
+    x = cg * q["scale"][..., None] + q["zmin"][..., None]
+    return x.reshape(*codes.shape).astype(dtype)
+
+
+def make_quant_kv(shape: tuple, bits: int, group_size: int) -> dict:
+    """Zero-initialized wire cache for a (..., D) tensor."""
+    *lead, d = shape
+    cpb = packing.codes_per_byte(bits)
+    g = d // group_size
+    return {"packed": jnp.zeros((*lead, d // cpb), jnp.uint8),
+            "scale": jnp.ones((*lead, g), jnp.float32),
+            "zmin": jnp.zeros((*lead, g), jnp.float32)}
+
+
+def update_quant_kv(q: dict, new: jnp.ndarray, slot, *, axis: int,
+                    bits: int, group_size: int) -> dict:
+    """Quantize ``new`` and write it at ``slot`` along ``axis``.
+
+    ``new`` has the same rank as the cache's logical tensor; its extent
+    along ``axis`` may exceed 1 (bulk prefill write).
+    """
+    wire = quantize_kv(new, bits, group_size)
+    return {k: jax.lax.dynamic_update_slice_in_dim(
+        q[k], wire[k].astype(q[k].dtype), slot, axis=axis) for k in q}
+
+
+# ---------------------------------------------------------------------------
+# SSM state (mamba2): same format, quantized along the state dim N
+# ---------------------------------------------------------------------------
+
+def quantize_state(h: jnp.ndarray, bits: int = 8,
+                   group_size: int = 64) -> dict:
+    gs = min(group_size, h.shape[-1])
+    return quantize_kv(h, bits, gs)
+
+
+def dequantize_state(q: dict, n: int) -> jnp.ndarray:
+    return dequantize_kv(q, n, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# accounting
+# ---------------------------------------------------------------------------
+
+def cache_nbytes(cache) -> int:
+    """Total bytes of a (possibly mixed fp/quantized) cache pytree."""
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))

@@ -1,0 +1,114 @@
+"""Look-up-table forward path (paper section V) + op-count accounting.
+
+Paper idea: with n-bit activations there are only ``2^n`` distinct activation
+codes, so the inner product of a local quantization region can be computed
+without multiplies -- group the weights by their partner activation's code,
+sum each bucket (adds / table writes), then combine the ``2^n`` bucket sums
+with their code values (shifts + adds) and apply the region's dequantization
+affine once.
+
+Mathematically, for one region of size R with activation codes c_j in
+[0, 2^n) and affine a_j = c_j * s + zmin:
+
+    sum_j w_j a_j = s * sum_v v * T[v]  +  zmin * sum_j w_j
+    where T[v] = sum_{j : c_j == v} w_j            ("the look-up table")
+
+TPU adaptation (DESIGN.md section 5.2): T is a **one-hot partial-sum matmul**
+with a binary {0,1} inner matrix -- the faithful dataflow, implemented both
+here (pure jnp) and as a Pallas kernel (kernels/lut_matmul.py).  On TPU the
+MXU has hardwired multipliers, so this path is the *fidelity / accounting*
+implementation; the packed-int8 path (kernels/quant_matmul.py) is the
+performance deployment.  The op-count model below reproduces paper Table 3.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Forward path
+# ---------------------------------------------------------------------------
+
+def lut_matmul(a_codes: jnp.ndarray, a_scale: jnp.ndarray, a_zmin: jnp.ndarray,
+               w: jnp.ndarray, *, bits: int, group_size: int) -> jnp.ndarray:
+    """LUT forward:  (M, K) n-bit activation codes  x  (K, N) float weights.
+
+    a_codes: uint8 (M, K) with values in [0, 2^bits)
+    a_scale, a_zmin: (M, G) per-(row, region) affine params, G = K // group_size
+    Returns float32 (M, N) == dequantize(a) @ w  (up to float assoc.).
+    """
+    m, k = a_codes.shape
+    n = w.shape[1]
+    if k % group_size:
+        raise ValueError(f"K={k} not divisible by group_size={group_size}")
+    g = k // group_size
+    v = 1 << bits
+
+    codes = a_codes.reshape(m, g, group_size)
+    # one-hot: binary {0,1} matrix (m, g, V, R) -- the "table build" dataflow
+    onehot = (codes[:, :, None, :] == jnp.arange(v, dtype=codes.dtype)
+              [None, None, :, None]).astype(jnp.float32)
+    wg = w.astype(jnp.float32).reshape(g, group_size, n)
+    # T[m, g, v, n] = sum over region elements with code v of w   (adds only)
+    table = jnp.einsum("mgvr,grn->mgvn", onehot, wg)
+    # combine buckets:  sum_v v * T[v]   (shift-adds in the paper's counting)
+    vals = jnp.arange(v, dtype=jnp.float32)
+    code_dot = jnp.einsum("v,mgvn->mgn", vals, table)
+    # region affine:  s * code_dot + zmin * sum_j w_j    (1 mult per region)
+    wsum = wg.sum(axis=1)                                    # (g, n)
+    out = (a_scale[..., None] * code_dot
+           + a_zmin[..., None] * wsum[None]).sum(axis=1)     # reduce regions
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Op-count accounting (paper Table 3)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class OpCounts:
+    multiplies: int
+    adds: int
+
+    def __add__(self, other: "OpCounts") -> "OpCounts":
+        return OpCounts(self.multiplies + other.multiplies,
+                        self.adds + other.adds)
+
+
+def original_op_counts(macs: int) -> OpCounts:
+    """Conventional multiply-accumulate: one multiply + one add per MAC."""
+    return OpCounts(multiplies=macs, adds=macs)
+
+
+def lut_op_counts(macs: int, *, bits: int, region_size: int) -> OpCounts:
+    """Paper section V counting convention (reverse-engineered from Table 3).
+
+    Per local region of ``region_size`` MACs with ``bits``-bit activations:
+
+      * table build (bucket accumulation) is indexed table traffic, counted
+        as table writes -- NOT ALU adds (this is the paper's convention;
+        with it, Table 3's AlexNet row 666M->74M mult / 666M->222M add is
+        reproduced exactly for region_size=9, bits=2);
+      * bucket combine  sum_{v>0} v*T[v]  costs (2^bits - 1) adds (shifts
+        free);
+      * the region dequantization affine costs 1 multiply.
+
+    So   multiplies = n_regions,  adds = n_regions * (2^bits - 1).
+    """
+    n_regions = macs // region_size
+    return OpCounts(multiplies=n_regions,
+                    adds=n_regions * ((1 << bits) - 1))
+
+
+def reduction_summary(macs: int, *, bits: int, region_size: int) -> dict:
+    base = original_op_counts(macs)
+    lut = lut_op_counts(macs, bits=bits, region_size=region_size)
+    return {
+        "macs": macs,
+        "orig_mult": base.multiplies, "orig_add": base.adds,
+        "lut_mult": lut.multiplies, "lut_add": lut.adds,
+        "mult_reduction": base.multiplies / max(lut.multiplies, 1),
+        "add_reduction": base.adds / max(lut.adds, 1),
+    }

@@ -1,0 +1,66 @@
+"""Bit-packing of low-precision quantization codes into int8 lanes.
+
+TPU (like the paper's Edison CPU, section V.A) has no sub-8-bit ISA.  Codes
+are therefore *stored* packed -- 8 x 1-bit, 4 x 2-bit or 2 x 4-bit per uint8
+lane -- and unpacked in VMEM right before compute.  Packing is always along
+the **last** axis; callers move the group axis there first.
+
+6-bit codes (paper Table 2 includes a 6-bit column) do not tile a byte; they
+are stored one-per-lane (uint8) and only count as 6-bit for accuracy /
+bytes-accounting purposes (documented in DESIGN.md section 5).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Bit-widths that actually pack denser than one byte per code.
+PACKABLE_BITS = (1, 2, 4)
+SUPPORTED_BITS = (1, 2, 3, 4, 5, 6, 7, 8)
+
+
+def codes_per_byte(bits: int) -> int:
+    """How many codes share one uint8 lane."""
+    return 8 // bits if bits in PACKABLE_BITS else 1
+
+
+def packed_len(n_codes: int, bits: int) -> int:
+    per = codes_per_byte(bits)
+    if n_codes % per:
+        raise ValueError(f"last dim {n_codes} not divisible by {per} ({bits}-bit)")
+    return n_codes // per
+
+
+def pack(codes: jnp.ndarray, bits: int) -> jnp.ndarray:
+    """Pack integer codes (values in [0, 2^bits)) along the last axis.
+
+    codes: any integer dtype, shape (..., K) with K % codes_per_byte(bits) == 0.
+    Returns uint8 of shape (..., K // codes_per_byte(bits)).
+    """
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported bits={bits}")
+    if bits not in PACKABLE_BITS:
+        return codes.astype(jnp.uint8)
+    per = codes_per_byte(bits)
+    *lead, k = codes.shape
+    if k % per:
+        raise ValueError(f"last dim {k} not divisible by {per} ({bits}-bit)")
+    c = codes.reshape(*lead, k // per, per).astype(jnp.uint32)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    return (c << shifts).sum(axis=-1).astype(jnp.uint8)
+
+
+def unpack(packed: jnp.ndarray, bits: int, n_codes: int | None = None) -> jnp.ndarray:
+    """Inverse of :func:`pack`.  Returns uint8 codes shaped (..., n_codes)."""
+    if bits not in SUPPORTED_BITS:
+        raise ValueError(f"unsupported bits={bits}")
+    if bits not in PACKABLE_BITS:
+        return packed.astype(jnp.uint8)
+    per = codes_per_byte(bits)
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * bits)
+    mask = jnp.uint32((1 << bits) - 1)
+    vals = (packed[..., None].astype(jnp.uint32) >> shifts) & mask
+    *lead, kp, _ = vals.shape
+    out = vals.reshape(*lead, kp * per).astype(jnp.uint8)
+    if n_codes is not None:
+        out = out[..., :n_codes]
+    return out

@@ -1,0 +1,60 @@
+"""Quantization-aware training: straight-through-estimator fake quant.
+
+The paper is post-training quantization only; QAT is the natural substrate
+extension (training the model *through* the local-quantization-region
+rounding so low-bit deployment loses less accuracy).  The STE passes
+gradients through the round() as identity.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .quantize import fake_quant as _fake_quant
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def ste_fake_quant(x, bits: int, group_size: int, granularity: str,
+                   axis: int = -1):
+    return _fake_quant(x, bits, group_size=group_size,
+                       granularity=granularity, axis=axis)
+
+
+def _fwd(x, bits, group_size, granularity, axis):
+    return ste_fake_quant(x, bits, group_size, granularity, axis), None
+
+
+def _bwd(bits, group_size, granularity, axis, _res, g):
+    # straight-through: d(fake_quant)/dx ~= identity.  Min/max-derived affine
+    # ranges cover every element, so no clip mask is needed.
+    return (g,)
+
+
+ste_fake_quant.defvjp(_fwd, _bwd)
+
+
+def _gs_for(dim: int, group_size: int) -> int:
+    """Clamp the region to the axis (small layers) keeping divisibility."""
+    gs = min(group_size, dim)
+    while dim % gs:
+        gs -= 1
+    return gs
+
+
+def qat_dense_apply(w, x, cfg):
+    """Dense forward with fake-quantized weights (+ activations if cfg'd).
+
+    Both quantizers put regions along the contraction axis, so QAT sees
+    exactly the rounding the deployed packed kernel will apply.
+    """
+    if cfg.w_bits is not None:
+        # weights (K, N): regions along the contraction (first) axis
+        w = ste_fake_quant(w, cfg.w_bits, _gs_for(w.shape[0],
+                                                  cfg.group_size),
+                           cfg.granularity, 0)
+    if cfg.a_bits is not None:
+        x = ste_fake_quant(x, cfg.a_bits, _gs_for(x.shape[-1],
+                                                  cfg.group_size),
+                           cfg.granularity, -1)
+    return x @ w

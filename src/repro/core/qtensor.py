@@ -1,0 +1,65 @@
+"""QTensor: the packed local-quantization-region tensor format.
+
+A QTensor stores a floating-point array as
+
+  * ``packed``  -- uint8 bit-packed integer codes (see packing.py),
+  * ``scale``   -- per-region quantization step  s_lk  (paper eq. 7),
+  * ``zmin``    -- per-region minimum            x^lk_min,
+
+so that  x_hat = codes * scale + zmin  within every local region.
+
+Regions ("local quantization regions", paper section IV.C) are contiguous
+blocks of ``group_size`` elements along a single *group axis* (the matmul
+contraction axis for weights; the feature axis for activations).  The prior
+"dynamic fixed point" scheme (paper section IV.B) is the degenerate case of a
+single region spanning the whole tensor (``granularity='per_tensor'``).
+
+QTensor is a registered pytree so it flows through jit / pjit / scan / psum
+boundaries and can be stored directly inside model parameter pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("packed", "scale", "zmin"),
+         meta_fields=("bits", "group_size", "shape", "axis"))
+@dataclasses.dataclass(frozen=True)
+class QTensor:
+    packed: jnp.ndarray      # uint8, group axis moved last & bit-packed
+    scale: jnp.ndarray       # f32, region grid shape (see quantize.py)
+    zmin: jnp.ndarray        # f32, same shape as scale
+    bits: int                # static
+    group_size: int          # static; == size of the group axis for per_tensor
+    shape: tuple             # static: original float shape
+    axis: int                # static: group axis in the original shape
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def dtype(self):
+        return jnp.float32
+
+    def nbytes_ideal(self) -> int:
+        """Bytes at the *nominal* bit-width (6-bit counts 6 bits) + metadata."""
+        import numpy as np
+        n = int(np.prod(self.shape))
+        return (n * self.bits + 7) // 8 + self.scale.size * 4 + self.zmin.size * 4
+
+    def nbytes_stored(self) -> int:
+        return self.packed.size + self.scale.size * 4 + self.zmin.size * 4
+
+
+def num_groups(dim: int, group_size: int) -> int:
+    if dim % group_size:
+        raise ValueError(f"group axis {dim} not divisible by group_size {group_size}")
+    return dim // group_size

@@ -1,0 +1,120 @@
+"""Quantize / dequantize with local quantization regions (paper section IV).
+
+Two granularities:
+
+  * ``per_tensor``  -- the prior "dynamic fixed point" scheme (DQ, eq. 6):
+                       one (scale, zmin) for the whole tensor/layer.
+  * ``per_group``   -- the paper's local-based quantization (LQ, eq. 7):
+                       one (scale, zmin) per contiguous region of
+                       ``group_size`` elements along ``axis``.
+
+Both use the paper's asymmetric round-to-nearest affine map
+
+    s     = (x_max - x_min) / (2^n - 1)               (eq. 5)
+    Q(x)  = round((x - x_min) / s)                    (eq. 3)
+    x_hat = Q(x) * s + x_min
+
+Stochastic rounding is available for the QAT / gradient-compression paths.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import packing
+from .qtensor import QTensor
+
+
+def _affine_params(xmin, xmax, bits):
+    levels = (1 << bits) - 1
+    rng = xmax - xmin
+    scale = jnp.where(rng > 0, rng / levels, jnp.ones_like(rng))
+    return scale.astype(jnp.float32), xmin.astype(jnp.float32)
+
+
+def _round(x, stochastic, key):
+    if not stochastic:
+        return jnp.round(x)
+    noise = jax.random.uniform(key, x.shape, dtype=x.dtype) - 0.5
+    return jnp.round(x + noise)
+
+
+def quantize(x, bits: int, *, group_size: int | None = None, axis: int = -1,
+             granularity: str = "per_group", stochastic: bool = False,
+             key=None) -> QTensor:
+    """Quantize ``x`` into a :class:`QTensor`.
+
+    Layout contract: codes are stored with ``axis`` moved last (then packed);
+    ``scale``/``zmin`` have shape ``(*other_dims, n_groups)`` for per_group
+    and ``()`` for per_tensor.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    shape = tuple(x.shape)
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(x, axis, -1)
+    k = xm.shape[-1]
+    levels = (1 << bits) - 1
+
+    if granularity == "per_tensor":
+        group_size = k
+        scale, zmin = _affine_params(xm.min(), xm.max(), bits)
+        q = _round((xm - zmin) / scale, stochastic, key)
+    elif granularity == "per_group":
+        if group_size is None:
+            raise ValueError("per_group quantization needs group_size")
+        if k % group_size:
+            raise ValueError(f"axis dim {k} not divisible by group_size {group_size}")
+        g = xm.reshape(*xm.shape[:-1], k // group_size, group_size)
+        scale, zmin = _affine_params(g.min(-1), g.max(-1), bits)
+        q = _round((g - zmin[..., None]) / scale[..., None], stochastic, key)
+        q = q.reshape(*xm.shape)
+    else:
+        raise ValueError(f"unknown granularity {granularity!r}")
+
+    codes = jnp.clip(q, 0, levels).astype(jnp.uint8)
+    return QTensor(packed=packing.pack(codes, bits), scale=scale, zmin=zmin,
+                   bits=bits, group_size=group_size, shape=shape, axis=axis)
+
+
+def dequantize(qt: QTensor) -> jnp.ndarray:
+    """Reconstruct the float32 array from a :class:`QTensor`."""
+    axis = qt.axis
+    k = qt.shape[axis]
+    codes = packing.unpack(qt.packed, qt.bits, k).astype(jnp.float32)
+    if qt.scale.ndim == 0:  # per_tensor
+        xm = codes * qt.scale + qt.zmin
+    else:
+        g = codes.reshape(*codes.shape[:-1], k // qt.group_size, qt.group_size)
+        xm = (g * qt.scale[..., None] + qt.zmin[..., None]).reshape(*codes.shape)
+    return jnp.moveaxis(xm, -1, axis)
+
+
+def fake_quant(x, bits: int, *, group_size: int | None = None, axis: int = -1,
+               granularity: str = "per_group", stochastic: bool = False,
+               key=None) -> jnp.ndarray:
+    """quantize->dequantize without materializing packed codes (QAT path)."""
+    x = jnp.asarray(x)
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    axis = axis % x.ndim
+    xm = jnp.moveaxis(xf, axis, -1)
+    k = xm.shape[-1]
+    levels = (1 << bits) - 1
+    if granularity == "per_tensor":
+        scale, zmin = _affine_params(xm.min(), xm.max(), bits)
+        q = jnp.clip(_round((xm - zmin) / scale, stochastic, key), 0, levels)
+        out = q * scale + zmin
+    else:
+        if k % group_size:
+            raise ValueError(f"axis dim {k} not divisible by group_size {group_size}")
+        g = xm.reshape(*xm.shape[:-1], k // group_size, group_size)
+        scale, zmin = _affine_params(g.min(-1), g.max(-1), bits)
+        q = jnp.clip(_round((g - zmin[..., None]) / scale[..., None],
+                            stochastic, key), 0, levels)
+        out = (q * scale[..., None] + zmin[..., None]).reshape(*xm.shape)
+    return jnp.moveaxis(out, -1, axis).astype(dt)
+
+
+def quant_error(x, bits: int, **kw) -> jnp.ndarray:
+    """Elementwise quantization error e_Q(x) = x - x_hat (paper eq. 4)."""
+    return jnp.asarray(x, jnp.float32) - fake_quant(x, bits, **kw)

@@ -1,0 +1,2 @@
+from .synthetic import (SyntheticLM, SyntheticClassification, markov_batch,
+                        DataConfig)

@@ -1,0 +1,5 @@
+from .sharding import (ShardingRules, rules_for, tree_paths,
+                       batch_sharding, cache_sharding, param_shardings)
+from .checkpoint import CheckpointManager
+from .straggler import StragglerMonitor
+from . import elastic

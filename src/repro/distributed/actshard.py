@@ -1,0 +1,91 @@
+"""Logical activation-sharding constraints (MaxText-style axis rules).
+
+GSPMD propagates parameter shardings through the graph, but a few
+activation tensors need explicit pins or the partitioner picks replicated
+layouts — the worst offender being the (batch, seq, vocab) logits, which
+replicated cost ~34 GiB/device on the llama3.2-1b train cell (dry-run
+iteration 1, EXPERIMENTS.md §Perf).
+
+Model code annotates tensors with *logical* axis names::
+
+    x = constrain(x, "batch", "seq", "embed")
+    logits = constrain(logits, "batch", "seq", "vocab")
+
+and the launcher binds logical names to mesh axes for the active mesh::
+
+    with activation_rules({"batch": ("data",), "vocab": ("model",)}):
+        ...lower/compile/run...
+
+Outside a binding (tests, single-device examples) ``constrain`` is an
+exact no-op, so model code carries no mesh dependence.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_rules", default=None)
+
+
+@contextlib.contextmanager
+def activation_rules(rules: dict):
+    """Bind logical-axis -> mesh-axes (str | tuple | None) rules."""
+    token = _RULES.set(dict(rules))
+    try:
+        yield
+    finally:
+        _RULES.reset(token)
+
+
+def current_rules():
+    return _RULES.get()
+
+
+def constrain(x, *logical: str | None):
+    """Apply with_sharding_constraint per the bound rules (no-op unbound)."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"constrain: {len(logical)} axes for ndim {x.ndim}")
+    spec = P(*[rules.get(name) if name else None for name in logical])
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def default_rules(dp_axes, *, shard_seq: bool = False,
+                  kv_heads: int = 0) -> dict:
+    """Baseline logical bindings for the production meshes.
+
+    ``shard_seq=True`` additionally shards the sequence dim of the
+    residual stream over "model" (sequence parallelism — the activation-
+    memory lever for the 94-layer cells; §Perf).
+
+    ``kv_heads``: kept as an experiment knob but bound to None by
+    default — §Perf iteration 2 showed GSPMD already shards attention
+    evenly on the mixed (kv x group) head factorization; an explicit
+    kv-only constraint (uneven at kv < model extent) forced padded
+    reshards and cost +70% memory-term.  Refuted, recorded.
+    """
+    dp = tuple(dp_axes)
+    return {
+        "batch": dp,
+        "seq": "model" if shard_seq else None,
+        "embed": None,
+        "vocab": "model",
+        "heads": "model",
+        "kv_heads": None,
+        "kv_seq": None,
+        "ff": "model",
+        # MoE dispatch: three bindings were tried on the scout train cell
+        # (§Perf): unconstrained GSPMD / E-only / (E, capacity) 2-D.
+        # E-only cost 5x compute (capacity replicated over dp); 2-D fixed
+        # compute but inflated collectives 4x (gather/scatter across both
+        # axes).  Unconstrained wins the baseline; the shard_map all-to-all
+        # dispatch is the recorded follow-up.
+        "experts": None,
+        "flat_tokens": None,
+    }

@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpoint manager.
+
+Layout (one directory per step)::
+
+    <root>/step_00001200/
+        manifest.json        tree structure, shapes, dtypes, crc32 per leaf
+        leaf_00000.npy ...   one .npy per leaf (host-gathered)
+    <root>/step_00001200.COMMIT   empty marker, written LAST (atomic commit)
+
+Guarantees:
+
+  * **atomicity** — data is written into ``<dir>.tmp`` then os.rename'd;
+    the COMMIT marker is created only after a full fsync'd write, so a
+    preemption mid-write leaves either a previous complete checkpoint or
+    an uncommitted .tmp that restore ignores;
+  * **corruption detection** — restore verifies per-leaf crc32 against the
+    manifest and skips (with a warning) to the next older checkpoint;
+  * **retention** — ``keep`` newest committed checkpoints are retained;
+  * **resume** — ``restore_latest`` returns (step, tree) or None, so the
+    Trainer auto-resumes after node failure / preemption.
+
+Arrays are gathered to host before save (multi-host note: on a real pod
+each host writes its addressable shards; here process count is 1 and the
+full array is written — the manifest format carries ``shard`` metadata so
+the layout extends to per-host sharded writes unchanged).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import zlib
+
+import jax
+import numpy as np
+
+
+class CheckpointManager:
+    def __init__(self, root: str, *, keep: int = 3):
+        self.root = root
+        self.keep = keep
+        os.makedirs(root, exist_ok=True)
+
+    # -- paths ------------------------------------------------------------
+    def _dir(self, step: int) -> str:
+        return os.path.join(self.root, f"step_{step:08d}")
+
+    def _commit_marker(self, step: int) -> str:
+        return self._dir(step) + ".COMMIT"
+
+    def committed_steps(self) -> list:
+        steps = []
+        for name in os.listdir(self.root):
+            if name.startswith("step_") and name.endswith(".COMMIT"):
+                steps.append(int(name[len("step_"):-len(".COMMIT")]))
+        return sorted(steps)
+
+    # -- save -------------------------------------------------------------
+    def save(self, step: int, tree) -> str:
+        final = self._dir(step)
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        from .sharding import _key_str
+        manifest = {"step": step, "treedef": str(treedef), "leaves": []}
+        for i, (kp, leaf) in enumerate(flat):
+            path = "/".join(_key_str(k) for k in kp)
+            arr = np.asarray(jax.device_get(leaf))
+            fname = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"].append({
+                "index": i, "path": path, "file": fname,
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "crc32": zlib.crc32(arr.tobytes()),
+                "shard": {"process": 0, "n_processes": 1},
+            })
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                     # atomic on POSIX
+        with open(self._commit_marker(step), "w") as f:
+            f.flush()
+            os.fsync(f.fileno())
+        self._gc()
+        return final
+
+    def _gc(self):
+        steps = self.committed_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+            try:
+                os.remove(self._commit_marker(s))
+            except FileNotFoundError:
+                pass
+
+    # -- restore ----------------------------------------------------------
+    def _load(self, step: int, like):
+        d = self._dir(step)
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        flat, treedef = jax.tree_util.tree_flatten(like)
+        if len(flat) != len(manifest["leaves"]):
+            raise ValueError(
+                f"checkpoint step {step}: leaf count mismatch "
+                f"({len(manifest['leaves'])} saved vs {len(flat)} expected)")
+        leaves = []
+        for entry in manifest["leaves"]:
+            arr = np.load(os.path.join(d, entry["file"]))
+            if zlib.crc32(arr.tobytes()) != entry["crc32"]:
+                raise IOError(f"crc mismatch in {entry['file']} "
+                              f"(step {step}, path {entry['path']})")
+            leaves.append(arr)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore(self, step: int, like):
+        """Restore one step, validating crc32.  Raises on corruption."""
+        return self._load(step, like)
+
+    def restore_latest(self, like, *, verbose: bool = True):
+        """Newest uncorrupted committed checkpoint, or None.
+
+        Walks newest -> oldest; a corrupt/partial checkpoint is skipped
+        (node died mid-write) and the previous one is used instead.
+        """
+        for step in reversed(self.committed_steps()):
+            try:
+                tree = self._load(step, like)
+                return step, tree
+            except Exception as e:                      # corrupt -> skip
+                if verbose:
+                    print(f"[ckpt] step {step} unusable ({e}); "
+                          f"trying previous")
+        return None

@@ -1,0 +1,68 @@
+"""Elastic re-meshing: resume a checkpoint on a different device count.
+
+Scenario: a pod loses N hosts (or gains capacity back).  The job restarts
+with a different ``data`` extent; parameters and optimizer state restored
+from the checkpoint must be re-laid-out for the new mesh.
+
+Because checkpoints store *logical* (unsharded) arrays (manifest carries
+the shard metadata) and shardings are derived from path rules — not baked
+into the data — resharding is just: build the new mesh, re-derive
+NamedShardings from the same rules, and ``jax.device_put`` each restored
+leaf.  This file packages that flow and the degraded-batch policy.
+
+``plan_remesh`` chooses the largest data extent <= healthy device count
+that keeps the model axis intact and divides the global batch, so training
+continues at reduced throughput rather than halting (the global batch is
+kept constant by raising grad-accumulation microsteps).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+from jax.sharding import Mesh
+
+from .sharding import ShardingRules
+
+
+@dataclasses.dataclass(frozen=True)
+class RemeshPlan:
+    mesh_shape: tuple            # new (data, model) or (pod, data, model)
+    axis_names: tuple
+    microsteps: int              # grad-accumulation factor to keep GBS
+
+
+def plan_remesh(healthy_devices: int, *, model_extent: int,
+                global_batch: int, prev_data_extent: int,
+                pod_extent: int = 1) -> RemeshPlan:
+    """Largest data extent that fits healthy devices & divides the batch."""
+    if healthy_devices < model_extent:
+        raise ValueError(f"cannot keep model axis: {healthy_devices} "
+                         f"devices < model extent {model_extent}")
+    max_data = healthy_devices // (model_extent * pod_extent)
+    data = 1
+    for d in range(max_data, 0, -1):
+        if global_batch % d == 0:
+            data = d
+            break
+    microsteps = max(1, prev_data_extent // data)
+    if pod_extent > 1:
+        return RemeshPlan((pod_extent, data, model_extent),
+                          ("pod", "data", "model"), microsteps)
+    return RemeshPlan((data, model_extent), ("data", "model"), microsteps)
+
+
+def build_mesh(plan: RemeshPlan, devices=None) -> Mesh:
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()
+    n = 1
+    for s in plan.mesh_shape:
+        n *= s
+    grid = np.asarray(devices[:n]).reshape(plan.mesh_shape)
+    return Mesh(grid, plan.axis_names)
+
+
+def reshard(tree, mesh: Mesh, rules: ShardingRules):
+    """Lay restored host arrays out on the new mesh per the same rules."""
+    shardings = rules.shardings(tree, mesh)
+    return jax.tree.map(jax.device_put, tree, shardings)

@@ -1,0 +1,220 @@
+"""Path-regex -> PartitionSpec sharding rules (MaxText-style).
+
+Parallelism map (DESIGN.md §6), on mesh axes ``(pod?, data, model)``:
+
+  * DP / FSDP over ``dp = ("pod", "data")`` — batch over dp; parameters'
+    non-TP dimension is *also* sharded over dp (ZeRO-3 style), which is what
+    lets 235B-class models fit 16 GB HBM chips (params, grads and optimizer
+    moments all inherit the spec).
+  * TP over ``"model"`` — attention q/k/v column-parallel, output
+    row-parallel; FFN in column-, out row-parallel; vocab/embedding sharded
+    on the vocab dim; MoE experts sharded over ``"model"`` (EP).
+  * SP — long-sequence KV caches shard the *sequence* dim.
+
+Rules match "/"-joined tree paths with ``re.search``; the FIRST hit wins.
+A rule's spec applies to the TRAILING dims of the leaf: scan-stacked params
+(S, ...) / stacked experts (S, E, K, N) get ``None`` (replicated) padding on
+the leading dims automatically, so one rule covers both flat and stacked
+layouts.  Leaves with no matching rule are replicated.
+
+GSPMD propagates everything else; the jit boundary pins params/opt-state,
+batch and cache shardings only.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# ---------------------------------------------------------------------------
+# tree path utilities
+# ---------------------------------------------------------------------------
+
+def _key_str(k) -> str:
+    if isinstance(k, jax.tree_util.DictKey):
+        return str(k.key)
+    if isinstance(k, jax.tree_util.SequenceKey):
+        return str(k.idx)
+    if isinstance(k, jax.tree_util.GetAttrKey):
+        return str(k.name)
+    return str(k)
+
+
+def tree_paths(tree):
+    """Pytree of '/'-joined path strings, mirroring ``tree``'s structure."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(_key_str(k) for k in kp) for kp, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, paths)
+
+
+# ---------------------------------------------------------------------------
+# rules
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    rules: tuple                 # ((regex, PartitionSpec), ...) first match
+    dp: tuple                    # data-parallel mesh axes, e.g. ("data",)
+
+    def spec_for(self, path: str, ndim: int) -> P:
+        for pattern, spec in self.rules:
+            if re.search(pattern, path):
+                return _pad_spec(spec, ndim)
+        return P()
+
+    def shardings(self, tree, mesh: Mesh):
+        """NamedSharding pytree for ``tree`` (arrays or ShapeDtypeStructs).
+
+        jit *argument* shardings must divide the dim exactly (uneven
+        shardings are only legal on intermediates), so any spec entry
+        that does not divide its dim is dropped to replicated — e.g.
+        mamba2's in_proj N=3352 on a 16-way model axis.
+        """
+        paths = tree_paths(tree)
+        return jax.tree.map(
+            lambda p, x: NamedSharding(
+                mesh, _evenly(self.spec_for(p, x.ndim), x.shape, mesh)),
+            paths, tree)
+
+
+def _pad_spec(spec: P, ndim: int) -> P:
+    """Left-pad ``spec`` with None so it applies to the trailing dims."""
+    if len(spec) > ndim:
+        # leaf smaller than rule (e.g. biases matched broadly): replicate
+        return P()
+    return P(*([None] * (ndim - len(spec)) + list(spec)))
+
+
+def _axis_extent(mesh: Mesh, entry) -> int:
+    names = entry if isinstance(entry, (tuple, list)) else (entry,)
+    n = 1
+    for name in names:
+        n *= mesh.shape[name]
+    return n
+
+
+def _evenly(spec: P, shape: tuple, mesh: Mesh) -> P:
+    """Drop spec entries that do not divide their dimension."""
+    out = []
+    for dim, entry in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if entry is not None and dim % _axis_extent(mesh, entry) != 0:
+            entry = None
+        out.append(entry)
+    return P(*out)
+
+
+def rules_for(dp, *, family: str = "dense") -> ShardingRules:
+    """Parameter sharding rules for one model family.
+
+    ``dp``: tuple of data-parallel axis names — ("data",) single-pod,
+    ("pod", "data") multi-pod.
+    """
+    fsdp = dp if len(dp) == 1 else tuple(dp)
+    # Quantized (QWeight) leaves append /packed /scale /zmin to the weight
+    # path; all three share the float weight's (K-ish, N) layout, so the
+    # same trailing spec applies — ``Q`` makes a rule cover both.
+    Q = r"(/(packed|scale|zmin))?$"
+    rules = [
+        # --- embeddings / readout: vocab dim over model (TP), fsdp over dp
+        (r"embed/table$", P("model", fsdp)),
+        (r"lm_head/w" + Q, P(fsdp, "model")),
+        (r"(^|/)pos/pos$", P(None, "model")),
+        (r"enc_pos/pos$", P(None, "model")),
+        # --- MoE (EP): experts over model, fsdp on the contraction dim
+        (r"router/w$", P(fsdp, None)),
+        (r"ffn/(wi_gate|wi_up)" + Q, P("model", fsdp, None)),
+        (r"ffn/wo" + Q, P("model", None, fsdp)),
+        # --- shared expert / dense FFN: column-parallel in, row-parallel out
+        (r"(shared|ffn)/(wi_gate|wi_up|wi)/w" + Q, P(fsdp, "model")),
+        (r"(shared|ffn)/wo/w" + Q, P("model", fsdp)),
+        # --- attention: q/k/v column-parallel, o row-parallel
+        (r"(mixer|cross)/(wq|wk|wv)/w" + Q, P(fsdp, "model")),
+        (r"(mixer|cross)/wo/w" + Q, P("model", fsdp)),
+        (r"(wq|wk|wv)/b$", P("model")),
+        # --- mamba2 / rglru projections
+        (r"mixer/in_proj/w" + Q, P(fsdp, "model")),
+        (r"mixer/out_proj/w" + Q, P("model", fsdp)),
+        (r"mixer/(in_x|in_gate)/w" + Q, P(fsdp, "model")),
+        (r"mixer/(w_a|w_x)/w" + Q, P(fsdp, "model")),
+        (r"mixer/out/w" + Q, P("model", fsdp)),
+        (r"mixer/conv_w$", P(None, "model")),
+        (r"mixer/conv_b$", P("model")),
+        (r"mixer/Lambda$", P("model")),
+        # --- frontend stub projection
+        (r"frontend/w$", P(None, "model")),
+        # norms / scalars / everything else: replicated (matched by default)
+    ]
+    return ShardingRules(rules=tuple(rules), dp=tuple(dp))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def batch_sharding(batch, mesh: Mesh, dp) -> dict:
+    """Input batch: leading (global batch) dim over the dp axes."""
+    def spec(x):
+        return NamedSharding(mesh, _evenly(
+            P(tuple(dp), *([None] * (x.ndim - 1))), x.shape, mesh))
+    return jax.tree.map(spec, batch)
+
+
+#: cache leaf name -> (base ndim without stack dims, dim roles)
+#: roles: 'b' batch, 's' kv-sequence, 'f' feature (TP-shardable), '-' none
+_CACHE_LEAVES = {
+    "k": (4, "bs--"),        # (B, S_kv, KV_heads, head_dim)
+    "v": (4, "bs--"),
+    "conv": (3, "b-f"),      # (B, K-1, conv_dim)
+    "ssm": (4, "bf--"),      # (B, H, P, N)
+    "h": (2, "bf"),          # (B, W)
+}
+
+
+def cache_sharding(cache, mesh: Mesh, dp, *, batch_size: int,
+                   seq_axis_over_model: bool = True):
+    """Decode-cache sharding, resolved per leaf *name* (path tail).
+
+    Baseline: batch over dp; the KV *sequence* dim over "model" (SP —
+    robust for any kv-head count); SSM/LRU state features over "model".
+    When ``batch_size == 1`` (the long-context cell) batch can't shard:
+    the KV sequence dim shards over (dp + model) instead and states
+    replicate on batch.
+    """
+    dp = tuple(dp)
+    paths = tree_paths(cache)
+
+    def spec(path, x):
+        parts = path.rsplit("/", 2)
+        name = parts[-1]
+        if name in ("packed", "scale", "zmin") and len(parts) >= 2:
+            # LQ-quantized cache leaf: inherits the parent tensor's roles
+            # (packed/scale/zmin all keep the (B, S, ..) leading layout)
+            name = parts[-2]
+        if name not in _CACHE_LEAVES:
+            return NamedSharding(mesh, P())          # e.g. 'pos' scalar
+        base_nd, roles = _CACHE_LEAVES[name]
+        lead = [None] * (x.ndim - base_nd)
+        dims = []
+        for role in roles:
+            if role == "b":
+                dims.append(dp if batch_size > 1 else None)
+            elif role == "s":
+                if batch_size == 1:
+                    dims.append((*dp, "model") if seq_axis_over_model
+                                else dp)
+                else:
+                    dims.append("model" if seq_axis_over_model else None)
+            elif role == "f":
+                dims.append("model")
+            else:
+                dims.append(None)
+        return NamedSharding(mesh, _evenly(P(*lead, *dims), x.shape, mesh))
+
+    return jax.tree.map(spec, paths, cache)
+
+
+def param_shardings(abstract_params, mesh: Mesh, rules: ShardingRules):
+    return rules.shardings(abstract_params, mesh)

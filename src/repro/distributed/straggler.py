@@ -1,0 +1,81 @@
+"""Straggler detection: per-step wall-time EMA + z-score flagging.
+
+At thousand-node scale the slowest worker sets the step time; persistent
+stragglers (bad HBM, thermal throttle, flaky NIC) must be detected and
+acted on.  The monitor keeps an EMA of step wall-time and the EMA of its
+variance; a step (or, fed per-replica durations, a replica) whose duration
+z-score exceeds ``threshold`` for ``patience`` consecutive observations
+fires the configured policy hook.
+
+Policies are injected callables — ``log`` (default), or e.g. a drop-slowest
+hook that triggers the elastic re-mesh (distributed/elastic.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    alpha: float = 0.9            # EMA decay
+    threshold: float = 3.0        # z-score to flag
+    patience: int = 3             # consecutive flags before firing
+    warmup: int = 5               # observations before flagging starts
+    on_straggler: object = None   # callable(name, duration, zscore)
+
+    def __post_init__(self):
+        self._mean = {}
+        self._var = {}
+        self._count = {}
+        self._strikes = {}
+        self._t0 = None
+        self.events = []
+
+    # -- timing convenience ------------------------------------------------
+    def start(self):
+        self._t0 = time.perf_counter()
+
+    def stop(self, name: str = "step") -> float:
+        dt = time.perf_counter() - self._t0
+        self.observe(name, dt)
+        return dt
+
+    # -- core --------------------------------------------------------------
+    def observe(self, name: str, duration: float) -> bool:
+        """Feed one duration; returns True if ``name`` is flagged."""
+        m = self._mean.get(name, duration)
+        v = self._var.get(name, 0.0)
+        c = self._count.get(name, 0)
+        z = 0.0
+        if c >= self.warmup:
+            # floor the std at 1% of the mean: perfectly steady histories
+            # (v ~ 0) must still flag a 5x-slower step
+            std = max(v ** 0.5, 0.01 * abs(m), 1e-9)
+            z = (duration - m) / std
+        if z > self.threshold:
+            # robust update: outliers do NOT pollute the EMA (otherwise a
+            # single slow step inflates the variance enough to mask the
+            # next one and a 2-strike policy never fires)
+            self._strikes[name] = self._strikes.get(name, 0) + 1
+        else:
+            self._strikes[name] = 0
+            self._mean[name] = self.alpha * m + (1 - self.alpha) * duration
+            self._var[name] = self.alpha * v + (1 - self.alpha) \
+                * (duration - m) ** 2
+        self._count[name] = c + 1
+
+        flagged = self._strikes.get(name, 0) >= self.patience
+        if flagged:
+            self.events.append((name, duration, z))
+            if self.on_straggler is not None:
+                self.on_straggler(name, duration, z)
+            else:
+                print(f"[straggler] {name}: {duration * 1e3:.1f} ms "
+                      f"(z={z:.1f})")
+            self._strikes[name] = 0
+        return flagged
+
+    def stats(self, name: str = "step") -> dict:
+        return {"mean_s": self._mean.get(name), "var": self._var.get(name),
+                "count": self._count.get(name, 0)}

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  quant_matmul  fused unpack+dequant+matmul over packed LQ weights
+  act_quant     fused runtime per-region activation quantization
+  lut_matmul    paper section-V look-up-table scheme (one-hot partial sums)
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds the public
+jit'd wrappers with backend selection (pallas / interpret / ref).
+"""
+from . import ops, ref
+from .ops import (QWeight, quantize_weight, dequantize_weight, quant_matmul,
+                  act_quant, lut_matmul, quant_dense)
+
+__all__ = ["ops", "ref", "QWeight", "quantize_weight", "dequantize_weight",
+           "quant_matmul", "act_quant", "lut_matmul", "quant_dense"]

@@ -1,0 +1,135 @@
+"""Fused dequantize-matmul Pallas TPU kernel.
+
+Computes  ``x @ dequant(W)``  where W is stored as packed low-bit codes with
+per-local-region affine params (paper section IV.C) -- the TPU deployment of
+the paper's scheme (DESIGN.md section 5.1):
+
+  * HBM->VMEM traffic moves the *packed* codes (bits/8 bytes per weight plus
+    per-region scale/zmin), which is where the speedup lives on TPU: decode /
+    small-batch GEMM is memory-bound, so bytes ~ bits/16 of bf16 is a direct
+    roofline win.
+  * Codes are unpacked and dequantized **in VMEM, per block, right before
+    the MXU dot** -- never materialized in HBM.
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary") with an f32 VMEM
+accumulator; bk is a multiple of the local-region (group) size so each block
+sees whole regions.
+
+Block shapes:
+  x      (bm, bk)            float32 / bfloat16
+  packed (bk // cpb, bn)     uint8, codes packed along K
+  scale  (bk // gs, bn)      f32
+  zmin   (bk // gs, bn)      f32
+  out    (bm, bn)            same dtype as x
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import packing
+
+
+def _unpack_block(packed, bits: int, bk: int):
+    """uint8 (bk/cpb, bn) -> int-code f32 (bk, bn), codes packed along axis 0."""
+    if bits not in packing.PACKABLE_BITS:
+        return packed.astype(jnp.float32)
+    cpb = packing.codes_per_byte(bits)
+    mask = (1 << bits) - 1
+    p = packed.astype(jnp.int32)                       # (bk/cpb, bn)
+    shifts = jnp.arange(cpb, dtype=jnp.int32) * bits   # code i at bit i*bits
+    vals = (p[:, None, :] >> shifts[None, :, None]) & mask  # (bk/cpb, cpb, bn)
+    return vals.reshape(bk, -1).astype(jnp.float32)
+
+
+def _kernel(x_ref, p_ref, s_ref, z_ref, o_ref, acc_ref, *,
+            bits: int, group_size: int, bk: int, k_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = _unpack_block(p_ref[...], bits, bk)            # (bk, bn) f32
+    g = bk // group_size
+    s = s_ref[...]                                         # (g, bn)
+    z = z_ref[...]
+    w = (codes.reshape(g, group_size, -1) * s[:, None, :]
+         + z[:, None, :]).reshape(bk, -1)                  # dequant in VMEM
+    acc_ref[...] += jax.lax.dot_general(
+        x_ref[...], w.astype(x_ref.dtype),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _pick_bk(k: int, group_size: int, target: int = 512) -> int:
+    """Largest multiple of group_size that divides K and is <= target."""
+    g = k // group_size
+    best = group_size
+    for mult in range(1, g + 1):
+        bk = group_size * mult
+        if bk > target:
+            break
+        if g % mult == 0:
+            best = bk
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "bits", "group_size", "bm", "bn", "bk", "interpret"))
+def quant_matmul(x, packed, scale, zmin, *, bits: int, group_size: int,
+                 bm: int = 128, bn: int = 128, bk: int | None = None,
+                 interpret: bool = False):
+    """x (M, K) @ dequant(packed/scale/zmin) (K, N) -> (M, N).
+
+    M, N need not be tile-aligned (padded here); K must be divisible by the
+    chosen bk (a multiple of group_size).
+    """
+    m, k = x.shape
+    cpb = packing.codes_per_byte(bits)
+    n = packed.shape[1]
+    if bk is None:
+        bk = _pick_bk(k, group_size)
+    if k % bk or bk % group_size:
+        raise ValueError(f"K={k} bk={bk} group_size={group_size} misaligned")
+
+    bm = min(bm, _round_up(m, 8))
+    bn = min(bn, _round_up(n, 128))
+    mp, np_ = _round_up(m, bm), _round_up(n, bn)
+    x_p = jnp.pad(x, ((0, mp - m), (0, 0))) if mp != m else x
+    if np_ != n:
+        packed = jnp.pad(packed, ((0, 0), (0, np_ - n)))
+        scale = jnp.pad(scale, ((0, 0), (0, np_ - n)))
+        zmin = jnp.pad(zmin, ((0, 0), (0, np_ - n)))
+
+    k_steps = k // bk
+    grid = (mp // bm, np_ // bn, k_steps)
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group_size=group_size,
+                          bk=bk, k_steps=k_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk // cpb, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk // group_size, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name=f"quant_matmul_b{bits}g{group_size}",
+    )(x_p, packed, scale, zmin)
+    return out[:m, :n]
+
+
+def _round_up(v: int, mult: int) -> int:
+    return -(-v // mult) * mult

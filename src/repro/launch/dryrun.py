@@ -1,0 +1,303 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST stay first — jax locks the device count at first
+init, and the production meshes need 512 placeholder host devices.  Do not
+import this module from tests/benches (they must see 1 device); it is a
+__main__ driver and is exercised in CI via a subprocess.
+
+Per cell:
+    with mesh:
+        lowered  = jax.jit(step_fn, in_shardings=..., out_shardings=...) \
+                       .lower(*abstract_inputs)
+        compiled = lowered.compile()
+        print(compiled.memory_analysis())     # proves it fits
+        print(compiled.cost_analysis())       # FLOPs/bytes for roofline
+
+Outputs one JSON per cell under experiments/dryrun/ with the roofline
+terms (repro.roofline), memory stats and the collective schedule summary
+— EXPERIMENTS.md §Dry-run / §Roofline are generated from these artifacts.
+
+Usage:
+    python -m repro.launch.dryrun --arch llama3.2-1b --shape train_4k
+    python -m repro.launch.dryrun --all [--mesh single|multi|both]
+    python -m repro.launch.dryrun --all --quant lq4w   # packed-weight serve
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs import shapes as shp
+from repro.distributed import sharding
+from repro.distributed.actshard import activation_rules, default_rules
+from repro.launch import mesh as meshlib
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import QuantPolicy, NO_QUANT
+from repro.roofline import roofline_from_compiled
+from repro.train import TrainHParams, make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# grad-accumulation microsteps for the train cells whose activations would
+# otherwise exceed HBM (the 235B/109B MoE giants) — §Perf iterates these.
+TRAIN_MICROSTEPS = {
+    "qwen3-moe-235b-a22b": 8,
+    "llama4-scout-17b-a16e": 4,
+    "qwen3-14b": 2,
+    "qwen3-8b": 2,
+}
+
+# (arch, kind) cells that additionally shard the residual-stream sequence
+# dim over "model" (sequence parallelism) — §Perf iterations fill this.
+SEQ_SHARD: dict = {}
+
+# Named perf variants (§Perf hillclimb): "hp" overrides the train
+# hyperparameters; "act" overrides the logical activation-sharding rules.
+VARIANTS = {
+    "": {},
+    "mp": {"hp": {"param_dtype": "bfloat16"}},  # bf16 params, fp32 master
+    "mp_gc8": {"hp": {"param_dtype": "bfloat16",
+                      "grad_compress_bits": 8}},
+    # 2-D sharded MoE dispatch buffers: experts over EP, capacity over dp
+    "moe2d": {"act": {"experts": "model", "flat_tokens": "__dp__"}},
+    "mp_moe2d": {"hp": {"param_dtype": "bfloat16"},
+                 "act": {"experts": "model", "flat_tokens": "__dp__"}},
+    # sequence-parallel residual stream (94-layer activation-memory lever)
+    "seqp": {"act": {"seq": "model"}},
+    # shard_map EP dispatch: tokens stay dp-local; one psum combines
+    "moesm": {"act": {"moe_shard_map": True}},
+    "mp_moesm": {"hp": {"param_dtype": "bfloat16"},
+                 "act": {"moe_shard_map": True}},
+}
+
+
+def model_flops(cfg: ModelConfig, cell: shp.ShapeCell) -> float:
+    """6*N*D (dense) / 6*N_active*D (MoE); D = tokens processed globally.
+
+    Train counts fwd+bwd (6x); prefill counts forward only (2x); decode
+    processes global_batch tokens (one step) at 2x.
+    """
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        return 6.0 * n * cell.seq_len * cell.global_batch
+    if cell.kind == "prefill":
+        return 2.0 * n * cell.seq_len * cell.global_batch
+    return 2.0 * n * cell.global_batch
+
+
+def _abstract(fn, *args):
+    return jax.eval_shape(fn, *args)
+
+
+def build_cell(cfg: ModelConfig, cell: shp.ShapeCell, mesh, rules,
+               policy: QuantPolicy, quant_scheme: str | None,
+               hp_overrides: dict | None = None, kv_bits: int | None = None):
+    """Returns (step_fn, in_shardings, out_shardings, abstract_args,
+    donate)."""
+    dp = rules.dp
+
+    def abstract_params():
+        p = _abstract(lambda: transformer.init_params(cfg, jax.random.key(0)))
+        if quant_scheme is not None:
+            from repro.core import schemes
+            p = _abstract(lambda pp: transformer.quantize_params(
+                pp, cfg, schemes.get(quant_scheme)), p)
+        return p
+
+    if cell.kind == "train":
+        hp = TrainHParams(microsteps=TRAIN_MICROSTEPS.get(cfg.name, 1),
+                          **((hp_overrides or {}).get("hp", {})))
+        init_state, train_step = make_train_step(cfg, hp, policy)
+        state = _abstract(init_state, jax.random.key(0))
+        batch = shp.train_specs(cfg, cell.seq_len, cell.global_batch)
+        state_sh = rules.shardings(state, mesh)
+        batch_sh = sharding.batch_sharding(batch, mesh, dp)
+        return (train_step, (state_sh, batch_sh), (state_sh, None),
+                (state, batch), (0,))
+
+    params = abstract_params()
+    params_sh = rules.shardings(params, mesh)
+
+    if cell.kind == "prefill":
+        batch = shp.prefill_specs(cfg, cell.seq_len, cell.global_batch)
+        cache = shp.cache_specs(cfg, cell.global_batch, cell.seq_len)
+        batch_sh = sharding.batch_sharding(batch, mesh, dp)
+        cache_sh = sharding.cache_sharding(cache, mesh, dp,
+                                           batch_size=cell.global_batch)
+
+        def prefill_step(p, b, c):
+            return transformer.prefill(p, cfg, b, c, policy=policy)
+
+        return (prefill_step, (params_sh, batch_sh, cache_sh),
+                (None, cache_sh), (params, batch, cache), (2,))
+
+    # decode
+    if kv_bits is not None:
+        cache = jax.eval_shape(lambda: transformer.init_cache(
+            cfg, cell.global_batch, cell.seq_len, kv_quant=(kv_bits, 64)))
+        tokens = jax.ShapeDtypeStruct((cell.global_batch, 1), jnp.int32)
+    else:
+        specs = shp.decode_specs(cfg, cell.seq_len, cell.global_batch)
+        tokens, cache = specs["tokens"], specs["cache"]
+    tok_sh = sharding.batch_sharding(
+        tokens, mesh, dp) if cell.global_batch > 1 else \
+        jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    cache_sh = sharding.cache_sharding(cache, mesh, dp,
+                                       batch_size=cell.global_batch)
+
+    def serve_step(p, t, c):
+        return transformer.decode_step(p, cfg, t, c, policy=policy)
+
+    return (serve_step, (params_sh, tok_sh, cache_sh), (None, cache_sh),
+            (params, tokens, cache), (2,))
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             quant_scheme: str | None = None, save: bool = True,
+             verbose: bool = True, variant: str = "",
+             kv_bits: int | None = None) -> dict:
+    cfg = configs.get(arch)
+    cell = shp.SHAPES[shape]
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    tag = f"{arch}_{shape}_{mesh_name}" + \
+        (f"_{quant_scheme}" if quant_scheme else "") + \
+        (f"_kv{kv_bits}" if kv_bits else "") + \
+        (f"_{variant}" if variant else "")
+
+    ok, why = shp.cell_supported(arch, shape)
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped", "reason": why}
+        if save:
+            _save(tag, rec)
+        return rec
+
+    mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    rules = sharding.rules_for(meshlib.dp_axes(mesh), family=cfg.family)
+    policy = (QuantPolicy.serve(quant_scheme, backend="ref")
+              if quant_scheme else NO_QUANT)
+
+    t0 = time.time()
+    step_fn, in_sh, out_sh, args, donate = build_cell(
+        cfg, cell, mesh, rules, policy, quant_scheme,
+        hp_overrides=VARIANTS[variant], kv_bits=kv_bits)
+    act_rules = default_rules(meshlib.dp_axes(mesh),
+                              shard_seq=SEQ_SHARD.get((cfg.name, cell.kind),
+                                                      False),
+                              kv_heads=cfg.n_kv_heads)
+    for k, v in VARIANTS[variant].get("act", {}).items():
+        act_rules[k] = (tuple(meshlib.dp_axes(mesh)) if v == "__dp__"
+                        else v)
+    if act_rules.get("moe_shard_map"):
+        act_rules["__mesh__"] = mesh
+    with mesh, activation_rules(act_rules):
+        jitted = jax.jit(step_fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    ma = compiled.memory_analysis()
+    rep = roofline_from_compiled(
+        compiled, arch=arch, shape=shape, mesh_name=mesh_name,
+        chips=mesh.devices.size, model_flops=model_flops(cfg, cell))
+    rec = rep.to_dict()
+    rec.update(
+        status="ok", quant=quant_scheme, variant=variant, kv_bits=kv_bits,
+        lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+        memory={
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "per_chip_total": int(ma.argument_size_in_bytes
+                                  + ma.output_size_in_bytes
+                                  + ma.temp_size_in_bytes
+                                  - ma.alias_size_in_bytes),
+        })
+    if verbose:
+        m = rec["memory"]
+        print(f"[dryrun] {tag}: OK  "
+              f"args {m['argument_bytes'] / 2 ** 30:.2f} GiB  "
+              f"temp {m['temp_bytes'] / 2 ** 30:.2f} GiB  "
+              f"compute {rec['compute_s'] * 1e3:.1f} ms  "
+              f"memory {rec['memory_s'] * 1e3:.1f} ms  "
+              f"collective {rec['collective_s'] * 1e3:.1f} ms  "
+              f"-> {rec['dominant']}-bound  "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)",
+              flush=True)
+    if save:
+        _save(tag, rec)
+    return rec
+
+
+def _save(tag: str, rec: dict):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(configs.names()))
+    ap.add_argument("--shape", choices=list(shp.SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--quant", default=None,
+                    help="weight scheme for serve cells (e.g. lq4w)")
+    ap.add_argument("--kv-bits", type=int, default=None,
+                    help="LQ-quantized KV cache for decode cells")
+    ap.add_argument("--variant", default="", choices=list(VARIANTS),
+                    help="perf variant for train cells (e.g. mp)")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape else
+             [(a, s) for a in configs.names() for s in shp.SHAPES])
+    if not args.all and not (args.arch and args.shape):
+        ap.error("need --arch/--shape or --all")
+
+    failures = []
+    for arch, shape in cells:
+        for multi in meshes:
+            mesh_name = "2x16x16" if multi else "16x16"
+            tag = f"{arch}_{shape}_{mesh_name}" + \
+                (f"_{args.quant}" if args.quant else "")
+            if args.skip_existing and \
+                    os.path.exists(os.path.join(OUT_DIR, tag + ".json")):
+                print(f"[dryrun] {tag}: exists, skipping", flush=True)
+                continue
+            quant = args.quant if shp.SHAPES[shape].kind != "train" else None
+            kvb = args.kv_bits if shp.SHAPES[shape].kind == "decode" else None
+            try:
+                run_cell(arch, shape, multi_pod=multi, quant_scheme=quant,
+                         variant=args.variant, kv_bits=kvb)
+            except Exception as e:
+                traceback.print_exc()
+                failures.append((tag, str(e)))
+                _save(tag, {"arch": arch, "shape": shape, "mesh": mesh_name,
+                            "status": "failed", "error": str(e)})
+    if failures:
+        print(f"\n[dryrun] {len(failures)} FAILURES:")
+        for tag, err in failures:
+            print(f"  {tag}: {err[:200]}")
+        raise SystemExit(1)
+    print("\n[dryrun] all cells passed")
+
+
+if __name__ == "__main__":
+    main()

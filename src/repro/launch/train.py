@@ -1,0 +1,57 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+On this CPU container it drives the REDUCED (smoke) configs end-to-end —
+synthetic data, AdamW, checkpoints, auto-resume; on a real pod the same
+flow runs the full config across the production mesh (pass --full and a
+populated jax.distributed environment; the mesh/rules plumbing is shared
+with the dry-run, which is how the production path is validated here).
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data import DataConfig, SyntheticLM
+from repro.models.layers import QuantPolicy
+from repro.train import TrainHParams, Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.names()))
+    ap.add_argument("--full", action="store_true",
+                    help="full published config (needs a real pod)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--microsteps", type=int, default=1)
+    ap.add_argument("--qat", default=None,
+                    help="QAT scheme (e.g. lq4) — train with fake quant")
+    ap.add_argument("--grad-compress-bits", type=int, default=None)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    cfg = configs.get(args.arch) if args.full else configs.smoke(args.arch)
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=args.seq,
+                                  global_batch=args.batch))
+    hp = TrainHParams(lr=args.lr, microsteps=args.microsteps,
+                      grad_compress_bits=args.grad_compress_bits)
+    policy = QuantPolicy.qat(args.qat) if args.qat else \
+        QuantPolicy.train_fp()
+    trainer = Trainer(cfg, hp, data,
+                      TrainerConfig(total_steps=args.steps,
+                                    ckpt_dir=args.ckpt_dir,
+                                    ckpt_every=args.ckpt_every),
+                      policy=policy)
+    trainer.run()
+    print(f"final loss: {trainer.history[-1]['loss']:.4f}  "
+          f"(start {trainer.history[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

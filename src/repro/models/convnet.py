@@ -1,0 +1,182 @@
+"""CNNs (the paper's own example models) via im2col -> quantized matmul.
+
+Convolution is lowered to ``im2col`` patches x kernel matrix so every
+conv/fc layer flows through the same quantization-aware Dense path
+(``layers.dense_apply``) as the transformer projections — conv kernels get
+local quantization regions along the patch (K = kh*kw*cin) axis exactly
+like the paper's conv1 example (region 11x11x3 = 363, section VI.D).
+
+Two uses:
+  * exact AlexNet / VGG-16 layer shapes for the paper's op-count tables
+    (ALEXNET / VGG16 configs + ``conv_macs``);
+  * a reduced trainable CNN (``MINI_CNN``) for the accuracy benchmarks
+    (synthetic classification stands in for ImageNet; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import QuantPolicy, NO_QUANT
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    kind: str                  # conv | pool | fc
+    out: int = 0               # channels (conv) / units (fc)
+    kernel: int = 3
+    stride: int = 1
+    pad: int = 0
+    groups: int = 1            # AlexNet's split convolutions
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvConfig:
+    name: str
+    input_hw: int
+    in_ch: int
+    n_classes: int
+    layers: tuple
+
+
+# --- the paper's models (exact shapes; for op-count accounting) -----------
+
+ALEXNET = ConvConfig(
+    name="alexnet", input_hw=227, in_ch=3, n_classes=1000,  # Caffe's 227
+    layers=(
+        ConvLayer("conv", 96, 11, 4, 0),
+        ConvLayer("pool", kernel=3, stride=2),
+        ConvLayer("conv", 256, 5, 1, 2, groups=2),
+        ConvLayer("pool", kernel=3, stride=2),
+        ConvLayer("conv", 384, 3, 1, 1),
+        ConvLayer("conv", 384, 3, 1, 1, groups=2),
+        ConvLayer("conv", 256, 3, 1, 1, groups=2),
+        ConvLayer("pool", kernel=3, stride=2),
+        ConvLayer("fc", 4096),
+        ConvLayer("fc", 4096),
+        ConvLayer("fc", 1000),
+    ))
+
+_VGG = []
+for ch, reps in [(64, 2), (128, 2), (256, 3), (512, 3), (512, 3)]:
+    _VGG += [ConvLayer("conv", ch, 3, 1, 1)] * reps
+    _VGG += [ConvLayer("pool", kernel=2, stride=2)]
+VGG16 = ConvConfig(name="vgg16", input_hw=224, in_ch=3, n_classes=1000,
+                   layers=tuple(_VGG + [ConvLayer("fc", 4096),
+                                        ConvLayer("fc", 4096),
+                                        ConvLayer("fc", 1000)]))
+
+# --- reduced trainable CNN (accuracy benchmarks) ---------------------------
+
+MINI_CNN = ConvConfig(
+    name="mini-cnn", input_hw=16, in_ch=3, n_classes=32,
+    layers=(
+        ConvLayer("conv", 16, 3, 1, 1),
+        ConvLayer("pool", kernel=2, stride=2),
+        ConvLayer("conv", 32, 3, 1, 1),
+        ConvLayer("pool", kernel=2, stride=2),
+        ConvLayer("fc", 128),
+        ConvLayer("fc", 32),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# shape walking / op counting (paper Tables 3)
+# ---------------------------------------------------------------------------
+
+def walk_shapes(cfg: ConvConfig):
+    """Yield (layer, h, w, cin, macs) for conv/fc layers."""
+    h = w = cfg.input_hw
+    c = cfg.in_ch
+    out = []
+    flat = None
+    for layer in cfg.layers:
+        if layer.kind == "conv":
+            ho = (h + 2 * layer.pad - layer.kernel) // layer.stride + 1
+            wo = (w + 2 * layer.pad - layer.kernel) // layer.stride + 1
+            k = layer.kernel * layer.kernel * (c // layer.groups)
+            macs = ho * wo * layer.out * k
+            out.append((layer, ho, wo, c, macs))
+            h, w, c = ho, wo, layer.out
+        elif layer.kind == "pool":
+            h = (h - layer.kernel) // layer.stride + 1
+            w = (w - layer.kernel) // layer.stride + 1
+        else:                                   # fc
+            fin = flat if flat is not None else h * w * c
+            macs = fin * layer.out
+            out.append((layer, 1, 1, fin, macs))
+            flat = layer.out
+    return out
+
+
+def conv_macs(cfg: ConvConfig, *, conv_only: bool = True) -> int:
+    return sum(m for layer, _, _, _, m in walk_shapes(cfg)
+               if not conv_only or layer.kind == "conv")
+
+
+# ---------------------------------------------------------------------------
+# trainable forward (im2col -> dense path)
+# ---------------------------------------------------------------------------
+
+def _im2col(x, kernel: int, stride: int, pad: int):
+    """x (B, H, W, C) -> patches (B, Ho, Wo, k*k*C)."""
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    ho = (h + 2 * pad - kernel) // stride + 1
+    wo = (w + 2 * pad - kernel) // stride + 1
+    idx_h = (jnp.arange(ho) * stride)[:, None] + jnp.arange(kernel)[None]
+    idx_w = (jnp.arange(wo) * stride)[:, None] + jnp.arange(kernel)[None]
+    patches = x[:, idx_h][:, :, :, idx_w]       # (B,Ho,k,Wo,k,C)
+    patches = jnp.moveaxis(patches, 2, 3)       # (B,Ho,Wo,k,k,C)
+    return patches.reshape(b, ho, wo, kernel * kernel * c)
+
+
+def init_params(cfg: ConvConfig, key) -> list:
+    params = []
+    h = w = cfg.input_hw
+    c = cfg.in_ch
+    flat = None
+    for i, layer in enumerate(cfg.layers):
+        k = jax.random.fold_in(key, i)
+        if layer.kind == "conv":
+            kin = layer.kernel * layer.kernel * c
+            params.append(layers.dense_init(k, kin, layer.out, bias=True))
+            h = (h + 2 * layer.pad - layer.kernel) // layer.stride + 1
+            w = (w + 2 * layer.pad - layer.kernel) // layer.stride + 1
+            c = layer.out
+        elif layer.kind == "pool":
+            params.append({})
+            h = (h - layer.kernel) // layer.stride + 1
+            w = (w - layer.kernel) // layer.stride + 1
+        else:
+            fin = flat if flat is not None else h * w * c
+            params.append(layers.dense_init(k, fin, layer.out, bias=True))
+            flat = layer.out
+    return params
+
+
+def apply(params: list, cfg: ConvConfig, x, *,
+          policy: QuantPolicy = NO_QUANT):
+    """x (B, H, W, C) -> logits (B, n_classes)."""
+    flat = False
+    for p, layer in zip(params, cfg.layers):
+        if layer.kind == "conv":
+            patches = _im2col(x, layer.kernel, layer.stride, layer.pad)
+            x = jax.nn.relu(layers.dense_apply(p, patches, policy))
+        elif layer.kind == "pool":
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max,
+                (1, layer.kernel, layer.kernel, 1),
+                (1, layer.stride, layer.stride, 1), "VALID")
+        else:
+            if not flat:
+                x = x.reshape(x.shape[0], -1)
+                flat = True
+            x = layers.dense_apply(p, x, policy)
+            if layer is not cfg.layers[-1]:
+                x = jax.nn.relu(x)
+    return x

@@ -1,0 +1,50 @@
+"""Feed-forward blocks: SwiGLU (modern LMs) and GELU (whisper-style)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import QuantPolicy, NO_QUANT
+
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": layers.dense_init(ks[0], d_model, d_ff, dtype=dtype),
+        "wi_up": layers.dense_init(ks[1], d_model, d_ff, dtype=dtype),
+        "wo": layers.dense_init(ks[2], d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu_apply(p, x, policy: QuantPolicy = NO_QUANT):
+    gate = layers.dense_apply(p["wi_gate"], x, policy)
+    up = layers.dense_apply(p["wi_up"], x, policy)
+    return layers.dense_apply(p["wo"], jax.nn.silu(gate) * up, policy)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    ks = jax.random.split(key, 2)
+    return {
+        "wi": layers.dense_init(ks[0], d_model, d_ff, dtype=dtype, bias=True),
+        "wo": layers.dense_init(ks[1], d_ff, d_model, dtype=dtype, bias=True),
+    }
+
+
+def gelu_mlp_apply(p, x, policy: QuantPolicy = NO_QUANT):
+    h = jax.nn.gelu(layers.dense_apply(p["wi"], x, policy))
+    return layers.dense_apply(p["wo"], h, policy)
+
+
+def ffn_init(key, kind: str, d_model: int, d_ff: int, dtype=jnp.float32):
+    if kind == "swiglu":
+        return swiglu_init(key, d_model, d_ff, dtype)
+    if kind == "gelu":
+        return gelu_mlp_init(key, d_model, d_ff, dtype)
+    raise ValueError(f"unknown ffn kind {kind!r}")
+
+
+def ffn_apply(p, x, kind: str, policy: QuantPolicy = NO_QUANT):
+    if kind == "swiglu":
+        return swiglu_apply(p, x, policy)
+    return gelu_mlp_apply(p, x, policy)

@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (RecurrentGemma, arXiv:2402.19427).
+
+Gated diagonal linear recurrence:
+
+    r_t = sigmoid(W_a x_t + b_a)            recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)  per-channel decay, c = 8
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Prefill/train uses ``lax.associative_scan`` over the first-order linear
+recurrence (O(log L) depth); decode is the O(1) step.  The block wraps the
+recurrence with the RecurrentGemma residual-block plumbing: in-proj + short
+causal conv, a gelu gate branch, and an out-proj.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import layers
+from .layers import QuantPolicy, NO_QUANT
+
+_C = 8.0
+
+
+def rglru_init(key, *, d_model: int, width: int | None = None,
+               conv_kernel: int = 4, dtype=jnp.float32):
+    width = width or d_model
+    ks = jax.random.split(key, 6)
+    # Lambda init so decay a in [0.9, 0.999] at r=0.5 (paper appendix)
+    u = jax.random.uniform(ks[0], (width,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u ** (2.0 / _C))))  # softplus^-1
+    return {
+        "in_x": layers.dense_init(ks[1], d_model, width, dtype=dtype),
+        "in_gate": layers.dense_init(ks[2], d_model, width, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[3], (conv_kernel, width),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((width,), dtype),
+        "w_a": layers.dense_init(ks[4], width, width, dtype=dtype, bias=True),
+        "w_x": layers.dense_init(ks[5], width, width, dtype=dtype, bias=True),
+        "Lambda": lam,
+        "out": layers.dense_init(
+            jax.random.fold_in(key, 7), width, d_model, dtype=dtype),
+    }
+
+
+def _rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: (B, L, W) f32.  Returns (h (B,L,W), h_last)."""
+    log_a = -_C * jax.nn.softplus(lam)[None, None, :] * r       # (B,L,W) <= 0
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * x)
+    if h0 is not None:
+        # fold h0 into the first step's injection
+        gated = gated.at[:, 0].add(a[:, 0] * h0)
+    def combine(l, r_):
+        a1, b1 = l
+        a2, b2 = r_
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h, h[:, -1]
+
+
+def rglru_apply(p, x, *, conv_kernel: int = 4, cache=None,
+                policy: QuantPolicy = NO_QUANT):
+    """x (B, L, d_model) -> (y, new_cache).
+
+    cache: {'conv': (B, K-1, W), 'h': (B, W)} for decode / cached prefill.
+    """
+    from .mamba2 import _causal_conv
+    b, l, _ = x.shape
+    xb = layers.dense_apply(p["in_x"], x, policy)
+    gate = jax.nn.gelu(layers.dense_apply(p["in_gate"], x, policy))
+
+    new_cache = cache
+    if cache is None or l > 1:
+        conv = _causal_conv(xb, p["conv_w"], p["conv_b"])
+        if cache is not None:
+            k = p["conv_w"].shape[0]
+            tail = jnp.pad(xb, ((0, 0), (k - 1, 0), (0, 0)))[:, -(k - 1):]
+    else:
+        hist = jnp.concatenate([cache["conv"], xb], axis=1)
+        conv = ((hist.astype(jnp.float32)
+                 * p["conv_w"].astype(jnp.float32)).sum(1, keepdims=True)
+                + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+        tail = hist[:, 1:]
+
+    cf = conv.astype(jnp.float32)
+    r = jax.nn.sigmoid(layers.dense_apply(p["w_a"], conv,
+                                          policy).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.dense_apply(p["w_x"], conv,
+                                          policy).astype(jnp.float32))
+    lam = p["Lambda"]
+
+    if cache is None or l > 1:
+        h0 = None if cache is None else cache["h"]
+        h, h_last = _rglru_scan(cf, r, i, lam, h0=h0)
+        if cache is not None:
+            new_cache = {"conv": tail.astype(cache["conv"].dtype),
+                         "h": h_last}
+    else:
+        log_a = -_C * jax.nn.softplus(lam)[None, None, :] * r
+        a = jnp.exp(log_a)
+        h = a * cache["h"][:, None] + jnp.sqrt(
+            jnp.maximum(1.0 - a * a, 1e-12)) * (i * cf)
+        new_cache = {"conv": tail, "h": h[:, -1]}
+
+    y = h.astype(x.dtype) * gate
+    return layers.dense_apply(p["out"], y, policy), new_cache
+
+
+def rglru_init_cache(batch: int, *, width: int, conv_kernel: int = 4,
+                     dtype=jnp.float32):
+    return {"conv": jnp.zeros((batch, conv_kernel - 1, width), dtype),
+            "h": jnp.zeros((batch, width), jnp.float32)}

@@ -1,0 +1,503 @@
+"""Transformer LM assembly: scan-stacked blocks, enc-dec, caches, quantized
+serving.
+
+Layer stacking: the repeating block ``pattern`` (P positions) is scan-stacked
+-- params for pattern position j are stacked (S, ...) over S = n_layers // P
+superblocks and iterated with ``lax.scan`` (compact HLO at 94-layer scale);
+the n_layers % P remainder is an unscanned tail.  Caches mirror the same
+(S, ...) layout.
+
+Public surface:
+  init_params(cfg, key)                  -> params
+  forward(params, cfg, batch, policy)    -> (logits, aux)      [train path]
+  init_cache(cfg, batch, max_len)        -> cache
+  prefill(params, cfg, batch, cache,
+          policy)                        -> (logits, cache)
+  decode_step(params, cfg, tokens, cache,
+              policy)                    -> (logits, cache)
+  quantize_params(params, cfg, qcfg)     -> params with QWeight leaves
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention, layers, mamba2, mlp, moe, rglru
+from .config import ModelConfig
+from .layers import QuantPolicy, NO_QUANT
+from repro.core import kvwire, schemes
+from repro.distributed.actshard import constrain
+from repro.kernels import ops as kops
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def _norm_init(cfg, dtype):
+    if cfg.norm_kind == "layer":
+        return layers.layernorm_init(cfg.d_model, dtype)
+    return layers.rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm_apply(cfg, p, x):
+    if cfg.norm_kind == "layer":
+        return layers.layernorm_apply(p, x)
+    return layers.rmsnorm_apply(p, x)
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, spec, *, cross: bool = False,
+               dtype=jnp.float32):
+    mixer, ffn = spec
+    ks = jax.random.split(key, 4)
+    p = {"norm1": _norm_init(cfg, dtype)}
+    if mixer.startswith("attn"):
+        p["mixer"] = attention.attn_init(
+            ks[0], d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim, qk_norm=cfg.qk_norm,
+            bias=cfg.attn_bias, dtype=dtype)
+    elif mixer == "mamba2":
+        p["mixer"] = mamba2.mamba2_init(
+            ks[0], d_model=cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            n_groups=cfg.ssm_groups, conv_kernel=cfg.conv_kernel, dtype=dtype)
+    elif mixer == "rglru":
+        p["mixer"] = rglru.rglru_init(
+            ks[0], d_model=cfg.d_model, width=cfg.lru_width,
+            conv_kernel=cfg.conv_kernel, dtype=dtype)
+    else:
+        raise ValueError(f"unknown mixer {mixer!r}")
+
+    if cross:
+        p["norm_cross"] = _norm_init(cfg, dtype)
+        p["cross"] = attention.attn_init(
+            ks[1], d_model=cfg.d_model, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv_heads, head_dim=cfg.head_dim,
+            bias=cfg.attn_bias, dtype=dtype)
+
+    if ffn != "none":
+        p["norm2"] = _norm_init(cfg, dtype)
+        if ffn == "moe":
+            p["ffn"] = moe.moe_init(ks[2], d_model=cfg.d_model,
+                                    d_ff=cfg.moe_d_ff,
+                                    n_experts=cfg.n_experts,
+                                    n_shared_ff=cfg.shared_ff, dtype=dtype)
+        else:
+            p["ffn"] = mlp.ffn_init(ks[2], ffn, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _attn_kind(mixer: str):
+    return {"attn": ("full", True, None),
+            "attn_nc": ("full", False, None),
+            "attn_local": ("local", True, "window"),
+            "attn_chunked": ("chunked", True, "chunk")}[mixer]
+
+
+def block_apply(p, x, spec, cfg: ModelConfig, *, policy: QuantPolicy,
+                cache=None, cache_pos=None, enc_out=None, positions=None):
+    """Returns (x, new_cache, aux)."""
+    mixer, ffn = spec
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = dict(cache) if cache is not None else None
+
+    h = _norm_apply(cfg, p["norm1"], x)
+    if mixer.startswith("attn"):
+        kind, causal, wattr = _attn_kind(mixer)
+        window = getattr(cfg, wattr) if wattr else None
+        self_cache = cache.get("self") if cache else None
+        out, sc = attention.attn_apply(
+            p["mixer"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            head_dim=cfg.head_dim, kind=kind, causal=causal, window=window,
+            qk_norm=cfg.qk_norm, rope=cfg.rope, rope_theta=cfg.rope_theta,
+            positions=positions, cache=self_cache, cache_pos=cache_pos,
+            policy=policy)
+        if cache is not None:
+            new_cache["self"] = sc
+    elif mixer == "mamba2":
+        out, sc = mamba2.mamba2_apply(
+            p["mixer"], h, d_state=cfg.ssm_state, head_dim=cfg.ssm_head_dim,
+            expand=cfg.ssm_expand, n_groups=cfg.ssm_groups,
+            conv_kernel=cfg.conv_kernel, chunk=cfg.ssd_chunk,
+            cache=cache.get("self") if cache else None, policy=policy)
+        if cache is not None:
+            new_cache["self"] = sc
+    else:  # rglru
+        out, sc = rglru.rglru_apply(
+            p["mixer"], h, conv_kernel=cfg.conv_kernel,
+            cache=cache.get("self") if cache else None, policy=policy)
+        if cache is not None:
+            new_cache["self"] = sc
+    x = x + out
+
+    if "cross" in p:
+        h = _norm_apply(cfg, p["norm_cross"], x)
+        ccache = cache.get("cross") if cache else None
+        if ccache is not None and enc_out is None:
+            # decode: attend over precomputed encoder K/V
+            b, l, _ = h.shape
+            g = cfg.n_heads // cfg.n_kv_heads
+            q = layers.dense_apply(p["cross"]["wq"], h, policy).reshape(
+                b, l, cfg.n_kv_heads, g, cfg.head_dim)
+            out = attention.decode_attention(
+                q, ccache["k"], ccache["v"], ccache["k"].shape[1] - 1)
+            out = out.reshape(b, l, cfg.n_heads * cfg.head_dim)
+            out = layers.dense_apply(p["cross"]["wo"], out, policy)
+        else:
+            out, _ = attention.attn_apply(
+                p["cross"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                head_dim=cfg.head_dim, kind="cross", kv_src=enc_out,
+                rope=False, policy=policy)
+            if cache is not None:
+                # prefill: persist encoder K/V for decode
+                b = enc_out.shape[0]
+                lk = enc_out.shape[1]
+                k = layers.dense_apply(p["cross"]["wk"], enc_out, policy
+                                       ).reshape(b, lk, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+                v = layers.dense_apply(p["cross"]["wv"], enc_out, policy
+                                       ).reshape(b, lk, cfg.n_kv_heads,
+                                                 cfg.head_dim)
+                new_cache["cross"] = {"k": k.astype(ccache["k"].dtype),
+                                      "v": v.astype(ccache["v"].dtype)}
+        x = x + out
+
+    if ffn != "none":
+        h = _norm_apply(cfg, p["norm2"], x)
+        if ffn == "moe":
+            out, aux = moe.moe_apply(
+                p["ffn"], h, n_experts=cfg.n_experts, top_k=cfg.top_k,
+                capacity_factor=cfg.capacity_factor, policy=policy)
+        else:
+            out = mlp.ffn_apply(p["ffn"], h, ffn, policy)
+        x = x + out
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# block cache construction
+# ---------------------------------------------------------------------------
+
+def _block_cache(cfg: ModelConfig, spec, batch: int, max_len: int,
+                 cross: bool, dtype, kv_quant=None):
+    mixer, _ = spec
+    c = {}
+    if mixer.startswith("attn"):
+        if mixer == "attn_local":
+            s = min(max_len, cfg.window)
+        elif mixer == "attn_chunked":
+            s = min(max_len, cfg.chunk)
+        else:
+            s = max_len
+        kv = (batch, s, cfg.n_kv_heads, cfg.head_dim)
+        if kv_quant is not None:
+            # LQ-quantized KV cache (paper's runtime input quantization
+            # mapped to serving; core/kvwire.py wire format)
+            bits, gs = kv_quant
+            c["self"] = {"k": kvwire.make_quant_kv(kv, bits, gs),
+                         "v": kvwire.make_quant_kv(kv, bits, gs)}
+        else:
+            c["self"] = {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    elif mixer == "mamba2":
+        c["self"] = mamba2.mamba2_init_cache(
+            batch, d_model=cfg.d_model, d_state=cfg.ssm_state,
+            head_dim=cfg.ssm_head_dim, expand=cfg.ssm_expand,
+            n_groups=cfg.ssm_groups, conv_kernel=cfg.conv_kernel, dtype=dtype,
+            state_quant=kv_quant)
+    else:
+        c["self"] = rglru.rglru_init_cache(
+            batch, width=cfg.lru_width or cfg.d_model,
+            conv_kernel=cfg.conv_kernel, dtype=dtype)
+    if cross:
+        kv = (batch, cfg.enc_len, cfg.n_kv_heads, cfg.head_dim)
+        c["cross"] = {"k": jnp.zeros(kv, dtype), "v": jnp.zeros(kv, dtype)}
+    return c
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _stack_init(key, cfg: ModelConfig, pattern, n_layers: int, *,
+                cross: bool, dtype):
+    p_len = len(pattern)
+    n_super, n_tail = n_layers // p_len, n_layers % p_len
+    keys = jax.random.split(key, n_layers + 1)
+    supers = []
+    for j, spec in enumerate(pattern):
+        layer_keys = jnp.stack([keys[s * p_len + j] for s in range(n_super)])
+        init_one = functools.partial(block_init, cfg=cfg, spec=spec,
+                                     cross=cross, dtype=dtype)
+        supers.append(jax.vmap(init_one)(layer_keys))
+    tail = [block_init(keys[n_super * p_len + t], cfg,
+                       pattern[(n_super * p_len + t) % p_len],
+                       cross=cross, dtype=dtype)
+            for t in range(n_tail)]
+    return {"super": tuple(supers), "tail": tail}
+
+
+def _maybe_remat(fn, cfg: ModelConfig, training: bool):
+    if not training or cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return jax.checkpoint(fn)
+
+
+def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
+                 policy: QuantPolicy, caches=None, cache_pos=None,
+                 enc_out=None, positions=None, training=False):
+    """Run scan-stacked superblocks + tail.  Returns (x, caches, aux)."""
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def body(carry, xs):
+        xx, aux_acc = carry
+        blk_params, blk_caches = xs
+        new_caches = []
+        for j, spec in enumerate(pattern):
+            cj = blk_caches[j] if blk_caches is not None else None
+            xx, nc, aux = block_apply(blk_params[j], xx, spec, cfg,
+                                      policy=policy, cache=cj,
+                                      cache_pos=cache_pos, enc_out=enc_out,
+                                      positions=positions)
+            xx = constrain(xx, "batch", "seq", "embed")
+            new_caches.append(nc)
+        out_caches = tuple(new_caches) if blk_caches is not None else None
+        return (xx, aux_acc + aux), out_caches
+
+    body = _maybe_remat(body, cfg, training)
+    sup_caches = caches["super"] if caches is not None else None
+    xs = (params["super"], sup_caches)
+    if params["super"]:
+        (x, aux_total), new_sup = jax.lax.scan(body, (x, aux_total), xs)
+    else:
+        new_sup = sup_caches
+
+    new_tail = []
+    for t, tp in enumerate(params["tail"]):
+        spec = pattern[t % len(pattern)]
+        ct = caches["tail"][t] if caches is not None else None
+        x, nc, aux = block_apply(tp, x, spec, cfg, policy=policy, cache=ct,
+                                 cache_pos=cache_pos, enc_out=enc_out,
+                                 positions=positions)
+        aux_total = aux_total + aux
+        new_tail.append(nc)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"super": new_sup, "tail": new_tail}
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = jnp.float32  # master params; compute casts to cfg.dtype
+    ks = jax.random.split(key, 8)
+    p = {"embed": layers.embed_init(ks[0], cfg.padded_vocab, cfg.d_model,
+                                    dtype),
+         "final_norm": _norm_init(cfg, dtype)}
+    cross = cfg.n_enc_layers > 0
+    p["decoder"] = _stack_init(ks[1], cfg, cfg.pattern, cfg.n_layers,
+                               cross=cross, dtype=dtype)
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(ks[2], cfg.d_model,
+                                         cfg.padded_vocab, dtype=dtype)
+    if cfg.pos_embed == "learned":
+        p["pos"] = layers.posembed_init(ks[3], cfg.max_seq, cfg.d_model,
+                                        dtype)
+    if cross:
+        enc_pattern = (("attn_nc", cfg.ffn_kind),)
+        p["encoder"] = _stack_init(ks[4], cfg, enc_pattern, cfg.n_enc_layers,
+                                   cross=False, dtype=dtype)
+        p["enc_norm"] = _norm_init(cfg, dtype)
+        p["enc_pos"] = layers.posembed_init(ks[5], cfg.enc_len, cfg.d_model,
+                                            dtype)
+    if cfg.frontend != "none":
+        fdim = cfg.frontend_dim or cfg.d_model
+        p["frontend"] = layers.dense_init(ks[6], fdim, cfg.d_model,
+                                          dtype=dtype)
+    return p
+
+
+def encode(params, cfg: ModelConfig, frames, *, policy=NO_QUANT,
+           training=False):
+    """Whisper-style encoder: frames (B, enc_len, frontend_dim) -> states."""
+    x = layers.dense_apply(params["frontend"], frames, policy)
+    x = layers.posembed_apply(params["enc_pos"], x)
+    x = x.astype(cfg.activation_dtype)
+    enc_pattern = (("attn_nc", cfg.ffn_kind),)
+    x, _, _ = _stack_apply(params["encoder"], x, cfg, enc_pattern,
+                           policy=policy, training=training)
+    return _norm_apply(cfg, params["enc_norm"], x)
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch, policy):
+    """Token embedding (+ VLM patch prefix).  Returns (x, n_prefix)."""
+    x = layers.embed_apply(params["embed"], batch["tokens"])
+    n_prefix = 0
+    if cfg.frontend == "patch_stub":
+        patches = layers.dense_apply(params["frontend"], batch["patches"],
+                                     policy)
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        n_prefix = patches.shape[1]
+    return x, n_prefix
+
+
+def forward(params, cfg: ModelConfig, batch, *, policy: QuantPolicy = NO_QUANT,
+            training: bool = True):
+    """Full-sequence forward (training / eval).  Returns (logits, aux).
+
+    batch: {'tokens': (B, L) int32} + optional 'frames' (audio) /
+    'patches' (VLM).
+    """
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = encode(params, cfg, batch["frames"], policy=policy,
+                         training=training)
+    x, _ = _embed_inputs(params, cfg, batch, policy)
+    if cfg.pos_embed == "learned":
+        x = layers.posembed_apply(params["pos"], x)
+    x = constrain(x.astype(cfg.activation_dtype), "batch", "seq", "embed")
+    x, _, aux = _stack_apply(params["decoder"], x, cfg, cfg.pattern,
+                             policy=policy, enc_out=enc_out,
+                             training=training)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x, policy)
+    return logits, aux
+
+
+def _logits(params, cfg: ModelConfig, x, policy):
+    if cfg.tie_embeddings:
+        logits = layers.embed_logits(params["embed"], x, cfg.vocab_size)
+    else:
+        logits = layers.dense_apply(params["lm_head"], x, policy)
+        if cfg.vocab_size < cfg.padded_vocab:
+            logits = logits.at[..., cfg.vocab_size:].set(-1e9)
+    # vocab dim sharded over "model": a replicated (B, L, V) fp32 buffer is
+    # ~34 GiB/device at train_4k scale (dry-run iteration 1, §Perf)
+    return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=None, kv_quant=None) -> dict:
+    """Decode cache.  ``kv_quant=(bits, group_size)`` stores attention K/V
+    in the LQ wire format (bits in {8,4,2,1}; group_size divides head_dim).
+    """
+    dtype = dtype or cfg.activation_dtype
+    cross = cfg.n_enc_layers > 0
+    sup = []
+    for j, spec in enumerate(cfg.pattern):
+        one = _block_cache(cfg, spec, batch, max_len, cross, dtype, kv_quant)
+        sup.append(jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_super,) + a.shape, a.dtype), one))
+    tail = [_block_cache(cfg, cfg.pattern[(cfg.n_super * len(cfg.pattern)
+                                           + t) % len(cfg.pattern)],
+                         batch, max_len, cross, dtype, kv_quant)
+            for t in range(cfg.n_tail)]
+    return {"super": tuple(sup), "tail": tail,
+            "pos": jnp.zeros((), jnp.int32)}
+
+
+def prefill(params, cfg: ModelConfig, batch, cache, *,
+            policy: QuantPolicy = NO_QUANT):
+    """Process the prompt, filling the cache.  Returns (logits_last, cache)."""
+    enc_out = None
+    if cfg.n_enc_layers:
+        enc_out = encode(params, cfg, batch["frames"], policy=policy)
+    x, _ = _embed_inputs(params, cfg, batch, policy)
+    if cfg.pos_embed == "learned":
+        x = layers.posembed_apply(params["pos"], x)
+    x = x.astype(cfg.activation_dtype)
+    l = x.shape[1]
+    x, new_caches, _ = _stack_apply(
+        params["decoder"], x, cfg, cfg.pattern, policy=policy,
+        caches={"super": cache["super"], "tail": cache["tail"]},
+        cache_pos=None, enc_out=enc_out, positions=None)
+    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    logits = _logits(params, cfg, x, policy)
+    new_caches["pos"] = jnp.asarray(l, jnp.int32)
+    return logits, new_caches
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache, *,
+                policy: QuantPolicy = NO_QUANT):
+    """One decode step.  tokens (B, 1) int32.  Returns (logits, cache)."""
+    pos = cache["pos"]
+    x = layers.embed_apply(params["embed"], tokens)
+    if cfg.pos_embed == "learned":
+        x = layers.posembed_apply(params["pos"], x, offset=pos)
+    x = x.astype(cfg.activation_dtype)
+    x, new_caches, _ = _stack_apply(
+        params["decoder"], x, cfg, cfg.pattern, policy=policy,
+        caches={"super": cache["super"], "tail": cache["tail"]},
+        cache_pos=pos, enc_out=None, positions=None)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x, policy)
+    new_caches["pos"] = pos + 1
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# quantized serving params (the paper's technique as deployment format)
+# ---------------------------------------------------------------------------
+
+_EXCLUDE_KEYS = {"router"}          # fp32-sensitive leaves
+
+
+def quantize_params(params, cfg: ModelConfig,
+                    qcfg: schemes.QuantConfig) -> dict:
+    """Replace Dense weights with packed :class:`QWeight` (local quantization
+    regions along the contraction axis).  Stacked (scan) and expert weights
+    are quantized with vmap; norms / router / conv / scalar leaves stay fp.
+    """
+    if qcfg.w_bits is None:
+        return params
+    bits, gs = qcfg.w_bits, qcfg.group_size
+
+    def quant_w(w):
+        if w.ndim == 2:
+            return kops.quantize_weight(w, bits, gs)
+        # stacked: (S, K, N) or (S, E, K, N) or (E, K, N)
+        from repro.kernels import ref as kref
+        flat = w.reshape((-1,) + w.shape[-2:])
+        packed, scale, zmin = jax.vmap(
+            lambda ww: kref.quantize_weight(ww, bits, gs))(flat)
+        lead = w.shape[:-2]
+        return kops.QWeight(
+            packed=packed.reshape(lead + packed.shape[1:]),
+            scale=scale.reshape(lead + scale.shape[1:]),
+            zmin=zmin.reshape(lead + zmin.shape[1:]),
+            bits=bits, group_size=gs, k=w.shape[-2], n=w.shape[-1])
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            out = {}
+            for k, v in tree.items():
+                if k in _EXCLUDE_KEYS:
+                    out[k] = v
+                elif k == "w" and hasattr(v, "ndim") and v.ndim >= 2 \
+                        and v.shape[-2] % gs == 0:
+                    out[k] = quant_w(v)
+                elif k in ("wi_gate", "wi_up", "wo") and hasattr(v, "ndim") \
+                        and not isinstance(v, dict) and v.ndim >= 3 \
+                        and v.shape[-2] % gs == 0:
+                    out[k] = quant_w(v)       # MoE expert stacks
+                else:
+                    out[k] = walk(v, path + (k,))
+            return out
+        if isinstance(tree, (list, tuple)):
+            t = [walk(v, path + (i,)) for i, v in enumerate(tree)]
+            return type(tree)(t) if isinstance(tree, tuple) else t
+        return tree
+
+    return walk(params)

@@ -1,0 +1,3 @@
+from .adamw import adamw, OptState, apply_updates
+from .schedules import warmup_cosine, constant
+from .clipping import global_norm, clip_by_global_norm

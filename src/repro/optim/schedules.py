@@ -1,0 +1,24 @@
+"""Learning-rate schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(value: float):
+    def fn(step):
+        return jnp.asarray(value, jnp.float32)
+    return fn
+
+
+def warmup_cosine(peak: float, *, warmup_steps: int, total_steps: int,
+                  final_frac: float = 0.1):
+    """Linear warmup to ``peak`` then cosine decay to ``final_frac * peak``."""
+    def fn(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak * step / max(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / max(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac * peak + (1 - final_frac) * peak \
+            * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return fn

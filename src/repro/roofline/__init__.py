@@ -1,0 +1,2 @@
+from .analysis import (HW, roofline_from_compiled, collective_bytes,
+                       RooflineReport)

@@ -1,0 +1,5 @@
+from .kvcache import (quantize_kv, dequantize_kv, make_quant_kv,
+                      update_quant_kv, is_quant_kv, kv_bits_of,
+                      quantize_state, dequantize_state, is_quant_state,
+                      cache_nbytes)
+from .engine import Engine, EngineConfig, greedy_sample, temperature_sample

@@ -1,0 +1,111 @@
+"""Batched serving engine: prefill + decode with quantized weights/cache.
+
+The deployment path of the paper's scheme end-to-end:
+
+  * weights:    offline ``transformer.quantize_params`` -> packed QWeight
+                (local quantization regions; kernels/quant_matmul on TPU);
+  * activations: per-projection runtime quantization via the policy's
+                ``a_bits`` (paper section V.B "inputs ... converted into
+                fixed point in runtime");
+  * KV cache:   ``kv_bits`` stores K/V (or the SSM state) in the LQ wire
+                format (core/kvwire.py).
+
+``generate`` runs greedy or temperature sampling with a lax.scan'd decode
+loop inside one jit — per-token Python overhead is zero; batching is the
+(B, ...) leading dim end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvwire, schemes
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import QuantPolicy, NO_QUANT
+
+
+def greedy_sample(logits, key):
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(temperature: float = 1.0, top_k: int | None = None):
+    def fn(logits, key):
+        lg = logits / max(temperature, 1e-6)
+        if top_k is not None:
+            kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+            lg = jnp.where(lg < kth, -1e9, lg)
+        return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    max_len: int = 2048
+    kv_bits: int | None = None           # None = fp cache
+    kv_group: int = 64
+    weight_scheme: str | None = None     # e.g. "lq4w"; None = fp weights
+    a_bits: int | None = None            # runtime activation quantization
+    backend: str = "auto"
+    temperature: float = 0.0             # 0 => greedy
+    top_k: int | None = None
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+        self.cfg, self.ecfg = cfg, ecfg
+        if ecfg.weight_scheme is not None:
+            qcfg = schemes.get(ecfg.weight_scheme)
+            if ecfg.a_bits is not None:
+                qcfg = dataclasses.replace(qcfg, a_bits=ecfg.a_bits)
+            self.params = transformer.quantize_params(params, cfg, qcfg)
+            self.policy = QuantPolicy.serve(qcfg, backend=ecfg.backend)
+        else:
+            self.params = params
+            self.policy = NO_QUANT
+        self._sample = (greedy_sample if ecfg.temperature == 0.0 else
+                        temperature_sample(ecfg.temperature, ecfg.top_k))
+        self._generate = jax.jit(self._generate_impl,
+                                 static_argnames=("steps",))
+
+    # ------------------------------------------------------------------
+    def init_cache(self, batch: int):
+        kvq = ((self.ecfg.kv_bits, self.ecfg.kv_group)
+               if self.ecfg.kv_bits is not None else None)
+        return transformer.init_cache(self.cfg, batch, self.ecfg.max_len,
+                                      kv_quant=kvq)
+
+    def _generate_impl(self, params, batch, cache, key, *, steps: int):
+        logits, cache = transformer.prefill(params, self.cfg, batch, cache,
+                                            policy=self.policy)
+        first = self._sample(logits[:, -1], key)
+
+        def step(carry, k):
+            tok, cache = carry
+            logits, cache = transformer.decode_step(
+                params, self.cfg, tok[:, None], cache, policy=self.policy)
+            nxt = self._sample(logits[:, -1], k)
+            return (nxt, cache), nxt
+
+        keys = jax.random.split(key, steps)
+        (_, cache), toks = jax.lax.scan(step, (first, cache), keys)
+        out = jnp.concatenate([first[:, None], jnp.moveaxis(toks, 0, 1)],
+                              axis=1)
+        return out, cache
+
+    def generate(self, batch: dict, *, steps: int, seed: int = 0):
+        """batch: {'tokens': (B, L)} (+ frontend inputs).  Returns
+        (generated (B, steps+1) int32, final cache)."""
+        b = batch["tokens"].shape[0]
+        cache = self.init_cache(b)
+        return self._generate(self.params, batch, cache,
+                              jax.random.key(seed), steps=steps)
+
+    # ------------------------------------------------------------------
+    def cache_bytes(self, batch: int) -> int:
+        """HBM bytes of the decode cache (the kv_bits win, measurable)."""
+        return kvwire.cache_nbytes(jax.eval_shape(
+            lambda: self.init_cache(batch)))

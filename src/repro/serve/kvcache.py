@@ -1,0 +1,15 @@
+"""Serving-facing re-export of the core KV-cache wire format.
+
+The format itself lives in :mod:`repro.core.kvwire` (it is the paper's
+local-quantization-region format applied to cached tensors); model code
+imports it from core to avoid serve<->models import cycles.
+"""
+from repro.core.kvwire import (quantize_kv, dequantize_kv, make_quant_kv,
+                               update_quant_kv, is_quant_kv, kv_bits_of,
+                               quantize_state, dequantize_state,
+                               is_quant_state, cache_nbytes, _infer)
+
+__all__ = ["quantize_kv", "dequantize_kv", "make_quant_kv",
+           "update_quant_kv", "is_quant_kv", "kv_bits_of",
+           "quantize_state", "dequantize_state", "is_quant_state",
+           "cache_nbytes"]

@@ -1,0 +1,2 @@
+from .step import TrainState, make_train_step, loss_fn, TrainHParams
+from .trainer import Trainer, TrainerConfig

@@ -1,0 +1,155 @@
+"""train_step builder: loss, grads, microbatch accumulation, compression.
+
+One jit-compiled function per run::
+
+    state, metrics = train_step(state, batch)
+
+  * cross-entropy LM loss (labels shifted upstream by the data pipeline;
+    VLM patch-prefix positions are excluded by slicing logits to the
+    label length) + MoE aux loss;
+  * optional **microbatch gradient accumulation** (``microsteps > 1``) via
+    lax.scan over batch slices — the activation-memory lever for the
+    235B-class cells;
+  * optional **LQ gradient compression** (core/gradcomp.py) with error
+    feedback — the paper's block format applied to the DP all-reduce;
+    inside jit the quantize-dequantize runs before the pjit-inserted
+    all-reduce, shrinking the collective payload when lowered with
+    shard_map, and acting as the numerics-faithful reference otherwise;
+  * global-norm clipping, AdamW, schedule — all in one XLA program so
+    backward collectives overlap the optimizer per XLA's async scheduler.
+
+QAT: pass a ``QuantPolicy`` with mode='qat' — projections fake-quantize
+with straight-through gradients (core/qat.py), training the paper's
+deployment numerics directly.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradcomp
+from repro.distributed.actshard import constrain
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import QuantPolicy, NO_QUANT
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("params", "opt", "err", "step"), meta_fields=())
+@dataclasses.dataclass(frozen=True)
+class TrainState:
+    params: dict
+    opt: object                 # OptState
+    err: object                 # gradcomp error-feedback tree or () if off
+    step: jnp.ndarray           # () int32
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    lr: object = 3e-4                   # float or schedule fn
+    weight_decay: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    clip_norm: float = 1.0
+    microsteps: int = 1
+    grad_compress_bits: int | None = None   # None = fp32 all-reduce
+    grad_compress_group: int = 128
+    z_loss: float = 0.0                 # logit-norm regularizer
+    aux_weight: float = 0.01            # MoE load-balance weight
+    param_dtype: str = "float32"        # "bfloat16": fp32 master in opt
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, policy: QuantPolicy,
+            hp: TrainHParams):
+    logits, aux = transformer.forward(params, cfg, batch, policy=policy,
+                                      training=True)
+    labels = batch["labels"]
+    # VLM: logits cover patch prefix + tokens; loss on the token tail only
+    logits = logits[:, -labels.shape[1]:]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    nll = constrain(nll, "batch", "seq")
+    mask = (labels >= 0).astype(jnp.float32)
+    loss = (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    if hp.z_loss:
+        zl = jnp.square(jax.nn.logsumexp(logits, axis=-1))
+        loss = loss + hp.z_loss * (zl * mask).sum() \
+            / jnp.maximum(mask.sum(), 1.0)
+    total = loss + hp.aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams,
+                    policy: QuantPolicy = NO_QUANT):
+    """Build (init_state, train_step); both pure, jit/pjit-ready."""
+    mixed = hp.param_dtype != "float32"
+    opt = adamw(hp.lr, b1=hp.b1, b2=hp.b2, weight_decay=hp.weight_decay,
+                keep_master=mixed)
+    compress = hp.grad_compress_bits is not None
+
+    def init_state(key) -> TrainState:
+        params = transformer.init_params(cfg, key)
+        if mixed:
+            params = jax.tree.map(
+                lambda p: p.astype(hp.param_dtype), params)
+        err = (gradcomp.init_error_state(params) if compress else
+               jnp.zeros((), jnp.float32))
+        return TrainState(params=params, opt=opt.init(params), err=err,
+                          step=jnp.zeros((), jnp.int32))
+
+    grad_of = jax.value_and_grad(
+        lambda p, b: loss_fn(p, cfg, b, policy=policy, hp=hp), has_aux=True)
+
+    def accumulate_grads(params, batch):
+        if hp.microsteps == 1:
+            (_, metrics), grads = grad_of(params, batch)
+            return grads, metrics
+
+        def slice_micro(x, i):
+            per = x.shape[0] // hp.microsteps
+            return jax.lax.dynamic_slice_in_dim(x, i * per, per, axis=0)
+
+        def body(carry, i):
+            acc, macc = carry
+            micro = jax.tree.map(lambda x: slice_micro(x, i), batch)
+            (_, metrics), grads = grad_of(params, micro)
+            acc = jax.tree.map(jnp.add, acc, grads)
+            macc = jax.tree.map(jnp.add, macc, metrics)
+            return (acc, macc), None
+
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        m0 = {"loss": jnp.zeros((), jnp.float32),
+              "aux": jnp.zeros((), jnp.float32)}
+        (grads, msum), _ = jax.lax.scan(body, (zeros, m0),
+                                        jnp.arange(hp.microsteps))
+        inv = 1.0 / hp.microsteps
+        grads = jax.tree.map(lambda g: g * inv, grads)
+        metrics = jax.tree.map(lambda m: m * inv, msum)
+        return grads, metrics
+
+    def train_step(state: TrainState, batch):
+        grads, metrics = accumulate_grads(state.params, batch)
+
+        new_err = state.err
+        if compress:
+            corrected = gradcomp.apply_error_feedback(grads, state.err)
+            quantized = jax.tree.map(
+                lambda g: gradcomp.roundtrip_leaf(
+                    g, hp.grad_compress_bits, hp.grad_compress_group),
+                corrected)
+            new_err = gradcomp.new_error(corrected, quantized)
+            grads = quantized
+
+        grads, gnorm = clip_by_global_norm(grads, hp.clip_norm)
+        updates, new_opt = opt.update(grads, state.opt, state.params)
+        new_params = apply_updates(state.params, updates)
+        metrics = dict(metrics, grad_norm=gnorm)
+        return TrainState(params=new_params, opt=new_opt, err=new_err,
+                          step=state.step + 1), metrics
+
+    return init_state, train_step

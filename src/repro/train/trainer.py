@@ -1,0 +1,97 @@
+"""Trainer: the fault-tolerant outer loop.
+
+Responsibilities:
+
+  * jit (or pjit, when given a mesh + rules) the train_step with donated
+    state;
+  * drive the index-based data pipeline (restart-exact: batch(step) is a
+    pure function of step);
+  * periodic atomic checkpoints; ``run()`` begins with ``restore_latest``
+    so a preempted/killed job resumes from the last committed step;
+  * straggler monitor on step wall-times with pluggable policy;
+  * metric history (host-side floats) for the examples/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.straggler import StragglerMonitor
+from repro.models.config import ModelConfig
+from repro.models.layers import QuantPolicy, NO_QUANT
+from .step import TrainHParams, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    keep_ckpts: int = 3
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, hp: TrainHParams, data,
+                 tcfg: TrainerConfig, *, policy: QuantPolicy = NO_QUANT,
+                 mesh=None, rules=None):
+        self.cfg, self.hp, self.data, self.tcfg = cfg, hp, data, tcfg
+        self.policy = policy
+        self.init_state_fn, step_fn = make_train_step(cfg, hp, policy)
+        if mesh is not None and rules is not None:
+            from repro.distributed.sharding import batch_sharding
+            abstract = jax.eval_shape(
+                self.init_state_fn, jax.random.key(tcfg.seed))
+            state_shardings = rules.shardings(abstract, mesh)
+            sample = data.batch(0)
+            bshard = batch_sharding(sample, mesh, rules.dp)
+            self.step_fn = jax.jit(step_fn,
+                                   in_shardings=(state_shardings, bshard),
+                                   out_shardings=(state_shardings, None),
+                                   donate_argnums=(0,))
+            self._mesh = mesh
+        else:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+            self._mesh = None
+        self.ckpt = (CheckpointManager(tcfg.ckpt_dir, keep=tcfg.keep_ckpts)
+                     if tcfg.ckpt_dir else None)
+        self.monitor = StragglerMonitor()
+        self.history = []
+
+    # ------------------------------------------------------------------
+    def init_state(self):
+        return self.init_state_fn(jax.random.key(self.tcfg.seed))
+
+    def run(self, state=None):
+        """Train to total_steps; auto-resume from the newest checkpoint."""
+        start = 0
+        if state is None:
+            state = self.init_state()
+            if self.ckpt is not None:
+                restored = self.ckpt.restore_latest(state)
+                if restored is not None:
+                    start, tree = restored
+                    state = jax.tree.map(
+                        lambda like, arr: jax.numpy.asarray(
+                            arr, like.dtype), state, tree)
+                    print(f"[trainer] resumed from step {start}")
+
+        for step in range(start, self.tcfg.total_steps):
+            batch = self.data.batch(step)
+            self.monitor.start()
+            state, metrics = self.step_fn(state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = self.monitor.stop("step")
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=step, wall_s=dt)
+            self.history.append(rec)
+            if step % self.tcfg.log_every == 0:
+                print(f"[trainer] step {step:5d} loss {rec['loss']:.4f} "
+                      f"grad_norm {rec['grad_norm']:.3f} {dt * 1e3:.0f} ms")
+            if self.ckpt is not None and (step + 1) % self.tcfg.ckpt_every \
+                    == 0:
+                self.ckpt.save(step + 1, state)
+        return state

@@ -1,0 +1,9 @@
+import os
+
+# Tests must see the single real CPU device (the dry-run subprocess sets
+# its own 512-device flag); keep any ambient flag from leaking in.
+os.environ.pop("XLA_FLAGS", None)
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,53 @@
+"""packing.py: bit-pack/unpack roundtrip across widths and shapes."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+
+
+@pytest.mark.parametrize("bits", packing.SUPPORTED_BITS)
+@pytest.mark.parametrize("shape", [(8,), (4, 16), (2, 3, 24)])
+def test_roundtrip(bits, shape):
+    rng = np.random.default_rng(bits)
+    per = packing.codes_per_byte(bits)
+    if shape[-1] % per:
+        pytest.skip("unaligned")
+    codes = rng.integers(0, 1 << bits, size=shape).astype(np.uint8)
+    packed = packing.pack(jnp.asarray(codes), bits)
+    out = packing.unpack(packed, bits, shape[-1])
+    np.testing.assert_array_equal(np.asarray(out), codes)
+
+
+@pytest.mark.parametrize("bits,expected", [(1, 8), (2, 4), (4, 2), (8, 1),
+                                           (6, 1), (3, 1)])
+def test_codes_per_byte(bits, expected):
+    assert packing.codes_per_byte(bits) == expected
+
+
+def test_packed_size():
+    codes = jnp.zeros((4, 32), jnp.uint8)
+    assert packing.pack(codes, 2).shape == (4, 8)
+    assert packing.pack(codes, 4).shape == (4, 16)
+    assert packing.pack(codes, 1).shape == (4, 4)
+    assert packing.pack(codes, 8).shape == (4, 32)
+
+
+def test_misaligned_raises():
+    with pytest.raises(ValueError):
+        packing.pack(jnp.zeros((4, 13), jnp.uint8), 2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       n_groups=st.integers(1, 5),
+       data=st.data())
+def test_roundtrip_property(bits, n_groups, data):
+    per = packing.codes_per_byte(bits)
+    n = n_groups * per
+    codes = data.draw(st.lists(st.integers(0, (1 << bits) - 1),
+                               min_size=n, max_size=n))
+    arr = jnp.asarray(codes, jnp.uint8)
+    out = packing.unpack(packing.pack(arr, bits), bits, n)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(arr))

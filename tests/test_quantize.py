@@ -1,0 +1,100 @@
+"""core/quantize.py: LQ/DQ invariants (paper section IV) via hypothesis."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantize import (quantize as quantize_fn, dequantize,
+                                 fake_quant, quant_error)
+
+
+def _rand(shape, seed=0, scale=3.0):
+    return scale * jax.random.normal(jax.random.key(seed), shape)
+
+
+@pytest.mark.parametrize("bits", [8, 6, 4, 2, 1])
+@pytest.mark.parametrize("granularity", ["per_tensor", "per_group"])
+def test_error_bounded_by_step(bits, granularity):
+    """|x - Q^-1(Q(x))| <= s/2 per region (paper eq. 4/5)."""
+    x = _rand((4, 256), seed=bits)
+    qt = quantize_fn(x, bits, group_size=64, granularity=granularity)
+    err = np.abs(np.asarray(x - dequantize(qt)))
+    scale = np.asarray(qt.scale)
+    if granularity == "per_tensor":
+        assert err.max() <= scale * 0.5 + 1e-6
+    else:
+        err_g = err.reshape(4, 4, 64)
+        assert (err_g.max(-1) <= scale * 0.5 + 1e-6).all()
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_lq_error_never_worse_than_dq(bits):
+    """Smaller regions => smaller steps => lower error (paper section IV.C).
+
+    Guaranteed per-region: the local step s_lk <= global step s, so the
+    max error within every region can only shrink.
+    """
+    x = _rand((8, 512), seed=bits + 10)
+    e_dq = np.abs(np.asarray(quant_error(x, bits, granularity="per_tensor")))
+    e_lq = np.abs(np.asarray(quant_error(x, bits, group_size=64,
+                                         granularity="per_group")))
+    assert e_lq.mean() <= e_dq.mean() + 1e-7
+    assert e_lq.max() <= e_dq.max() + 1e-7
+
+
+def test_region_monotonicity():
+    """Paper Fig. 10: accuracy improves as regions shrink -> here, MSE
+    decreases monotonically with group size at 2-bit."""
+    x = _rand((16, 1024), seed=3)
+    mses = []
+    for gs in (1024, 256, 64, 16):
+        e = quant_error(x, 2, group_size=gs, granularity="per_group")
+        mses.append(float(jnp.mean(e * e)))
+    assert mses == sorted(mses, reverse=True)
+
+
+@pytest.mark.parametrize("bits", [8, 4, 2])
+def test_idempotent(bits):
+    """Q(dequant(Q(x))) == Q(x): quantization is a projection."""
+    x = _rand((4, 128), seed=bits)
+    qt = quantize_fn(x, bits, group_size=32)
+    x1 = dequantize(qt)
+    qt2 = quantize_fn(x1, bits, group_size=32)
+    np.testing.assert_allclose(np.asarray(dequantize(qt2)), np.asarray(x1),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_constant_region_exact():
+    """A constant region has rng=0 -> scale=1, codes=0, exact rebuild."""
+    x = jnp.full((2, 64), 3.25)
+    qt = quantize_fn(x, 2, group_size=32)
+    np.testing.assert_allclose(np.asarray(dequantize(qt)), 3.25, rtol=1e-6)
+
+
+def test_8bit_high_fidelity():
+    """Paper Table 1: 8-bit keeps accuracy — relative error ~ 1/255."""
+    x = _rand((32, 256), seed=7)
+    e = quant_error(x, 8, group_size=64)
+    rel = float(jnp.abs(e).max()) / float(jnp.abs(x).max())
+    assert rel < 1.0 / 255
+
+
+@settings(max_examples=25, deadline=None)
+@given(bits=st.sampled_from([1, 2, 4, 8]),
+       gs=st.sampled_from([16, 32, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_fake_quant_matches_roundtrip(bits, gs, seed):
+    x = _rand((2, 128), seed=seed)
+    qt = quantize_fn(x, bits, group_size=gs)
+    fq = fake_quant(x, bits, group_size=gs)
+    np.testing.assert_allclose(np.asarray(dequantize(qt)), np.asarray(fq),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_axis_handling():
+    x = _rand((6, 4, 64), seed=9)
+    qt = quantize_fn(x, 4, group_size=2, axis=1)
+    assert dequantize(qt).shape == x.shape
+    e = np.abs(np.asarray(x - dequantize(qt)))
+    assert e.max() < np.abs(np.asarray(x)).max() / 4

@@ -1,0 +1,194 @@
+"""Training substrate: optimizer, microbatching, compression, QAT, loss."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import gradcomp
+from repro.data import DataConfig, SyntheticLM
+from repro.models.config import ModelConfig
+from repro.models.layers import QuantPolicy
+from repro.optim import adamw, apply_updates, clip_by_global_norm, \
+    warmup_cosine
+from repro.train import TrainHParams, Trainer, TrainerConfig, make_train_step
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                   vocab_size=256, n_heads=4, n_kv_heads=2, d_ff=128,
+                   dtype="float32", remat="none")
+
+
+def _data(batch=8, seq=32):
+    return SyntheticLM(DataConfig(vocab_size=256, seq_len=seq,
+                                  global_batch=batch))
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_decreases_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.asarray(5.0)}
+    state = opt.init(params)
+    for _ in range(60):
+        grads = {"w": 2 * params["w"]}
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert abs(float(params["w"])) < 0.5
+
+
+def test_weight_decay_mask():
+    """1-D leaves (biases/norms) are not decayed."""
+    opt = adamw(0.1, weight_decay=1.0)
+    params = {"w": jnp.ones((4, 4)), "b": jnp.ones((4,))}
+    state = opt.init(params)
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    updates, _ = opt.update(zeros, state, params)
+    assert float(jnp.abs(updates["w"]).sum()) > 0      # decayed
+    assert float(jnp.abs(updates["b"]).sum()) == 0     # masked
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    n2 = jnp.sqrt(sum(jnp.sum(x * x) for x in jax.tree.leaves(clipped)))
+    np.testing.assert_allclose(float(n2), 1.0, rtol=1e-5)
+
+
+def test_warmup_cosine_shape():
+    fn = warmup_cosine(1.0, warmup_steps=10, total_steps=100)
+    assert float(fn(0)) == 0.0
+    np.testing.assert_allclose(float(fn(10)), 1.0, rtol=1e-5)
+    assert float(fn(100)) < float(fn(50)) < float(fn(10))
+
+
+# ---------------------------------------------------------------------------
+# train step semantics
+# ---------------------------------------------------------------------------
+
+def test_loss_decreases():
+    data = _data()
+    tr = Trainer(TINY, TrainHParams(lr=1e-3), data,
+                 TrainerConfig(total_steps=25, log_every=100))
+    tr.run()
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+
+def test_microbatch_equals_full_batch():
+    """Gradient accumulation must match the single-batch gradient."""
+    data = _data(batch=8)
+    batch = data.batch(0)
+    results = {}
+    for ms in (1, 2, 4):
+        init, step = make_train_step(TINY, TrainHParams(lr=1e-2,
+                                                        microsteps=ms))
+        state = init(jax.random.key(0))
+        state, metrics = jax.jit(step)(state, batch)
+        results[ms] = (float(metrics["loss"]),
+                       np.asarray(jax.tree.leaves(state.params)[0]))
+    np.testing.assert_allclose(results[1][0], results[2][0], rtol=1e-5)
+    np.testing.assert_allclose(results[1][1], results[4][1],
+                               rtol=5e-4, atol=5e-6)
+
+
+def test_qat_policy_trains():
+    data = _data()
+    tr = Trainer(TINY, TrainHParams(lr=1e-3), data,
+                 TrainerConfig(total_steps=12, log_every=100),
+                 policy=QuantPolicy.qat("lq4"))
+    tr.run()
+    assert np.isfinite(tr.history[-1]["loss"])
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+
+# ---------------------------------------------------------------------------
+# gradient compression (beyond-paper distributed tie-in)
+# ---------------------------------------------------------------------------
+
+def test_gradcomp_roundtrip_error_small():
+    g = jax.random.normal(jax.random.key(0), (1000,)) * 1e-3
+    out = gradcomp.roundtrip_leaf(g, 8, 128)
+    rel = float(jnp.abs(out - g).max() / jnp.abs(g).max())
+    assert rel < 0.01
+
+
+def test_error_feedback_reduces_bias():
+    """With error feedback the accumulated compressed sum tracks the true
+    sum much better than without."""
+    key = jax.random.key(1)
+    gs = [0.01 * jax.random.normal(jax.random.fold_in(key, i), (256,))
+          for i in range(50)]
+    true_sum = sum(gs)
+
+    acc_ef = jnp.zeros((256,))
+    err = jnp.zeros((256,))
+    acc_no = jnp.zeros((256,))
+    for g in gs:
+        q = gradcomp.roundtrip_leaf(g + err, 2, 64)
+        err = (g + err) - q
+        acc_ef = acc_ef + q
+        acc_no = acc_no + gradcomp.roundtrip_leaf(g, 2, 64)
+    e_ef = float(jnp.linalg.norm(acc_ef - true_sum))
+    e_no = float(jnp.linalg.norm(acc_no - true_sum))
+    assert e_ef < e_no
+
+
+def test_compressed_training_converges():
+    data = _data()
+    tr = Trainer(TINY, TrainHParams(lr=1e-3, grad_compress_bits=8), data,
+                 TrainerConfig(total_steps=20, log_every=100))
+    tr.run()
+    assert tr.history[-1]["loss"] < tr.history[0]["loss"]
+
+
+def test_compressed_mean_matches_plain_mean():
+    """compressed_mean_over_axis under shard_map == plain mean (8-bit)."""
+    from jax.sharding import Mesh, PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+    import numpy as np_
+    devs = np_.asarray(jax.devices()[:1])
+    mesh = Mesh(devs, ("dp",))
+    g = {"w": jax.random.normal(jax.random.key(2), (4, 64))}
+
+    def fn(gg):
+        return gradcomp.compressed_mean_over_axis(gg, "dp", bits=8,
+                                                  group_size=32)
+
+    out = shard_map(fn, mesh=mesh, in_specs=(P("dp"),),
+                    out_specs=P("dp"))(g)
+    rel = float(jnp.abs(out["w"] - g["w"]).max()
+                / jnp.abs(g["w"]).max())
+    assert rel < 0.02
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_deterministic_and_restart_exact():
+    d1 = _data()
+    d2 = _data()
+    b1, b2 = d1.batch(7), d2.batch(7)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+
+
+def test_data_sharding_partition():
+    d = _data(batch=8)
+    b = d.batch(0)
+    shards = [SyntheticLM.shard(b, i, 4)["tokens"] for i in range(4)]
+    np.testing.assert_array_equal(np.concatenate(shards, 0),
+                                  np.asarray(b["tokens"]))
+
+
+def test_data_learnable():
+    """The HMM stream is predictable: a bigram fit beats uniform entropy."""
+    d = _data(batch=32, seq=64)
+    b = d.batch(0)
+    toks = np.asarray(b["tokens"])
+    # unigram entropy must be well below log(vocab) (structure exists)
+    counts = np.bincount(toks.reshape(-1), minlength=256) + 1e-9
+    p = counts / counts.sum()
+    h = -(p * np.log(p)).sum()
+    assert h < np.log(256) * 0.95
