@@ -1,0 +1,18 @@
+# Developer entry points.  PYTHONPATH is injected so no install is needed.
+PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
+
+.PHONY: test smoke quickstart serve-demo bench
+
+test:        ## tier-1: the full pytest suite
+	$(PY) -m pytest -x -q
+
+quickstart:  ## end-to-end quantize/serve example
+	$(PY) examples/quickstart.py
+
+smoke: test quickstart  ## tier-1 tests + quickstart example
+
+serve-demo:  ## continuous-batching demo across quantization schemes
+	$(PY) examples/serve_quantized.py
+
+bench:       ## all paper benchmarks + serve throughput
+	$(PY) -m benchmarks.run

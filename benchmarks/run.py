@@ -7,6 +7,7 @@ One benchmark per paper table/figure:
   fig8     fixed-point speedup (CPU + TPU model)   (paper Fig. 8)
   table45  per-format hardware cost model          (paper Tables 4/5)
   kernels  per-kernel microbench
+  serve    continuous-batching throughput + pool occupancy
   roofline dry-run roofline table (reads experiments/dryrun/)
 """
 from __future__ import annotations
@@ -16,7 +17,7 @@ import sys
 
 def main(argv=None):
     names = (argv if argv is not None else sys.argv[1:]) or [
-        "table3", "fig8", "table45", "kernels", "table2", "fig10",
+        "table3", "fig8", "table45", "kernels", "serve", "table2", "fig10",
         "roofline"]
     results = {}
     for name in names:
@@ -32,6 +33,8 @@ def main(argv=None):
             from . import table45_hw_cost as m
         elif name == "kernels":
             from . import kernels_bench as m
+        elif name == "serve":
+            from . import serve_throughput as m
         elif name == "roofline":
             from . import roofline_table as m
         else:

@@ -95,6 +95,85 @@ def update_quant_kv(q: dict, new: jnp.ndarray, slot, *, axis: int,
 
 
 # ---------------------------------------------------------------------------
+# paged layout: pool pages of the same wire format
+# ---------------------------------------------------------------------------
+#
+# A paged pool stores a leaf as (n_pages, page_size, KV, D) — or its wire
+# dict with (n_pages, page_size, KV, D/cpb) packed codes — instead of one
+# contiguous (B, T, KV, D) buffer.  A request owns an ordered list of pages
+# (its page table); page p of the table holds absolute token positions
+# [p*page_size, (p+1)*page_size).  Page 0 is reserved as a scratch page:
+# padded table entries and inactive batch slots read/write it, and the
+# masking in decode_attention guarantees scratch garbage never reaches a
+# real output.  Packing is along the head dim, so page_size is independent
+# of kv_bits; every page is page_size * KV * (D*bits/8 + 8*D/group) bytes.
+
+def make_paged_kv(n_pages: int, page_size: int, kv_heads: int, head_dim: int,
+                  bits: int | None = None, group_size: int = 64,
+                  dtype=jnp.float32):
+    """One pool leaf: fp array or wire dict with (n_pages, page_size) lead."""
+    shape = (n_pages, page_size, kv_heads, head_dim)
+    if bits is None:
+        return jnp.zeros(shape, dtype)
+    return make_quant_kv(shape, bits, group_size)
+
+
+def gather_pages(leaf, page_table: jnp.ndarray):
+    """Gather a (B, P) page table into logical (B, P*page_size, ...) views.
+
+    Works on fp leaves and wire dicts alike (a wire dict is a pytree of
+    arrays whose page dims match).  Row order in the gathered view is the
+    page-table order, so with in-order tables position t of request b lives
+    at gathered index t.
+    """
+    def g(a):
+        out = a[page_table]
+        return out.reshape(page_table.shape[0], -1, *a.shape[2:])
+    return jax.tree.map(g, leaf)
+
+
+def scatter_token(leaf, new: jnp.ndarray, page_idx, row, *,
+                  bits: int | None = None, group_size: int | None = None):
+    """Write one token per batch row into its page.
+
+    ``new`` is fp (B, 1, KV, D); ``page_idx``/``row`` are (B,) physical page
+    ids and in-page rows.  Rows of inactive slots should point at the
+    scratch page (duplicate scratch writes are unordered, which is fine —
+    the scratch page is never read unmasked).
+    """
+    if is_quant_kv(leaf):
+        wire = quantize_kv(new, bits, group_size)
+        return jax.tree.map(
+            lambda a, w: a.at[page_idx, row].set(w[:, 0].astype(a.dtype)),
+            leaf, wire)
+    return leaf.at[page_idx, row].set(new[:, 0].astype(leaf.dtype))
+
+
+def scatter_prefill(leaf, contig, page_ids: jnp.ndarray, *,
+                    stacked: bool = False):
+    """Copy a B=1 contiguous prefill cache into pool pages.
+
+    ``contig`` is the (S, 1, T, ...) (stacked=True) or (1, T, ...) leaf from
+    a contiguous prefill; T must equal len(page_ids) * page_size.  Pages the
+    request does not own map to the scratch page in ``page_ids``.
+    """
+    def s(pl, cl):
+        if stacked:
+            ps = pl.shape[2]
+            c = cl.reshape(cl.shape[0], -1, ps, *cl.shape[3:])
+            return pl.at[:, page_ids].set(c.astype(pl.dtype))
+        ps = pl.shape[1]
+        c = cl.reshape(-1, ps, *cl.shape[2:])
+        return pl.at[page_ids].set(c.astype(pl.dtype))
+    return jax.tree.map(s, leaf, contig)
+
+
+def permute_pages(leaf, perm: jnp.ndarray, *, stacked: bool = False):
+    """Reorder pages (defrag): new page i takes old page perm[i]."""
+    return jax.tree.map(lambda a: a[:, perm] if stacked else a[perm], leaf)
+
+
+# ---------------------------------------------------------------------------
 # SSM state (mamba2): same format, quantized along the state dim N
 # ---------------------------------------------------------------------------
 

@@ -4,6 +4,10 @@ Spins up the batched engine on the reduced config, optionally with the
 paper's quantization applied to weights (--scheme lq4w), activations
 (--a-bits) and the KV cache (--kv-bits), and reports tokens/s plus the
 cache-bytes saving.
+
+``--continuous N`` switches to the continuous-batching serve layer
+(serve/server.py): N requests with staggered arrivals are scheduled over
+the paged quantized KV pool, reporting throughput and pool occupancy.
 """
 from __future__ import annotations
 
@@ -15,7 +19,48 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.models import transformer
-from repro.serve import Engine, EngineConfig
+from repro.serve import (Engine, EngineConfig, PagedConfig, RequestParams,
+                         Server)
+
+
+def _continuous(cfg, params, ecfg, args):
+    """Staggered-arrival continuous batching over the paged pool."""
+    import dataclasses
+    want = args.prompt_len + args.steps + 8
+    mc = -(-want // args.page_size) * args.page_size
+    ecfg = dataclasses.replace(ecfg, max_len=max(ecfg.max_len, mc))
+    pcfg = PagedConfig(max_slots=args.max_slots, page_size=args.page_size,
+                       n_pages=args.n_pages, max_context=mc)
+    server = Server(cfg, params, ecfg, pcfg)
+    rng = jax.random.key(2)
+    warm = jax.random.randint(jax.random.fold_in(rng, args.continuous),
+                              (args.prompt_len,), 0, cfg.vocab_size)
+    server.submit(warm.tolist(), RequestParams(max_new_tokens=2))
+    server.drain()                          # warm both jits off the clock
+    occ, t0 = [], time.perf_counter()
+    rids = []
+    for i in range(args.continuous):
+        prompt = jax.random.randint(jax.random.fold_in(rng, i),
+                                    (args.prompt_len,), 0, cfg.vocab_size)
+        rids.append(server.submit(prompt.tolist(), RequestParams(
+            max_new_tokens=args.steps + 1)))
+        for _ in range(args.arrival_every):      # staggered arrivals
+            server.step()
+            occ.append(server.pool.occupancy())
+    while server.has_work:
+        server.step()
+        occ.append(server.pool.occupancy())
+    dt = time.perf_counter() - t0
+    toks = sum(len(server.output(r)) for r in rids)
+    s = server.stats()
+    print(f"continuous: {len(rids)} requests, {toks} tokens in {dt:.2f}s "
+          f"-> {toks / dt:.1f} tok/s")
+    print(f"pool: {server.pool.n_pages} pages x "
+          f"{server.pool.page_nbytes():,} B, peak occupancy "
+          f"{max(occ):.2f}, mean {sum(occ) / len(occ):.2f}")
+    print(f"decode compilations: {s['decode_compilations']} "
+          f"(1 == no per-step retrace)")
+    print("sample:", server.output(rids[0])[:16])
 
 
 def main():
@@ -29,6 +74,14 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--steps", type=int, default=64)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", type=int, default=0, metavar="N",
+                    help="serve N staggered requests via the paged "
+                         "continuous-batching layer")
+    ap.add_argument("--arrival-every", type=int, default=2,
+                    help="decode steps between request arrivals")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--n-pages", type=int, default=128)
     args = ap.parse_args()
 
     cfg = configs.smoke(args.arch)
@@ -37,6 +90,11 @@ def main():
                         kv_bits=args.kv_bits, kv_group=args.kv_group,
                         weight_scheme=args.scheme, a_bits=args.a_bits,
                         backend="ref", temperature=args.temperature)
+    if args.continuous:
+        print(f"arch={args.arch} scheme={args.scheme} a_bits={args.a_bits} "
+              f"kv_bits={args.kv_bits}")
+        _continuous(cfg, params, ecfg, args)
+        return
     engine = Engine(cfg, params, ecfg)
 
     key = jax.random.key(1)

@@ -278,22 +278,24 @@ def local_attention(q, k, v, *, window: int, lookback: int = 1):
 
 def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None,
                      chunk: int | None = None, key_positions=None):
-    """q (B, 1, KV, G, D); caches (B, S, KV, D); pos scalar int (this token's
-    position).  ``key_positions`` (S,) gives each cache slot's absolute
-    position (ring buffers); default slot s holds position s.  ``window``
-    restricts to a sliding window; ``chunk`` to the current chunk (Llama-4).
+    """q (B, 1, KV, G, D); caches (B, S, KV, D); pos int — scalar, or (B,)
+    for continuous batching where every slot sits at its own position.
+    ``key_positions`` (S,) gives each cache slot's absolute position (ring
+    buffers); default slot s holds position s.  ``window`` restricts to a
+    sliding window; ``chunk`` to the current chunk (Llama-4).
     """
     b, _, kvh, g, d = q.shape
     s_len = k_cache.shape[1]
     spos = jnp.arange(s_len) if key_positions is None else key_positions
-    valid = (spos <= pos) & (spos >= 0)
+    posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
+    valid = (spos[None, :] <= posb[:, None]) & (spos[None, :] >= 0)
     if window is not None:
-        valid &= spos > (pos - window)
+        valid &= spos[None, :] > (posb[:, None] - window)
     if chunk is not None:
-        valid &= spos >= (pos // chunk) * chunk
+        valid &= spos[None, :] >= (posb[:, None] // chunk) * chunk
     s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * (d ** -0.5)
-    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -347,7 +349,7 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
                window: int | None = None, qk_norm: bool = False,
                rope: bool = True, rope_theta: float = 1e4,
                positions=None, kv_src=None, cache=None, cache_pos=None,
-               policy: QuantPolicy = NO_QUANT):
+               page_table=None, policy: QuantPolicy = NO_QUANT):
     """One attention block.
 
     kind: 'full' | 'local' (sliding window) | 'chunked' (within-chunk) |
@@ -355,6 +357,11 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
     cache: None (train/prefill-no-cache) or dict(k=(B,S,KV,D), v=...) --
       * decode: x has L==1, cache_pos is this token's position scalar;
       * prefill-into-cache: L>1 writes [0:L) and attends within x.
+    page_table: (B, P) int32 physical page ids — paged decode.  cache leaves
+      then carry a shared (n_pages, page_size, KV, ...) pool instead of a
+      per-request (B, S, KV, ...) buffer, cache_pos is a (B,) per-slot
+      position vector, and the step writes this token's K/V into its page
+      before attending over the gathered page views (kind 'full' only).
     Returns (out, new_cache).
     """
     b, l, _ = x.shape
@@ -376,7 +383,31 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
         qbits, qgroup = kvcache._infer(
             cache["k"]["packed"].shape[-1], head_dim,
             cache["k"]["scale"].shape[-1])
-    if cache is not None and kind != "cross":
+    if cache is not None and kind != "cross" and page_table is not None:
+        if kind != "full" or l != 1:
+            raise ValueError("paged cache supports single-token decode of "
+                             "'full' attention only")
+        page_size = (cache["k"]["packed"] if quant else cache["k"]).shape[1]
+        page_idx = jnp.take_along_axis(
+            page_table, (cache_pos // page_size)[:, None], axis=1)[:, 0]
+        row = cache_pos % page_size
+        if quant:
+            qk = kvcache.scatter_token(cache["k"], k, page_idx, row,
+                                       bits=qbits, group_size=qgroup)
+            qv = kvcache.scatter_token(cache["v"], v, page_idx, row,
+                                       bits=qbits, group_size=qgroup)
+            k_cache = kvcache.dequantize_kv(
+                kvcache.gather_pages(qk, page_table), head_dim, q.dtype)
+            v_cache = kvcache.dequantize_kv(
+                kvcache.gather_pages(qv, page_table), head_dim, q.dtype)
+        else:
+            qk = kvcache.scatter_token(cache["k"], k, page_idx, row)
+            qv = kvcache.scatter_token(cache["v"], v, page_idx, row)
+            k_cache = kvcache.gather_pages(qk, page_table)
+            v_cache = kvcache.gather_pages(qv, page_table)
+        new_cache = {"k": qk, "v": qv}
+        out = decode_attention(q, k_cache, v_cache, cache_pos)
+    elif cache is not None and kind != "cross":
         s_len = (cache["k"]["packed"] if quant else cache["k"]).shape[1]
         if l == 1:  # decode step
             slot = cache_pos % s_len if ring else cache_pos

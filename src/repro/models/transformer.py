@@ -15,6 +15,8 @@ Public surface:
           policy)                        -> (logits, cache)
   decode_step(params, cfg, tokens, cache,
               policy)                    -> (logits, cache)
+  paged_decode_step(params, cfg, tokens, pages,
+                    page_table, pos, policy) -> (logits, pages)
   quantize_params(params, cfg, qcfg)     -> params with QWeight leaves
 """
 from __future__ import annotations
@@ -101,7 +103,8 @@ def _attn_kind(mixer: str):
 
 
 def block_apply(p, x, spec, cfg: ModelConfig, *, policy: QuantPolicy,
-                cache=None, cache_pos=None, enc_out=None, positions=None):
+                cache=None, cache_pos=None, enc_out=None, positions=None,
+                page_table=None):
     """Returns (x, new_cache, aux)."""
     mixer, ffn = spec
     aux = jnp.zeros((), jnp.float32)
@@ -117,7 +120,7 @@ def block_apply(p, x, spec, cfg: ModelConfig, *, policy: QuantPolicy,
             head_dim=cfg.head_dim, kind=kind, causal=causal, window=window,
             qk_norm=cfg.qk_norm, rope=cfg.rope, rope_theta=cfg.rope_theta,
             positions=positions, cache=self_cache, cache_pos=cache_pos,
-            policy=policy)
+            page_table=page_table, policy=policy)
         if cache is not None:
             new_cache["self"] = sc
     elif mixer == "mamba2":
@@ -253,7 +256,8 @@ def _maybe_remat(fn, cfg: ModelConfig, training: bool):
 
 def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
                  policy: QuantPolicy, caches=None, cache_pos=None,
-                 enc_out=None, positions=None, training=False):
+                 enc_out=None, positions=None, page_table=None,
+                 training=False):
     """Run scan-stacked superblocks + tail.  Returns (x, caches, aux)."""
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -266,7 +270,8 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
             xx, nc, aux = block_apply(blk_params[j], xx, spec, cfg,
                                       policy=policy, cache=cj,
                                       cache_pos=cache_pos, enc_out=enc_out,
-                                      positions=positions)
+                                      positions=positions,
+                                      page_table=page_table)
             xx = constrain(xx, "batch", "seq", "embed")
             new_caches.append(nc)
         out_caches = tuple(new_caches) if blk_caches is not None else None
@@ -286,7 +291,7 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
         ct = caches["tail"][t] if caches is not None else None
         x, nc, aux = block_apply(tp, x, spec, cfg, policy=policy, cache=ct,
                                  cache_pos=cache_pos, enc_out=enc_out,
-                                 positions=positions)
+                                 positions=positions, page_table=page_table)
         aux_total = aux_total + aux
         new_tail.append(nc)
 
@@ -409,8 +414,14 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, *,
-            policy: QuantPolicy = NO_QUANT):
-    """Process the prompt, filling the cache.  Returns (logits_last, cache)."""
+            policy: QuantPolicy = NO_QUANT, logits_pos=None):
+    """Process the prompt, filling the cache.  Returns (logits_last, cache).
+
+    ``logits_pos`` (traced scalar) selects which position's logits to
+    return instead of the last — right-padded prompts (continuous-batching
+    prefill buckets) read logits at their true last token; causal masking
+    makes positions < logits_pos independent of the pad tail.
+    """
     enc_out = None
     if cfg.n_enc_layers:
         enc_out = encode(params, cfg, batch["frames"], policy=policy)
@@ -423,7 +434,11 @@ def prefill(params, cfg: ModelConfig, batch, cache, *,
         params["decoder"], x, cfg, cfg.pattern, policy=policy,
         caches={"super": cache["super"], "tail": cache["tail"]},
         cache_pos=None, enc_out=enc_out, positions=None)
-    x = _norm_apply(cfg, params["final_norm"], x[:, -1:])
+    if logits_pos is None:
+        x = x[:, -1:]
+    else:
+        x = jax.lax.dynamic_slice_in_dim(x, logits_pos, 1, axis=1)
+    x = _norm_apply(cfg, params["final_norm"], x)
     logits = _logits(params, cfg, x, policy)
     new_caches["pos"] = jnp.asarray(l, jnp.int32)
     return logits, new_caches
@@ -445,6 +460,32 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
     logits = _logits(params, cfg, x, policy)
     new_caches["pos"] = pos + 1
     return logits, new_caches
+
+
+def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
+                      pos, *, policy: QuantPolicy = NO_QUANT):
+    """One continuous-batching decode step over a paged KV pool.
+
+    tokens (B, 1) int32; pages {'super': ..., 'tail': ...} with shared
+    (n_pages, page_size, KV, ...) leaves per layer; page_table (B, P) int32
+    physical page ids per slot (scratch page 0 pads unused entries); pos
+    (B,) int32 — the absolute position each slot's token is written at.
+    Inactive slots point at the scratch page and are masked by the caller.
+    Returns (logits (B, 1, V), new pages).
+    """
+    if cfg.pos_embed == "learned":
+        raise ValueError("paged decode needs per-slot positions; learned "
+                         "positional embeddings are not supported")
+    x = layers.embed_apply(params["embed"], tokens)
+    x = x.astype(cfg.activation_dtype)
+    x, new_pages, _ = _stack_apply(
+        params["decoder"], x, cfg, cfg.pattern, policy=policy,
+        caches={"super": pages["super"], "tail": pages["tail"]},
+        cache_pos=pos, enc_out=None, positions=pos[:, None],
+        page_table=page_table)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x, policy)
+    return logits, new_pages
 
 
 # ---------------------------------------------------------------------------

@@ -21,11 +21,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import kvwire, schemes
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import QuantPolicy, NO_QUANT
+from repro.serve.pool import PagedKVPool
 
 
 def greedy_sample(logits, key):
@@ -109,3 +111,120 @@ class Engine:
         """HBM bytes of the decode cache (the kv_bits win, measurable)."""
         return kvwire.cache_nbytes(jax.eval_shape(
             lambda: self.init_cache(batch)))
+
+
+# ---------------------------------------------------------------------------
+# paged engine: prefill/decode against a shared page pool
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PagedConfig:
+    """Geometry of the continuous-batching serve cell.
+
+    max_context bounds prompt + generation per request and fixes the static
+    shapes: the prefill bucket is max_context tokens and every decode step
+    gathers max_context // page_size pages per slot.  n_pages counts
+    physical pages including the reserved scratch page 0.
+    """
+    max_slots: int = 4
+    page_size: int = 16
+    n_pages: int = 64
+    max_context: int = 256
+
+    def __post_init__(self):
+        if self.max_context % self.page_size:
+            raise ValueError("max_context must be a multiple of page_size")
+
+    @property
+    def pages_per_slot(self) -> int:
+        return self.max_context // self.page_size
+
+
+class PagedEngine(Engine):
+    """Engine whose prefill/decode operate on gathered page views.
+
+    Prefill runs one request (B=1) through the contiguous path on a
+    fixed-size right-padded bucket, then scatters the bucket's wire cache
+    into the request's pages — one jit for every prompt length.  Decode
+    advances all max_slots slots in a single jit (static shapes; inactive
+    slots are padded onto the scratch page and masked), with each layer
+    gathering its slot page views from the shared pool.
+    """
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 pcfg: PagedConfig):
+        super().__init__(cfg, params, ecfg)
+        if pcfg.max_context > ecfg.max_len:
+            raise ValueError("pcfg.max_context exceeds ecfg.max_len")
+        self.pcfg = pcfg
+        self._kvq = ((ecfg.kv_bits, ecfg.kv_group)
+                     if ecfg.kv_bits is not None else None)
+        self._prefill_paged = jax.jit(self._prefill_paged_impl)
+        self._step_paged = jax.jit(self._step_paged_impl)
+
+    def new_pool(self) -> PagedKVPool:
+        return PagedKVPool(self.cfg, n_pages=self.pcfg.n_pages,
+                           page_size=self.pcfg.page_size,
+                           kv_bits=self.ecfg.kv_bits,
+                           kv_group=self.ecfg.kv_group)
+
+    # ------------------------------------------------------------- jitted
+    def _scatter_bucket(self, pages, cache, page_ids):
+        sup = tuple(kvwire.scatter_prefill(pages["super"][j],
+                                           cache["super"][j], page_ids,
+                                           stacked=True)
+                    for j in range(len(pages["super"])))
+        tail = [kvwire.scatter_prefill(pages["tail"][t], cache["tail"][t],
+                                       page_ids)
+                for t in range(len(pages["tail"]))]
+        return {"super": sup, "tail": tail}
+
+    def _prefill_paged_impl(self, params, tokens, pages, page_ids,
+                            logits_pos, key):
+        cache = transformer.init_cache(self.cfg, 1, self.pcfg.max_context,
+                                       kv_quant=self._kvq)
+        logits, cache = transformer.prefill(
+            params, self.cfg, {"tokens": tokens}, cache, policy=self.policy,
+            logits_pos=logits_pos)
+        pages = self._scatter_bucket(
+            pages, {"super": cache["super"], "tail": cache["tail"]},
+            page_ids)
+        return self._sample(logits[:, -1], key), pages
+
+    def _step_paged_impl(self, params, pages, tokens, page_table, pos, key):
+        logits, pages = transformer.paged_decode_step(
+            params, self.cfg, tokens[:, None], pages, page_table, pos,
+            policy=self.policy)
+        return self._sample(logits[:, -1], key), pages
+
+    # --------------------------------------------------------------- host
+    def prefill_request(self, pool: PagedKVPool, tokens, page_ids,
+                        key) -> int:
+        """Prefill one request into its pages; returns the sampled first
+        continuation token.  ``tokens`` is the (unpadded) int prompt."""
+        bucket = self.pcfg.max_context
+        if len(tokens) > bucket:
+            raise ValueError(f"prompt len {len(tokens)} > bucket {bucket}")
+        padded = np.zeros((1, bucket), np.int32)
+        padded[0, :len(tokens)] = tokens
+        ids = np.zeros((self.pcfg.pages_per_slot,), np.int32)
+        ids[:len(page_ids)] = page_ids
+        tok, pool.pages = self._prefill_paged(
+            self.params, jnp.asarray(padded), pool.pages, jnp.asarray(ids),
+            jnp.asarray(len(tokens) - 1, jnp.int32), key)
+        return int(tok[0])
+
+    def decode_step_batch(self, pool: PagedKVPool, tokens, page_table, pos,
+                          key) -> np.ndarray:
+        """Advance every slot one token.  tokens/pos (max_slots,),
+        page_table (max_slots, pages_per_slot).  Returns sampled tokens."""
+        toks, pool.pages = self._step_paged(
+            self.params, pool.pages, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_table, jnp.int32), jnp.asarray(pos, jnp.int32),
+            key)
+        return np.asarray(toks)
+
+    @property
+    def decode_compilations(self) -> int:
+        """Distinct decode-step traces (1 == no per-step retrace)."""
+        return self._step_paged._cache_size()

@@ -2,14 +2,22 @@
 
 The format itself lives in :mod:`repro.core.kvwire` (it is the paper's
 local-quantization-region format applied to cached tensors); model code
-imports it from core to avoid serve<->models import cycles.
+imports it from core to avoid serve<->models import cycles.  The paged
+layout helpers (gather_pages / scatter_token / scatter_prefill /
+permute_pages) are the device half of the continuous-batching pool in
+:mod:`repro.serve.pool` — prefill and decode operate on gathered page
+views rather than one monolithic (B, T, ...) cache.
 """
 from repro.core.kvwire import (quantize_kv, dequantize_kv, make_quant_kv,
                                update_quant_kv, is_quant_kv, kv_bits_of,
+                               make_paged_kv, gather_pages, scatter_token,
+                               scatter_prefill, permute_pages,
                                quantize_state, dequantize_state,
                                is_quant_state, cache_nbytes, _infer)
 
 __all__ = ["quantize_kv", "dequantize_kv", "make_quant_kv",
            "update_quant_kv", "is_quant_kv", "kv_bits_of",
+           "make_paged_kv", "gather_pages", "scatter_token",
+           "scatter_prefill", "permute_pages",
            "quantize_state", "dequantize_state", "is_quant_state",
            "cache_nbytes"]

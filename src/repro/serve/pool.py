@@ -1,0 +1,149 @@
+"""Paged KV-cache pool: block storage for the quantized wire format.
+
+The pool owns every layer's K/V storage as shared page arrays —
+``(n_super, n_pages, page_size, KV, ...)`` for scan-stacked superblock
+positions, ``(n_pages, page_size, KV, ...)`` for the unscanned tail — in
+the LQ wire format when ``kv_bits`` is set (core/kvwire.py) or fp
+otherwise.  Requests own ordered page lists (page tables); the device-side
+gather/scatter lives in core/kvwire.py and models/attention.py; this class
+is the host-side allocator: alloc/free/defrag plus accounting.
+
+Page 0 is reserved as a scratch page.  Padded page-table entries and
+inactive decode slots read and write it; decode masking guarantees its
+garbage never reaches a real output.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kvwire
+from repro.models.config import ModelConfig
+
+
+def _check_paged_support(cfg: ModelConfig):
+    for mixer, _ in cfg.pattern:
+        if mixer != "attn":
+            raise ValueError(
+                f"paged KV pool supports full-attention decoders only; "
+                f"mixer {mixer!r} needs the contiguous Engine path")
+    if cfg.n_enc_layers:
+        raise ValueError("paged serving does not support encoder-decoder")
+    if cfg.frontend != "none":
+        raise ValueError("paged serving does not support modality frontends")
+    if cfg.pos_embed == "learned":
+        raise ValueError("paged serving needs rope (per-slot positions)")
+
+
+class PagedKVPool:
+    """Block/paged KV storage + host-side page allocator.
+
+    n_pages counts physical pages including the reserved scratch page 0, so
+    ``n_pages - 1`` pages are allocatable.  ``kv_bits`` in {8, 4, 2, 1}
+    stores pages in the packed wire format; packing is along head_dim, so
+    page_size is independent of kv_bits (see serve/README.md).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
+                 kv_bits: int | None = None, kv_group: int = 64, dtype=None):
+        _check_paged_support(cfg)
+        if n_pages < 2:
+            raise ValueError("need at least one allocatable page + scratch")
+        if kv_bits is not None and cfg.head_dim % kv_group:
+            raise ValueError(f"head_dim={cfg.head_dim} not divisible by "
+                             f"kv_group={kv_group}")
+        self.cfg = cfg
+        self.n_pages, self.page_size = n_pages, page_size
+        self.kv_bits, self.kv_group = kv_bits, kv_group
+        dtype = dtype or cfg.activation_dtype
+
+        def leaf(stack: int | None):
+            one = kvwire.make_paged_kv(n_pages, page_size, cfg.n_kv_heads,
+                                       cfg.head_dim, kv_bits, kv_group, dtype)
+            if stack is None:
+                return one
+            return jax.tree.map(
+                lambda a: jnp.zeros((stack,) + a.shape, a.dtype), one)
+
+        sup = tuple({"self": {"k": leaf(cfg.n_super), "v": leaf(cfg.n_super)}}
+                    for _ in cfg.pattern)
+        tail = [{"self": {"k": leaf(None), "v": leaf(None)}}
+                for _ in range(cfg.n_tail)]
+        self.pages = {"super": sup, "tail": tail}
+        self._permute = jax.jit(lambda pages, perm: {
+            "super": kvwire.permute_pages(pages["super"], perm, stacked=True),
+            "tail": kvwire.permute_pages(pages["tail"], perm)})
+
+        self._free = list(range(n_pages - 1, 0, -1))   # LIFO free list
+        self.page_tables: dict[int, list[int]] = {}    # rid -> ordered pages
+
+    # ---------------------------------------------------------- allocator
+    @property
+    def n_allocatable(self) -> int:
+        return self.n_pages - 1
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_allocated(self) -> int:
+        return self.n_allocatable - self.n_free
+
+    def occupancy(self) -> float:
+        return self.n_allocated / self.n_allocatable
+
+    def alloc(self, rid: int, n: int = 1) -> bool:
+        """Append n pages to rid's table; all-or-nothing on exhaustion."""
+        if n > len(self._free):
+            return False
+        got = [self._free.pop() for _ in range(n)]
+        self.page_tables.setdefault(rid, []).extend(got)
+        return True
+
+    def free(self, rid: int) -> int:
+        """Release every page owned by rid; returns how many."""
+        pages = self.page_tables.pop(rid, [])
+        self._free.extend(reversed(pages))
+        return len(pages)
+
+    def pages_of(self, rid: int) -> list[int]:
+        return list(self.page_tables.get(rid, []))
+
+    def table_array(self, rid: int, max_pages: int) -> np.ndarray:
+        """rid's page table as (max_pages,) int32, scratch-padded."""
+        tbl = self.page_tables.get(rid, [])
+        out = np.zeros((max_pages,), np.int32)
+        out[:len(tbl)] = tbl
+        return out
+
+    # ------------------------------------------------------------- defrag
+    def defrag(self) -> dict[int, int]:
+        """Compact allocated pages into [1, n_allocated], preserving each
+        request's page order.  Rewrites page tables and physically permutes
+        the pool (jitted gather).  Returns the old->new page mapping."""
+        perm = np.empty((self.n_pages,), np.int32)
+        perm[0] = 0
+        mapping: dict[int, int] = {}
+        nxt = 1
+        for rid, tbl in self.page_tables.items():
+            for old in tbl:
+                mapping[old] = nxt
+                perm[nxt] = old
+                nxt += 1
+        leftovers = [p for p in range(1, self.n_pages) if p not in mapping]
+        perm[nxt:] = leftovers
+        self.pages = self._permute(self.pages, jnp.asarray(perm))
+        self.page_tables = {rid: [mapping[p] for p in tbl]
+                            for rid, tbl in self.page_tables.items()}
+        self._free = list(range(self.n_pages - 1, nxt - 1, -1))
+        return mapping
+
+    # --------------------------------------------------------- accounting
+    def nbytes(self) -> int:
+        return kvwire.cache_nbytes(self.pages)
+
+    def page_nbytes(self) -> int:
+        """Bytes of one page across all layers."""
+        return self.nbytes() // self.n_pages

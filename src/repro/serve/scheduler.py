@@ -1,0 +1,253 @@
+"""Continuous-batching request scheduler over the paged engine.
+
+Lifecycle (see serve/README.md): submit -> QUEUED -> (admit: prefill into
+freshly allocated pages, take a decode slot) -> RUNNING -> interleaved
+decode steps with every other in-flight request -> COMPLETE.  Admission is
+FCFS within a priority lane, higher lanes first.  When the page pool is
+exhausted mid-decode the scheduler preempts the lowest-priority,
+latest-arrived victim (recompute-style: its pages are freed and it
+re-queues at the front of its lane; on re-admission its prompt + generated
+prefix is re-prefilled and decoding resumes from its last token).
+
+With an fp KV cache, preempt/resume is bit-exact.  With a quantized cache
+the re-prefilled prefix is attended at full precision during the resume
+prefill only, so a resumed continuation may deviate from the uninterrupted
+run — the same trade vLLM's recompute preemption makes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.serve.engine import PagedEngine
+from repro.serve.pool import PagedKVPool
+
+QUEUED, RUNNING, COMPLETE = "queued", "running", "complete"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int
+    priority: int = 0
+    on_token: Callable[[int, int], None] | None = None   # (rid, token)
+    generated: list[int] = dataclasses.field(default_factory=list)
+    state: str = QUEUED
+    n_preemptions: int = 0
+    arrival: int = 0          # submit order; FCFS tiebreak + victim choice
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    tokens: tuple[int, ...]
+    n_preemptions: int
+
+
+class Scheduler:
+    """Admits a stream of requests and interleaves their decode steps."""
+
+    def __init__(self, engine: PagedEngine, pool: PagedKVPool, *,
+                 on_token=None, on_complete=None, seed: int = 0):
+        self.engine, self.pool = engine, pool
+        self.pcfg = engine.pcfg
+        self.on_token, self.on_complete = on_token, on_complete
+        self._lanes: dict[int, deque[Request]] = {}
+        self._requests: dict[int, Request] = {}
+        self._slots: list[Request | None] = [None] * self.pcfg.max_slots
+        self._pos = np.zeros((self.pcfg.max_slots,), np.int32)
+        self._last_tok = np.zeros((self.pcfg.max_slots,), np.int32)
+        self._next_rid = 0
+        self._decode_steps = 0
+        self._key_folds = 0
+        self._key = jax.random.key(seed)
+
+    # ------------------------------------------------------------- submit
+    def submit(self, prompt, *, max_new_tokens: int = 16, priority: int = 0,
+               on_token=None) -> int:
+        prompt = [int(t) for t in prompt]
+        if not prompt:
+            raise ValueError("empty prompt")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        total = len(prompt) + max_new_tokens
+        if total > self.pcfg.max_context:
+            raise ValueError(f"prompt+max_new_tokens={total} exceeds "
+                             f"max_context={self.pcfg.max_context}")
+        need = -(-total // self.pcfg.page_size)
+        if need > self.pool.n_allocatable:
+            raise ValueError("request needs more pages than the pool holds")
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid, prompt, max_new_tokens, priority=priority,
+                      on_token=on_token, arrival=rid)
+        self._requests[rid] = req
+        self._lanes.setdefault(priority, deque()).append(req)
+        return rid
+
+    # -------------------------------------------------------------- state
+    @property
+    def has_work(self) -> bool:
+        return any(self._lanes.values()) or any(
+            r is not None for r in self._slots)
+
+    def active_requests(self) -> list[Request]:
+        return [r for r in self._slots if r is not None]
+
+    def queued_requests(self) -> list[Request]:
+        return [r for lane in self._lanes.values() for r in lane]
+
+    def stats(self) -> dict:
+        return {"active": len(self.active_requests()),
+                "queued": len(self.queued_requests()),
+                "pool_occupancy": self.pool.occupancy(),
+                "steps": self._decode_steps}
+
+    def request(self, rid: int) -> Request:
+        return self._requests[rid]
+
+    # ------------------------------------------------------------ helpers
+    def _emit(self, req: Request, tok: int):
+        req.generated.append(tok)
+        if req.on_token:
+            req.on_token(req.rid, tok)
+        if self.on_token:
+            self.on_token(req.rid, tok)
+
+    def _finish(self, req: Request, slot: int | None,
+                events: list[Completion]):
+        if slot is not None:
+            self._slots[slot] = None
+        self.pool.free(req.rid)
+        req.state = COMPLETE
+        done = Completion(req.rid, tuple(req.generated), req.n_preemptions)
+        events.append(done)
+        if self.on_complete:
+            self.on_complete(done)
+
+    def _next_queued(self) -> Request | None:
+        for prio in sorted(self._lanes, reverse=True):
+            if self._lanes[prio]:
+                return self._lanes[prio].popleft()
+        return None
+
+    def _requeue_front(self, req: Request):
+        self._lanes.setdefault(req.priority, deque()).appendleft(req)
+
+    def _fold_key(self):
+        self._key_folds += 1
+        return jax.random.fold_in(self._key, self._key_folds)
+
+    # -------------------------------------------------------------- admit
+    def _admit(self, events: list[Completion]):
+        while None in self._slots:
+            req = self._next_queued()
+            if req is None:
+                return
+            resume = bool(req.generated)
+            # resume re-prefills prompt + generated[:-1]; the last generated
+            # token is re-fed through the decode step so the continuation
+            # samples from the same (quantized-cache) attention as an
+            # uninterrupted run.
+            tokens = req.prompt + req.generated[:-1]
+            need = -(-len(tokens) // self.pcfg.page_size)
+            if not self.pool.alloc(req.rid, need):
+                self._requeue_front(req)
+                return
+            first = self.engine.prefill_request(
+                self.pool, tokens, self.pool.pages_of(req.rid),
+                self._fold_key())
+            slot = self._slots.index(None)
+            req.state = RUNNING
+            if resume:
+                tok = req.generated[-1]
+            else:
+                tok = first
+                self._emit(req, tok)
+                if len(req.generated) >= req.max_new_tokens:
+                    self._finish(req, None, events)
+                    continue
+            self._slots[slot] = req
+            self._pos[slot] = len(tokens)
+            self._last_tok[slot] = tok
+
+    # ------------------------------------------------------------ preempt
+    def _preempt_victim(self) -> bool:
+        """Evict the lowest-priority, latest-arrived running request."""
+        victims = [(r.priority, -r.arrival, i)
+                   for i, r in enumerate(self._slots) if r is not None]
+        if not victims:
+            return False
+        _, _, slot = min(victims)
+        req = self._slots[slot]
+        self._slots[slot] = None
+        self.pool.free(req.rid)
+        req.state = QUEUED
+        req.n_preemptions += 1
+        self._requeue_front(req)
+        return True
+
+    def _ensure_pages(self):
+        """Every active slot needs the page covering the position it is
+        about to write; preempt on exhaustion."""
+        for slot, req in enumerate(self._slots):
+            if req is None:
+                continue
+            need_idx = int(self._pos[slot]) // self.pcfg.page_size
+            while need_idx >= len(self.pool.pages_of(req.rid)):
+                if self.pool.alloc(req.rid, 1):
+                    break
+                active = [r for r in self._slots if r is not None]
+                if len(active) <= 1:
+                    raise RuntimeError(
+                        "page pool exhausted with a single request in "
+                        "flight; increase n_pages")
+                self._preempt_victim()
+                if self._slots[slot] is None:   # the victim was this slot
+                    break
+
+    # ---------------------------------------------------------------- step
+    def step(self) -> list[Completion]:
+        """Admit what fits, then advance every in-flight request one token."""
+        events: list[Completion] = []
+        self._admit(events)
+        self._ensure_pages()
+        active = [i for i, r in enumerate(self._slots) if r is not None]
+        if not active:
+            return events
+
+        table = np.zeros((self.pcfg.max_slots, self.pcfg.pages_per_slot),
+                         np.int32)
+        for i in active:
+            table[i] = self.pool.table_array(self._slots[i].rid,
+                                             self.pcfg.pages_per_slot)
+        pos = np.where([r is not None for r in self._slots], self._pos, 0)
+        toks = self.engine.decode_step_batch(
+            self.pool, self._last_tok, table, pos.astype(np.int32),
+            self._fold_key())
+        self._decode_steps += 1
+
+        for i in active:
+            req = self._slots[i]
+            tok = int(toks[i])
+            self._pos[i] += 1
+            self._last_tok[i] = tok
+            self._emit(req, tok)
+            if len(req.generated) >= req.max_new_tokens:
+                self._finish(req, i, events)
+        return events
+
+    def drain(self, max_steps: int | None = None) -> dict[int, list[int]]:
+        """Run until every submitted request completes."""
+        steps = 0
+        while self.has_work:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError("drain exceeded max_steps")
+        return {rid: list(r.generated) for rid, r in self._requests.items()}

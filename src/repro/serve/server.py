@@ -1,0 +1,68 @@
+"""Synchronous-loop serving front end over the continuous-batching stack.
+
+    server = Server(cfg, params, ecfg, pcfg)
+    rid = server.submit(prompt, RequestParams(max_new_tokens=32))
+    while server.has_work:
+        server.step()          # or: server.drain()
+
+``step()`` advances the whole cell one decode step (admitting whatever
+fits first) and returns the completions it produced.  Token streaming is
+push-based: per-request ``on_token`` callbacks fire as tokens are sampled,
+global ``on_token``/``on_complete`` callbacks observe every request.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+from repro.serve.engine import EngineConfig, PagedConfig, PagedEngine
+from repro.serve.scheduler import Completion, Scheduler
+
+
+@dataclasses.dataclass(frozen=True)
+class RequestParams:
+    """Per-request sampling/scheduling parameters."""
+    max_new_tokens: int = 16
+    priority: int = 0
+
+
+class Server:
+    """Owns the paged engine, the page pool, and the scheduler."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
+                 pcfg: PagedConfig, *, on_token=None, on_complete=None,
+                 seed: int = 0):
+        self.engine = PagedEngine(cfg, params, ecfg, pcfg)
+        self.pool = self.engine.new_pool()
+        self.scheduler = Scheduler(self.engine, self.pool,
+                                   on_token=on_token,
+                                   on_complete=on_complete, seed=seed)
+
+    # ------------------------------------------------------------- public
+    def submit(self, prompt, params: RequestParams = RequestParams(), *,
+               on_token=None) -> int:
+        """Enqueue a request; returns its request id immediately."""
+        return self.scheduler.submit(
+            prompt, max_new_tokens=params.max_new_tokens,
+            priority=params.priority, on_token=on_token)
+
+    def step(self) -> list[Completion]:
+        """Advance every in-flight request by one token."""
+        return self.scheduler.step()
+
+    def drain(self, max_steps: int | None = None) -> dict[int, list[int]]:
+        """Run to quiescence; returns {rid: generated tokens}."""
+        return self.scheduler.drain(max_steps=max_steps)
+
+    @property
+    def has_work(self) -> bool:
+        return self.scheduler.has_work
+
+    def output(self, rid: int) -> list[int]:
+        return list(self.scheduler.request(rid).generated)
+
+    def stats(self) -> dict:
+        s = self.scheduler.stats()
+        s["pool_bytes"] = self.pool.nbytes()
+        s["decode_compilations"] = self.engine.decode_compilations
+        return s

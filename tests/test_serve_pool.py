@@ -1,0 +1,242 @@
+"""Continuous-batching serve layer: pool invariants, scheduler fairness /
+preemption, and end-to-end parity with the solo engine."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import kvwire
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.serve import (Engine, EngineConfig, PagedConfig, PagedKVPool,
+                         RequestParams, Server)
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                   vocab_size=256, n_heads=4, n_kv_heads=2, head_dim=16,
+                   d_ff=128, dtype="float32", remat="none")
+
+
+@pytest.fixture(scope="module")
+def params():
+    return transformer.init_params(TINY, jax.random.key(0))
+
+
+def _prompts(seed=1, lens=(7, 12, 5)):
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(0, 256, size=n))) for n in lens]
+
+
+def _solo(params, prompt, n_tokens, **ecfg_kw):
+    eng = Engine(TINY, params, EngineConfig(max_len=32, **ecfg_kw))
+    out, _ = eng.generate({"tokens": jnp.asarray([prompt], jnp.int32)},
+                          steps=n_tokens - 1)
+    return np.asarray(out)[0].tolist()
+
+
+# ---------------------------------------------------------------------------
+# pool: alloc / free / defrag invariants
+# ---------------------------------------------------------------------------
+
+def test_pool_alloc_free_invariants():
+    pool = PagedKVPool(TINY, n_pages=8, page_size=4)
+    assert pool.n_allocatable == 7 and pool.n_free == 7
+    assert pool.alloc(1, 3) and pool.alloc(2, 2)
+    assert pool.n_free == 2 and pool.n_allocated == 5
+    handed = pool.pages_of(1) + pool.pages_of(2)
+    assert 0 not in handed                     # scratch page never allocated
+    assert len(set(handed)) == 5               # no double allocation
+    assert not pool.alloc(3, 3)                # all-or-nothing exhaustion
+    assert pool.n_free == 2                    # failed alloc takes nothing
+    assert pool.free(1) == 3
+    assert pool.n_free == 5
+    assert pool.alloc(3, 5)                    # freed pages are reusable
+    assert pool.free(99) == 0                  # unknown rid is a no-op
+
+
+def test_pool_table_array_padding():
+    pool = PagedKVPool(TINY, n_pages=8, page_size=4)
+    pool.alloc(7, 2)
+    tbl = pool.table_array(7, 5)
+    assert tbl.shape == (5,) and tbl.dtype == np.int32
+    assert list(tbl[:2]) == pool.pages_of(7)
+    assert (tbl[2:] == 0).all()                # scratch-padded tail
+
+
+@pytest.mark.parametrize("kv_bits", [None, 8, 2])
+def test_pool_defrag_preserves_contents(kv_bits):
+    pool = PagedKVPool(TINY, n_pages=10, page_size=4, kv_bits=kv_bits,
+                       kv_group=16)
+    pool.alloc(1, 2), pool.alloc(2, 3), pool.alloc(3, 1)
+    # write recognizable data into request 2's pages (layer pattern pos 0)
+    leaf = pool.pages["super"][0]["self"]["k"]
+    x = jax.random.normal(jax.random.key(0),
+                          (TINY.n_super, 3 * 4, TINY.n_kv_heads,
+                           TINY.head_dim))
+    contig = (x[:, None] if kv_bits is None
+              else kvwire.quantize_kv(x[:, None], kv_bits, 16))
+    ids = jnp.asarray(pool.pages_of(2), jnp.int32)
+    written = kvwire.scatter_prefill(leaf, contig, ids, stacked=True)
+    pool.pages["super"] = (dict(pool.pages["super"][0],
+                                self={"k": written,
+                                      "v": pool.pages["super"][0]["self"]["v"]}),
+                           ) + pool.pages["super"][1:]
+    tbl_before = jnp.asarray([pool.table_array(2, 3)])
+    before = jax.tree.map(lambda a: kvwire.gather_pages(a[0], tbl_before),
+                          written)             # superblock 0's page view
+
+    pool.free(1)                               # leave a hole, then compact
+    mapping = pool.defrag()
+    assert sorted(p for t in pool.page_tables.values() for p in t) == \
+        list(range(1, pool.n_allocated + 1))   # compact, scratch untouched
+    assert len(mapping) == 4                   # covers every allocated page
+    tbl_after = jnp.asarray([pool.table_array(2, 3)])
+    after = jax.tree.map(
+        lambda a: kvwire.gather_pages(a[0], tbl_after),
+        pool.pages["super"][0]["self"]["k"])
+    jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+        np.asarray(a), np.asarray(b)), before, after)
+    assert pool.n_free == pool.n_allocatable - pool.n_allocated
+
+
+def test_pool_rejects_unsupported_archs():
+    ssm = ModelConfig(name="tssm", family="ssm", n_layers=2, d_model=64,
+                      vocab_size=256, d_ff=0, rope=False,
+                      pattern=(("mamba2", "none"),), ssm_state=16,
+                      ssm_head_dim=16, dtype="float32")
+    with pytest.raises(ValueError):
+        PagedKVPool(ssm, n_pages=8, page_size=4)
+
+
+def test_pool_bytes_shrink_with_kv_bits():
+    sizes = [PagedKVPool(TINY, n_pages=16, page_size=8, kv_bits=b,
+                         kv_group=16).nbytes() for b in (None, 8, 4, 2)]
+    assert sizes == sorted(sizes, reverse=True)
+
+
+# ---------------------------------------------------------------------------
+# wire-level paged helpers
+# ---------------------------------------------------------------------------
+
+def test_gather_scatter_token_roundtrip():
+    leaf = kvwire.make_paged_kv(6, 4, 2, 32, bits=8, group_size=16)
+    new = jax.random.normal(jax.random.key(3), (2, 1, 2, 32))
+    # slot 0 -> page 2 row 1 (pos 9, table [1,2]); slot 1 -> page 4 row 0
+    leaf = kvwire.scatter_token(leaf, new, jnp.asarray([2, 4]),
+                                jnp.asarray([1, 0]), bits=8, group_size=16)
+    table = jnp.asarray([[1, 2], [4, 3]], jnp.int32)
+    view = kvwire.dequantize_kv(kvwire.gather_pages(leaf, table), 32)
+    np.testing.assert_allclose(np.asarray(view[0, 5]),
+                               np.asarray(new[0, 0]), rtol=0.05, atol=0.05)
+    np.testing.assert_allclose(np.asarray(view[1, 0]),
+                               np.asarray(new[1, 0]), rtol=0.05, atol=0.05)
+    assert float(jnp.abs(view[0, 0]).max()) == 0      # untouched rows
+
+
+# ---------------------------------------------------------------------------
+# scheduler: fairness, priority lanes, preemption
+# ---------------------------------------------------------------------------
+
+def test_fcfs_completion_order(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=1, page_size=4, n_pages=20,
+                             max_context=32))
+    done = []
+    srv.scheduler.on_complete = lambda c: done.append(c.rid)
+    rids = [srv.submit(p, RequestParams(max_new_tokens=4))
+            for p in _prompts()]
+    srv.drain()
+    assert done == rids                        # FCFS with one slot
+
+
+def test_priority_lane_admitted_first(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=1, page_size=4, n_pages=20,
+                             max_context=32))
+    done = []
+    srv.scheduler.on_complete = lambda c: done.append(c.rid)
+    p = _prompts()
+    running = srv.submit(p[0], RequestParams(max_new_tokens=4))
+    srv.step()                                 # p[0] takes the only slot
+    low = srv.submit(p[1], RequestParams(max_new_tokens=4, priority=0))
+    high = srv.submit(p[2], RequestParams(max_new_tokens=4, priority=5))
+    srv.drain()
+    # admission is non-preemptive (the running request finishes), then the
+    # high lane wins the freed slot over the earlier-submitted low request
+    assert done == [running, high, low]
+
+
+def test_preemption_recovers_and_is_exact_fp(params):
+    prompts = _prompts()[:2]
+    ref = [_solo(params, p, 16) for p in prompts]
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=10,
+                             max_context=32))
+    rids = [srv.submit(p, RequestParams(max_new_tokens=16)) for p in prompts]
+    outs = srv.drain(max_steps=500)
+    assert sum(srv.scheduler.request(r).n_preemptions for r in rids) >= 1
+    for r, want in zip(rids, ref):
+        assert outs[r] == want                 # recompute resume is exact fp
+    assert srv.pool.n_allocated == 0           # everything released
+
+
+def test_pool_too_small_for_single_request_rejected(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=3,
+                             max_context=32))
+    with pytest.raises(ValueError):            # can never fit: reject upfront
+        srv.submit(_prompts()[0], RequestParams(max_new_tokens=16))
+
+
+def test_submit_validation(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=1, page_size=4, n_pages=20,
+                             max_context=32))
+    with pytest.raises(ValueError):
+        srv.submit([], RequestParams())
+    with pytest.raises(ValueError):
+        srv.submit(list(range(30)), RequestParams(max_new_tokens=8))
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: continuous batching == solo engine, token for token
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_bits", [None, 8, 2])
+def test_staggered_arrivals_match_solo_greedy(params, kv_bits):
+    """The acceptance bar: staggered admissions, shared pool, one jit —
+    every request reproduces its solo greedy sequence exactly."""
+    kw = dict(kv_bits=kv_bits, kv_group=16) if kv_bits else {}
+    prompts = _prompts()
+    max_new = [10, 6, 8]
+    ref = [_solo(params, p, n, **kw) for p, n in zip(prompts, max_new)]
+
+    streamed = {}
+    srv = Server(TINY, params, EngineConfig(max_len=32, **kw),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                             max_context=32),
+                 on_token=lambda rid, t: streamed.setdefault(rid,
+                                                             []).append(t))
+    r0 = srv.submit(prompts[0], RequestParams(max_new_tokens=max_new[0]))
+    srv.step(); srv.step()
+    r1 = srv.submit(prompts[1], RequestParams(max_new_tokens=max_new[1]))
+    srv.step()
+    r2 = srv.submit(prompts[2], RequestParams(max_new_tokens=max_new[2]))
+    outs = srv.drain(max_steps=200)
+
+    for rid, want in zip((r0, r1, r2), ref):
+        assert outs[rid] == want
+        assert streamed[rid] == want           # streaming saw every token
+    assert srv.engine.decode_compilations == 1  # no per-step retrace
+
+
+def test_completions_and_stats(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=20,
+                             max_context=32))
+    rid = srv.submit(_prompts()[0], RequestParams(max_new_tokens=1))
+    events = srv.step()                        # completes at admission
+    assert [c.rid for c in events] == [rid]
+    assert len(events[0].tokens) == 1
+    s = srv.stats()
+    assert s["active"] == 0 and s["queued"] == 0
+    assert s["pool_bytes"] > 0
