@@ -1,7 +1,7 @@
 # Developer entry points.  PYTHONPATH is injected so no install is needed.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke quickstart serve-demo bench
+.PHONY: test smoke quickstart serve-demo bench plan-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -16,3 +16,10 @@ serve-demo:  ## continuous-batching demo across quantization schemes
 
 bench:       ## all paper benchmarks + serve throughput
 	$(PY) -m benchmarks.run
+
+plan-smoke:  ## mixed-precision planner: profile -> search -> serve a plan
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq8w,lq4w,lq2w --budget-mb 0.06 --out /tmp/plan_smoke.json
+	$(PY) -m repro.launch.serve --arch llama3.2-1b \
+	    --plan /tmp/plan_smoke.json --steps 8
+	$(PY) -m benchmarks.run plan

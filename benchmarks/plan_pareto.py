@@ -1,0 +1,94 @@
+"""Mixed-precision plan Pareto sweep: accuracy proxy vs modeled cost.
+
+Sweeps a weight-byte budget between the uniform-narrow and uniform-wide
+plans on a small transformer and emits the planner's (cost, KL-loss)
+frontier as JSON, alongside the uniform-scheme points.  The planner's
+acceptance bar — a searched plan strictly inside the uniform frontier
+(cheaper than uniform-8 at lower sensitivity loss than uniform-2) — is
+checked here and asserted in tests/test_plan.py.
+
+Run:  PYTHONPATH=src python -m benchmarks.plan_pareto
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.plan import (candidate_costs, greedy_search, pareto_frontier,
+                        profile_sensitivity, uniform_result)
+from repro.plan.plan import candidates_for
+
+CFG = ModelConfig(name="plan-bench", family="dense", n_layers=4,
+                  d_model=64, vocab_size=256, n_heads=4, n_kv_heads=2,
+                  head_dim=16, d_ff=128, dtype="float32", remat="none")
+
+SCHEMES = ("lq8w", "lq4w", "lq2w")
+N_BUDGETS = 5
+METRIC = "kl"
+
+
+def _profile():
+    params = transformer.init_params(CFG, jax.random.key(0))
+    data = SyntheticLM(DataConfig(vocab_size=CFG.vocab_size, seq_len=32,
+                                  global_batch=4, seed=7))
+    batches = [{"tokens": data.batch(i)["tokens"]} for i in range(2)]
+    cands = candidates_for(CFG, SCHEMES)
+    prof = profile_sensitivity(params, CFG, batches, cands)
+    costs = {l: {s: c.to_dict() for s, c in row.items()}
+             for l, row in candidate_costs(CFG, cands).items()}
+    return prof, costs
+
+
+def run(verbose: bool = True) -> dict:
+    prof, costs = _profile()
+    uniforms = {s: uniform_result(s, prof.losses, costs, loss_key=METRIC)
+                for s in SCHEMES}
+    wide, narrow = uniforms[SCHEMES[0]], uniforms[SCHEMES[-1]]
+
+    rows = []
+    for i in range(N_BUDGETS):
+        frac = (i + 1) / (N_BUDGETS + 1)
+        budget = narrow.cost + frac * (wide.cost - narrow.cost)
+        r = greedy_search(prof.losses, costs, budget=budget,
+                          loss_key=METRIC)
+        rows.append({"budget_bytes": budget, "bytes": r.cost,
+                     "loss": r.loss, "feasible": r.feasible,
+                     "assignment": dict(r.assignment)})
+
+    frontier = pareto_frontier(
+        [(r["bytes"], r["loss"]) for r in rows]
+        + [(u.cost, u.loss) for u in uniforms.values()])
+    # the acceptance bar: some searched plan strictly beats the box
+    # spanned by uniform-wide cost and uniform-narrow loss
+    inside = any(r["bytes"] < wide.cost and r["loss"] < narrow.loss
+                 and len(set(r["assignment"].values())) > 1 for r in rows)
+
+    out = {
+        "model": CFG.name, "schemes": list(SCHEMES), "metric": METRIC,
+        "uniform": {s: {"bytes": u.cost, "loss": u.loss}
+                    for s, u in uniforms.items()},
+        "planned": rows,
+        "frontier": frontier,
+        "mixed_plan_inside_uniform_frontier": inside,
+        "sensitivity": prof.to_dict(),
+    }
+    if verbose:
+        print(f"\n== mixed-precision plan Pareto ({CFG.name}, "
+              f"{CFG.n_layers} layers) ==")
+        print(f"  {'point':>16} {'bytes':>10} {METRIC:>12}")
+        for s, u in uniforms.items():
+            print(f"  {'uniform ' + s:>16} {u.cost:>10,.0f} {u.loss:>12.3e}")
+        for r in rows:
+            mix = "+".join(sorted(set(r["assignment"].values())))
+            print(f"  {'plan ' + mix:>16} {r['bytes']:>10,.0f} "
+                  f"{r['loss']:>12.3e}")
+        print(f"  mixed plan strictly inside uniform frontier: {inside}")
+    return out
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

@@ -9,6 +9,7 @@ One benchmark per paper table/figure:
   kernels  per-kernel microbench
   serve    continuous-batching throughput + pool occupancy
   roofline dry-run roofline table (reads experiments/dryrun/)
+  plan     mixed-precision plan Pareto sweep (accuracy proxy vs cost)
 """
 from __future__ import annotations
 
@@ -17,8 +18,8 @@ import sys
 
 def main(argv=None):
     names = (argv if argv is not None else sys.argv[1:]) or [
-        "table3", "fig8", "table45", "kernels", "serve", "table2", "fig10",
-        "roofline"]
+        "table3", "fig8", "table45", "kernels", "serve", "plan", "table2",
+        "fig10", "roofline"]
     results = {}
     for name in names:
         if name == "table2":
@@ -37,6 +38,8 @@ def main(argv=None):
             from . import serve_throughput as m
         elif name == "roofline":
             from . import roofline_table as m
+        elif name == "plan":
+            from . import plan_pareto as m
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         results[name] = m.run()

@@ -35,6 +35,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import packing
+from .pallas_compat import CompilerParams as _CompilerParams
 
 
 def _kernel(c_ref, s_ref, z_ref, w_ref, o_ref, acc_ref, *,
@@ -102,7 +103,7 @@ def lut_matmul(a_packed, a_scale, a_zmin, w, *, bits: int, group_size: int,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, r: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
         name=f"lut_matmul_b{bits}g{group_size}",

@@ -1,0 +1,101 @@
+"""Mixed-precision planner CLI: profile -> search -> plan.json.
+
+    python -m repro.launch.plan --arch llama3.2-1b \
+        --schemes lq8w,lq4w,lq2w --budget-mb 0.25 --out plan.json
+
+Profiles per-layer sensitivity of the smoke config on the synthetic LM
+stream, prices every (layer, scheme) cell with the roofline cost model,
+runs the greedy Pareto search under the byte (``--budget-mb``) or modeled
+latency (``--budget-ms``) budget, and emits a serializable QuantPlan that
+``repro.launch.serve --plan plan.json`` deploys directly.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.synthetic import DataConfig, SyntheticLM
+from repro.models import transformer
+from repro.plan import (candidate_costs, greedy_search, plan_cost,
+                        profile_sensitivity, uniform_result)
+from repro.plan.plan import candidates_for
+
+
+def make_calib_stream(cfg, *, n_batches: int, batch: int, seq_len: int,
+                      seed: int = 0) -> list:
+    data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size,
+                                  seq_len=seq_len, global_batch=batch,
+                                  seed=seed))
+    return [{"tokens": data.batch(i)["tokens"]} for i in range(n_batches)]
+
+
+def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
+               metric: str = "kl", batches=None, verbose: bool = True):
+    """profile -> price -> search.  Returns (plan, search_result, profile)."""
+    if (budget_mb is None) == (budget_ms is None):
+        raise ValueError("pass exactly one of budget_mb / budget_ms")
+    cands = candidates_for(cfg, scheme_names)
+    prof = profile_sensitivity(params, cfg, batches, cands)
+    costs = {l: {s: c.to_dict() for s, c in row.items()}
+             for l, row in candidate_costs(cfg, cands).items()}
+    cost_key = "bytes" if budget_ms is None else "ms"
+    budget = budget_mb * 2**20 if budget_ms is None else budget_ms
+    result = greedy_search(prof.losses, costs, budget=budget,
+                           cost_key=cost_key, loss_key=metric)
+    meta = {"arch": cfg.name, "budget": budget, "budget_key": cost_key,
+            "metric": metric, "schemes": ",".join(scheme_names),
+            "feasible": result.feasible}
+    plan = result.plan(cands, meta=meta)
+
+    if verbose:
+        print(f"== planned {cfg.name}: budget {budget:.4g} {cost_key}, "
+              f"metric {metric} ==")
+        for layer in costs:
+            s = result.assignment[layer]
+            print(f"  {layer:>10} -> {s:>6}  "
+                  f"bytes={costs[layer][s]['bytes']:>12,.0f}  "
+                  f"{metric}={prof.losses[layer][s][metric]:.3e}")
+        print(f"  total: cost={result.cost:.4g} {cost_key} "
+              f"loss={result.loss:.3e} feasible={result.feasible}")
+        for s in scheme_names:
+            u = uniform_result(s, prof.losses, costs,
+                               cost_key=cost_key, loss_key=metric)
+            print(f"  uniform {s:>6}: cost={u.cost:.4g} loss={u.loss:.3e}")
+    return plan, result, prof
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.names()))
+    ap.add_argument("--schemes", default="lq8w,lq4w,lq2w",
+                    help="comma-separated candidate schemes")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="weight-byte budget (wire-format MiB)")
+    ap.add_argument("--budget-ms", type=float, default=None,
+                    help="modeled per-token decode latency budget")
+    ap.add_argument("--metric", default="kl", choices=("kl", "mse"))
+    ap.add_argument("--batches", type=int, default=2)
+    ap.add_argument("--batch-size", type=int, default=4)
+    ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--out", default="plan.json")
+    args = ap.parse_args(argv)
+
+    cfg = configs.smoke(args.arch)
+    if cfg.n_enc_layers:
+        raise SystemExit(f"{args.arch}: planning covers decoder-only models")
+    params = transformer.init_params(cfg, jax.random.key(0))
+    stream = make_calib_stream(cfg, n_batches=args.batches,
+                               batch=args.batch_size, seq_len=args.seq_len)
+    plan, result, _ = build_plan(
+        cfg, params, [s.strip() for s in args.schemes.split(",")],
+        budget_mb=args.budget_mb, budget_ms=args.budget_ms,
+        metric=args.metric, batches=stream)
+    print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg))['mb']:.4f} MiB")
+    plan.save(args.out)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -67,6 +67,9 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(configs.names()))
     ap.add_argument("--scheme", default=None, help="weight scheme, e.g. lq4w")
+    ap.add_argument("--plan", default=None, metavar="PLAN.json",
+                    help="mixed-precision QuantPlan (repro.launch.plan "
+                         "output); mutually exclusive with --scheme")
     ap.add_argument("--a-bits", type=int, default=None)
     ap.add_argument("--kv-bits", type=int, default=None)
     ap.add_argument("--kv-group", type=int, default=16)
@@ -86,13 +89,19 @@ def main():
 
     cfg = configs.smoke(args.arch)
     params = transformer.init_params(cfg, jax.random.key(0))
+    plan = None
+    if args.plan is not None:
+        from repro.plan import QuantPlan
+        plan = QuantPlan.load(args.plan)
+        print(plan.describe(cfg))
     ecfg = EngineConfig(max_len=args.prompt_len + args.steps + 8,
                         kv_bits=args.kv_bits, kv_group=args.kv_group,
                         weight_scheme=args.scheme, a_bits=args.a_bits,
-                        backend="ref", temperature=args.temperature)
+                        plan=plan, backend="ref",
+                        temperature=args.temperature)
     if args.continuous:
-        print(f"arch={args.arch} scheme={args.scheme} a_bits={args.a_bits} "
-              f"kv_bits={args.kv_bits}")
+        print(f"arch={args.arch} scheme={args.scheme} plan={args.plan} "
+              f"a_bits={args.a_bits} kv_bits={args.kv_bits}")
         _continuous(cfg, params, ecfg, args)
         return
     engine = Engine(cfg, params, ecfg)

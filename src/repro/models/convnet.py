@@ -159,14 +159,33 @@ def init_params(cfg: ConvConfig, key) -> list:
     return params
 
 
+def n_quant_layers(cfg: ConvConfig) -> int:
+    """Number of quantizable (conv/fc) layers — the plan's index space."""
+    return sum(1 for layer in cfg.layers if layer.kind != "pool")
+
+
 def apply(params: list, cfg: ConvConfig, x, *,
           policy: QuantPolicy = NO_QUANT):
-    """x (B, H, W, C) -> logits (B, n_classes)."""
+    """x (B, H, W, C) -> logits (B, n_classes).
+
+    ``policy`` may be a per-layer :class:`repro.models.layers.PlanPolicy`
+    (one config per conv/fc layer, pools excluded) — the CNN analogue of
+    the planned transformer stack; the paper's conv1-region example
+    (section VI.D) then gets its own bitwidth independent of fc layers.
+    """
+    if isinstance(policy, layers.PlanPolicy) \
+            and policy.n_layers != n_quant_layers(cfg):
+        raise ValueError(f"plan covers {policy.n_layers} layers; "
+                         f"{cfg.name} has {n_quant_layers(cfg)} conv/fc")
     flat = False
+    qi = 0
     for p, layer in zip(params, cfg.layers):
+        if layer.kind != "pool":
+            lpolicy = layers.policy_for_layer(policy, qi)
+            qi += 1
         if layer.kind == "conv":
             patches = _im2col(x, layer.kernel, layer.stride, layer.pad)
-            x = jax.nn.relu(layers.dense_apply(p, patches, policy))
+            x = jax.nn.relu(layers.dense_apply(p, patches, lpolicy))
         elif layer.kind == "pool":
             x = jax.lax.reduce_window(
                 x, -jnp.inf, jax.lax.max,
@@ -176,7 +195,36 @@ def apply(params: list, cfg: ConvConfig, x, *,
             if not flat:
                 x = x.reshape(x.shape[0], -1)
                 flat = True
-            x = layers.dense_apply(p, x, policy)
+            x = layers.dense_apply(p, x, lpolicy)
             if layer is not cfg.layers[-1]:
                 x = jax.nn.relu(x)
     return x
+
+
+def quantize_params(params: list, cfg: ConvConfig, configs) -> list:
+    """Pack each conv/fc layer's weights per its config (plan deployment).
+
+    ``configs``: one QuantConfig per conv/fc layer, in layer order.
+    """
+    if len(configs) != n_quant_layers(cfg):
+        raise ValueError(f"{len(configs)} configs for "
+                         f"{n_quant_layers(cfg)} conv/fc layers")
+    out = []
+    qi = 0
+    for p, layer in zip(params, cfg.layers):
+        if layer.kind == "pool":
+            out.append(p)
+            continue
+        qcfg = configs[qi]
+        qi += 1
+        if qcfg.w_bits is None:
+            out.append(p)
+            continue
+        if p["w"].shape[0] % qcfg.group_size:
+            raise ValueError(
+                f"layer {qi - 1} ({layer.kind}): group_size "
+                f"{qcfg.group_size} does not divide fan-in "
+                f"{p['w'].shape[0]}; fit the region size first "
+                f"(e.g. repro.plan.plan.fit_group_size)")
+        out.append(layers.quantize_dense(p, qcfg))
+    return out

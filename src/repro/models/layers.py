@@ -55,6 +55,41 @@ class QuantPolicy:
 NO_QUANT = QuantPolicy.train_fp()
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanPolicy:
+    """Per-layer quantization policy: one :class:`QuantConfig` per decoder
+    layer (a resolved :class:`repro.plan.QuantPlan`).
+
+    Quacks like a :class:`QuantPolicy` (mode / cfg / backend) for projections
+    outside the planned stack — embedding, lm_head, frontend, encoder — which
+    run under ``base_cfg`` (fp by default).  ``layer(i)`` yields the plain
+    per-layer policy that ``block_apply`` consumes; the stack walker groups
+    consecutive superblocks with identical configs so the scan stays compact.
+    """
+    mode: str                                   # 'qat' | 'serve'
+    configs: tuple                              # per-layer QuantConfig
+    backend: str = "auto"
+    base_cfg: schemes.QuantConfig = schemes.FP32
+
+    @property
+    def cfg(self) -> schemes.QuantConfig:
+        return self.base_cfg
+
+    def layer(self, i: int) -> QuantPolicy:
+        return QuantPolicy(self.mode, self.configs[i], self.backend)
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.configs)
+
+
+def policy_for_layer(policy, i: int) -> QuantPolicy:
+    """Resolve a (possibly per-layer) policy for decoder/conv layer ``i``."""
+    if isinstance(policy, PlanPolicy):
+        return policy.layer(i)
+    return policy
+
+
 # ---------------------------------------------------------------------------
 # Dense
 # ---------------------------------------------------------------------------

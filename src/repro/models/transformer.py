@@ -28,10 +28,17 @@ import jax.numpy as jnp
 
 from . import attention, layers, mamba2, mlp, moe, rglru
 from .config import ModelConfig
-from .layers import QuantPolicy, NO_QUANT
+from .layers import PlanPolicy, QuantPolicy, NO_QUANT
 from repro.core import kvwire, schemes
 from repro.distributed.actshard import constrain
 from repro.kernels import ops as kops
+
+
+def _base_policy(policy):
+    """Collapse a per-layer PlanPolicy to its uniform base (encoder/embed)."""
+    if isinstance(policy, PlanPolicy):
+        return QuantPolicy(policy.mode, policy.base_cfg, policy.backend)
+    return policy
 
 
 # ---------------------------------------------------------------------------
@@ -258,7 +265,19 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
                  policy: QuantPolicy, caches=None, cache_pos=None,
                  enc_out=None, positions=None, page_table=None,
                  training=False):
-    """Run scan-stacked superblocks + tail.  Returns (x, caches, aux)."""
+    """Run scan-stacked superblocks + tail.  Returns (x, caches, aux).
+
+    With a uniform :class:`QuantPolicy` (and unsegmented params) every
+    superblock runs one shared scan body.  A per-layer
+    :class:`PlanPolicy` — or params pre-segmented by
+    ``quantize_params(plan)`` — routes to the segmented walker, which
+    scans each run of identically-configured superblocks separately.
+    """
+    if isinstance(policy, PlanPolicy) or "super_segments" in params:
+        return _stack_apply_planned(
+            params, x, cfg, pattern, policy=policy, caches=caches,
+            cache_pos=cache_pos, enc_out=enc_out, positions=positions,
+            page_table=page_table, training=training)
     aux_total = jnp.zeros((), jnp.float32)
 
     def body(carry, xs):
@@ -292,6 +311,126 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
         x, nc, aux = block_apply(tp, x, spec, cfg, policy=policy, cache=ct,
                                  cache_pos=cache_pos, enc_out=enc_out,
                                  positions=positions, page_table=page_table)
+        aux_total = aux_total + aux
+        new_tail.append(nc)
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"super": new_sup, "tail": new_tail}
+    return x, new_caches, aux_total
+
+
+# ---------------------------------------------------------------------------
+# per-layer (planned) stack walker
+# ---------------------------------------------------------------------------
+
+def plan_segments(configs, p_len: int, n_super: int) -> list:
+    """Group consecutive superblocks whose per-position configs match.
+
+    Returns ``[(start_super, size, per_position_cfgs), ...]`` — the
+    maximal runs a single scan body can cover, so a mostly-uniform plan
+    stays nearly as compact as the uniform scan.
+    """
+    segs = []
+    s = 0
+    while s < n_super:
+        key = tuple(configs[s * p_len + j] for j in range(p_len))
+        e = s + 1
+        while e < n_super and key == tuple(configs[e * p_len + j]
+                                           for j in range(p_len)):
+            e += 1
+        segs.append((s, e - s, key))
+        s = e
+    return segs
+
+
+def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
+                         caches=None, cache_pos=None, enc_out=None,
+                         positions=None, page_table=None, training=False):
+    """Segmented stack walk: one lax.scan per run of identically-configured
+    superblocks, per-layer policies for the tail.  Cache layout is
+    IDENTICAL to the uniform path — segments slice and re-concatenate the
+    (n_super, ...) leading axis inside the jit, so serve pools, wire
+    scatter and checkpoints see the same pytrees either way.
+    """
+    p_len = len(pattern)
+    segmented = "super_segments" in params
+    if isinstance(policy, PlanPolicy):
+        per_layer = [policy.layer(i) for i in range(policy.n_layers)]
+    else:
+        per_layer = [policy] * cfg.n_layers
+    n_super = len(per_layer) // p_len
+    n_tail = len(per_layer) - n_super * p_len
+    if segmented:
+        seg_param_list = params["super_segments"]
+    segs = plan_segments([p.cfg for p in per_layer], p_len, n_super)
+    if segmented and len(segs) != len(seg_param_list):
+        raise ValueError(
+            f"policy implies {len(segs)} segments but params carry "
+            f"{len(seg_param_list)} — plan/params mismatch")
+
+    aux_total = jnp.zeros((), jnp.float32)
+    sup_caches = caches["super"] if caches is not None else None
+    new_sup_parts = []
+
+    for k, (start, size, _) in enumerate(segs):
+        seg_policies = tuple(per_layer[start * p_len + j]
+                             for j in range(p_len))
+        if segmented:
+            seg_params = seg_param_list[k]
+        else:
+            seg_params = jax.tree.map(lambda a: a[start:start + size],
+                                      params["super"])
+        seg_caches = None
+        if sup_caches is not None:
+            seg_caches = jax.tree.map(lambda a: a[start:start + size],
+                                      sup_caches)
+
+        def body(carry, xs, seg_policies=seg_policies):
+            xx, aux_acc = carry
+            blk_params, blk_caches = xs
+            new_caches = []
+            for j, spec in enumerate(pattern):
+                cj = blk_caches[j] if blk_caches is not None else None
+                xx, nc, aux = block_apply(blk_params[j], xx, spec, cfg,
+                                          policy=seg_policies[j], cache=cj,
+                                          cache_pos=cache_pos,
+                                          enc_out=enc_out,
+                                          positions=positions,
+                                          page_table=page_table)
+                xx = constrain(xx, "batch", "seq", "embed")
+                new_caches.append(nc)
+            out = tuple(new_caches) if blk_caches is not None else None
+            return (xx, aux_acc + aux), out
+
+        body = _maybe_remat(body, cfg, training)
+        (x, aux_total), new_seg = jax.lax.scan(
+            body, (x, aux_total), (seg_params, seg_caches))
+        if sup_caches is not None:
+            new_sup_parts.append(new_seg)
+
+    new_sup = sup_caches
+    if sup_caches is not None and new_sup_parts:
+        if len(new_sup_parts) == 1:
+            new_sup = new_sup_parts[0]
+        else:
+            new_sup = jax.tree.map(
+                lambda *leaves: jnp.concatenate(leaves, axis=0),
+                *new_sup_parts)
+
+    new_tail = []
+    tail_params = params["tail"]
+    if len(tail_params) != n_tail:
+        raise ValueError(f"policy covers {n_tail} tail layers but params "
+                         f"carry {len(tail_params)}")
+    for t, tp in enumerate(tail_params):
+        spec = pattern[t % p_len]
+        ct = caches["tail"][t] if caches is not None else None
+        x, nc, aux = block_apply(tp, x, spec, cfg,
+                                 policy=per_layer[n_super * p_len + t],
+                                 cache=ct, cache_pos=cache_pos,
+                                 enc_out=enc_out, positions=positions,
+                                 page_table=page_table)
         aux_total = aux_total + aux
         new_tail.append(nc)
 
@@ -337,6 +476,7 @@ def init_params(cfg: ModelConfig, key) -> dict:
 def encode(params, cfg: ModelConfig, frames, *, policy=NO_QUANT,
            training=False):
     """Whisper-style encoder: frames (B, enc_len, frontend_dim) -> states."""
+    policy = _base_policy(policy)      # plans cover the decoder stack only
     x = layers.dense_apply(params["frontend"], frames, policy)
     x = layers.posembed_apply(params["enc_pos"], x)
     x = x.astype(cfg.activation_dtype)
@@ -495,14 +635,10 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
 _EXCLUDE_KEYS = {"router"}          # fp32-sensitive leaves
 
 
-def quantize_params(params, cfg: ModelConfig,
-                    qcfg: schemes.QuantConfig) -> dict:
-    """Replace Dense weights with packed :class:`QWeight` (local quantization
-    regions along the contraction axis).  Stacked (scan) and expert weights
-    are quantized with vmap; norms / router / conv / scalar leaves stay fp.
-    """
+def _quantize_tree(tree, qcfg: schemes.QuantConfig):
+    """Pack every Dense weight in ``tree`` under one QuantConfig."""
     if qcfg.w_bits is None:
-        return params
+        return tree
     bits, gs = qcfg.w_bits, qcfg.group_size
 
     def quant_w(w):
@@ -541,4 +677,41 @@ def quantize_params(params, cfg: ModelConfig,
             return type(tree)(t) if isinstance(tree, tuple) else t
         return tree
 
-    return walk(params)
+    return walk(tree)
+
+
+def quantize_params(params, cfg: ModelConfig, qcfg) -> dict:
+    """Replace Dense weights with packed :class:`QWeight` (local quantization
+    regions along the contraction axis).  Stacked (scan) and expert weights
+    are quantized with vmap; norms / router / conv / scalar leaves stay fp.
+
+    ``qcfg`` is either one :class:`QuantConfig` applied uniformly to the
+    whole tree, or a :class:`repro.plan.QuantPlan` (anything exposing
+    ``resolve(cfg)``): decoder layers are packed per the plan, with
+    consecutive identically-configured superblocks re-stacked into
+    ``super_segments`` so the planned scan walker keeps one compiled body
+    per segment; non-decoder leaves (embed / lm_head / encoder) stay fp.
+    """
+    if hasattr(qcfg, "resolve"):               # QuantPlan (duck-typed)
+        return _quantize_params_plan(params, cfg, qcfg)
+    return _quantize_tree(params, qcfg)
+
+
+def _quantize_params_plan(params, cfg: ModelConfig, plan) -> dict:
+    configs = plan.resolve(cfg)
+    p_len = len(cfg.pattern)
+    dec = params["decoder"]
+    segs = plan_segments(configs, p_len, cfg.n_super)
+    seg_trees = []
+    for start, size, seg_cfgs in segs:
+        pos_trees = []
+        for j in range(p_len):
+            sub = jax.tree.map(lambda a: a[start:start + size],
+                               dec["super"][j])
+            pos_trees.append(_quantize_tree(sub, seg_cfgs[j]))
+        seg_trees.append(tuple(pos_trees))
+    tail = [_quantize_tree(blk, configs[cfg.n_super * p_len + t])
+            for t, blk in enumerate(dec["tail"])]
+    out = dict(params)
+    out["decoder"] = {"super_segments": seg_trees, "tail": tail}
+    return out

@@ -1,0 +1,22 @@
+"""Mixed-precision planner: per-layer bitwidth search under a device budget.
+
+    profile -> search -> QuantPlan -> models/serve
+
+See README.md in this directory for the subsystem design and the
+``repro.launch.plan`` CLI walkthrough.
+"""
+from .plan import QuantPlan, layer_name
+from .costmodel import (LayerCost, candidate_costs, layer_cost,
+                        layer_dense_params, plan_cost, weight_bytes)
+from .sensitivity import (SensitivityProfile, layer_output_ranges,
+                          profile_sensitivity)
+from .search import (SearchResult, greedy_search, pareto_frontier,
+                     uniform_result)
+
+__all__ = [
+    "QuantPlan", "layer_name",
+    "LayerCost", "candidate_costs", "layer_cost", "layer_dense_params",
+    "plan_cost", "weight_bytes",
+    "SensitivityProfile", "layer_output_ranges", "profile_sensitivity",
+    "SearchResult", "greedy_search", "pareto_frontier", "uniform_result",
+]

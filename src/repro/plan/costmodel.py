@@ -1,0 +1,108 @@
+"""Per-layer deployment cost under a candidate scheme.
+
+Three currencies, all per decoder layer:
+
+  * **bytes**  — resident weight footprint in the packed wire format
+    (codes + per-region affine), the ``--budget-mb`` constraint.  Matches
+    :meth:`repro.kernels.ops.QWeight.nbytes` exactly:
+    ``params * bits/8 + 2 * 4 * params/group_size``; fp layers count 4 B
+    per weight (the fp32 master format, as in benchmarks/table45).
+  * **op counts** — multiplies/adds per generated token using the paper's
+    Table-3 accounting (``core/lut.py``): LUT layers pay one multiply per
+    local region, everything else one multiply+add per MAC.
+  * **ms** — modeled decode latency per token from the roofline constants
+    (``roofline/HW``; the benchmarks/table45 deployment regime): decode
+    streams every live weight once per token, so
+    ``ms = max(weight_bytes / HBM_BW, 2*MACs / PEAK) * 1e3``.
+    This is the ``--budget-ms`` constraint.
+
+Per-layer MACs/params come from the :class:`ModelConfig` block pattern
+(the same accounting as ``param_count()``), so the model is shape-generic
+across attention / SSM / MoE / RG-LRU mixers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import lut
+from repro.roofline import HW
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCost:
+    bytes: float          # resident weight bytes in wire format
+    macs: int             # dense MACs per generated token
+    multiplies: float     # per token, paper Table-3 convention
+    adds: float
+    ms: float             # modeled decode latency per token
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def layer_dense_params(model_cfg) -> list:
+    """Dense (quantizable) parameter count of each decoder layer.
+
+    Norm/router/conv leaves stay fp and are excluded — they are the
+    ``_EXCLUDE_KEYS`` of ``transformer.quantize_params``.
+    """
+    out = []
+    for i in range(model_cfg.n_layers):
+        mixer, ffn = model_cfg.layer_spec(i)
+        out.append(model_cfg._mixer_params(mixer)
+                   + model_cfg._ffn_params(ffn))
+    return out
+
+
+def weight_bytes(n_params: int, qcfg) -> float:
+    """Wire-format bytes for ``n_params`` weights under ``qcfg``."""
+    if qcfg.w_bits is None:
+        return 4.0 * n_params
+    return (n_params * qcfg.w_bits / 8.0
+            + 2 * 4.0 * n_params / qcfg.group_size)
+
+
+def layer_cost(n_params: int, qcfg, hw: HW | None = None) -> LayerCost:
+    hw = hw or HW()
+    macs = n_params                       # decode: 1 MAC per live weight
+    nbytes = weight_bytes(n_params, qcfg)
+    if qcfg.lut and qcfg.a_bits is not None:
+        ops = lut.lut_op_counts(macs, bits=qcfg.a_bits,
+                                region_size=qcfg.group_size)
+    else:
+        ops = lut.original_op_counts(macs)
+    compute_s = 2.0 * macs / hw.peak_flops
+    memory_s = nbytes / hw.hbm_bw
+    return LayerCost(bytes=nbytes, macs=macs,
+                     multiplies=float(ops.multiplies),
+                     adds=float(ops.adds),
+                     ms=max(compute_s, memory_s) * 1e3)
+
+
+def candidate_costs(model_cfg, candidates: dict,
+                    hw: HW | None = None) -> dict:
+    """``{layer_name: {scheme_name: LayerCost}}`` for every candidate.
+
+    ``candidates``: ``{scheme_name: QuantConfig}``.
+    """
+    from .plan import layer_name
+    sizes = layer_dense_params(model_cfg)
+    return {layer_name(i): {s: layer_cost(n, c, hw)
+                            for s, c in candidates.items()}
+            for i, n in enumerate(sizes)}
+
+
+def plan_cost(model_cfg, configs, hw: HW | None = None) -> dict:
+    """Aggregate cost of a resolved per-layer config tuple."""
+    sizes = layer_dense_params(model_cfg)
+    if len(configs) != len(sizes):
+        raise ValueError(f"{len(configs)} configs for {len(sizes)} layers")
+    per = [layer_cost(n, c, hw) for n, c in zip(sizes, configs)]
+    return {
+        "bytes": sum(p.bytes for p in per),
+        "mb": sum(p.bytes for p in per) / 2**20,
+        "ms": sum(p.ms for p in per),
+        "multiplies": sum(p.multiplies for p in per),
+        "adds": sum(p.adds for p in per),
+        "per_layer": [p.to_dict() for p in per],
+    }

@@ -1,0 +1,160 @@
+"""QuantPlan: a serializable per-layer bitwidth assignment.
+
+The repo's original deployment surface applied ONE :class:`QuantConfig`
+uniformly to every projection.  A plan generalizes that to "8-bit where it
+hurts, 2-bit everywhere else": an ordered mapping ``layer name -> scheme``
+over the decoder stack, with a default for unnamed layers.  A uniform
+config is the trivial plan (``QuantPlan.uniform``).
+
+Layer naming: decoder block ``i`` (0-based, over the scan-stacked
+superblocks then the tail) is ``"layer.{i}"``.  ``resolve(model_cfg)``
+validates names against the model's block pattern and returns the
+per-layer config tuple that the model layer consumes.
+
+JSON round trip: configs serialize as a registered scheme name when one
+matches (``"lq4"``) and as an explicit field dict otherwise, so plans stay
+human-editable and survive scheme-registry growth.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import schemes
+from repro.core.schemes import QuantConfig
+
+
+def layer_name(i: int) -> str:
+    return f"layer.{i}"
+
+
+def fit_group_size(cfg: QuantConfig, model_cfg) -> QuantConfig:
+    """Clamp the local-region size to divide ``d_model`` (small models)."""
+    gs = min(cfg.group_size, model_cfg.d_model)
+    while model_cfg.d_model % gs:
+        gs -= 1
+    return dataclasses.replace(cfg, group_size=gs)
+
+
+def candidates_for(model_cfg, scheme_names) -> dict:
+    """``{scheme_name: QuantConfig}`` with region sizes fitted to the model.
+
+    The candidate set for profiling/search — e.g.
+    ``candidates_for(cfg, ["lq8", "lq4", "lq2"])``.
+    """
+    return {n: fit_group_size(schemes.get(n), model_cfg)
+            for n in scheme_names}
+
+
+def _cfg_to_json(cfg: QuantConfig):
+    for name in schemes.names():
+        if schemes.get(name) == cfg and name != "none":
+            return name
+    return dataclasses.asdict(cfg)
+
+
+def _cfg_from_json(obj) -> QuantConfig:
+    if isinstance(obj, str):
+        return schemes.get(obj)
+    return QuantConfig(**obj)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPlan:
+    """Ordered ``layer name -> QuantConfig`` assignment + default."""
+    assignments: tuple = ()             # ((name, QuantConfig), ...)
+    default: QuantConfig = schemes.FP32
+    meta: tuple = ()                    # ((key, value), ...) provenance
+
+    def __post_init__(self):
+        seen = set()
+        for name, cfg in self.assignments:
+            if name in seen:
+                raise ValueError(f"duplicate plan entry {name!r}")
+            seen.add(name)
+            if not isinstance(cfg, QuantConfig):
+                raise TypeError(f"{name!r}: expected QuantConfig, "
+                                f"got {type(cfg).__name__}")
+
+    # ------------------------------------------------------------- build
+    @staticmethod
+    def uniform(cfg_or_name) -> "QuantPlan":
+        """The trivial plan: one scheme everywhere."""
+        return QuantPlan(default=schemes.get(cfg_or_name))
+
+    @staticmethod
+    def from_assignment(assignment: dict, default="fp32",
+                        meta: dict | None = None) -> "QuantPlan":
+        """``{"layer.0": "lq8", ...}`` (names or QuantConfigs) -> plan."""
+        items = tuple((k, schemes.get(v)) for k, v in assignment.items())
+        return QuantPlan(assignments=items, default=schemes.get(default),
+                         meta=tuple(sorted((meta or {}).items())))
+
+    # ----------------------------------------------------------- resolve
+    def resolve(self, model_cfg) -> tuple:
+        """Validate against the model's block pattern; return per-layer
+        configs (length ``model_cfg.n_layers``)."""
+        n = model_cfg.n_layers
+        by_name = dict(self.assignments)
+        configs = []
+        for i in range(n):
+            configs.append(by_name.pop(layer_name(i), self.default))
+        if by_name:
+            raise ValueError(
+                f"plan names {sorted(by_name)} out of range for "
+                f"{model_cfg.name!r} with {n} layers "
+                f"(pattern {model_cfg.pattern!r})")
+        for i, cfg in enumerate(configs):
+            if cfg.w_bits is not None and model_cfg.d_model % cfg.group_size:
+                raise ValueError(
+                    f"{layer_name(i)}: group_size {cfg.group_size} does not "
+                    f"divide d_model {model_cfg.d_model}")
+        return tuple(configs)
+
+    def policy(self, model_cfg, *, mode: str = "serve",
+               backend: str = "auto"):
+        """A :class:`repro.models.layers.PlanPolicy` over this plan."""
+        from repro.models.layers import PlanPolicy
+        return PlanPolicy(mode, self.resolve(model_cfg), backend)
+
+    @property
+    def is_uniform(self) -> bool:
+        return not self.assignments
+
+    # -------------------------------------------------------------- JSON
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps({
+            "version": 1,
+            "default": _cfg_to_json(self.default),
+            "layers": {k: _cfg_to_json(v) for k, v in self.assignments},
+            "meta": dict(self.meta),
+        }, indent=indent)
+
+    @staticmethod
+    def from_json(text: str) -> "QuantPlan":
+        obj = json.loads(text)
+        return QuantPlan(
+            assignments=tuple((k, _cfg_from_json(v))
+                              for k, v in obj.get("layers", {}).items()),
+            default=_cfg_from_json(obj.get("default", "fp32")),
+            meta=tuple(sorted(obj.get("meta", {}).items())))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+    @staticmethod
+    def load(path: str) -> "QuantPlan":
+        with open(path) as f:
+            return QuantPlan.from_json(f.read())
+
+    # ----------------------------------------------------------- display
+    def describe(self, model_cfg=None) -> str:
+        lines = [f"QuantPlan(default={_cfg_to_json(self.default)})"]
+        if model_cfg is not None:
+            for i, cfg in enumerate(self.resolve(model_cfg)):
+                lines.append(f"  {layer_name(i):>10}: {_cfg_to_json(cfg)}")
+        else:
+            for name, cfg in self.assignments:
+                lines.append(f"  {name:>10}: {_cfg_to_json(cfg)}")
+        return "\n".join(lines)

@@ -1,0 +1,123 @@
+"""Bitwidth search: greedy Pareto descent under a device budget.
+
+Knapsack-style assignment: every decoder layer starts at its
+lowest-sensitivity candidate (typically the widest format); while the
+plan exceeds the budget, the search applies the single layer downgrade
+with the best marginal rate
+
+    (cost saved) / (sensitivity added)
+
+— the greedy Pareto step of hardware-calibrated constrained search
+(cf. 1909.10818).  Each applied step is recorded, so the trace IS the
+plan-space Pareto path: sweeping a budget from uniform-wide to
+uniform-narrow replays the same frontier.
+
+Costs come from ``costmodel`` (bytes or modeled ms), sensitivities from
+``sensitivity`` (KL or MSE vs the fp path).  Both are plain
+``{layer: {scheme: value}}`` dicts so the search is decoupled from how
+they were produced.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .plan import QuantPlan
+
+_EPS = 1e-12
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchResult:
+    assignment: dict          # layer_name -> scheme_name
+    cost: float               # total under cost_key
+    loss: float               # total sensitivity under loss_key
+    feasible: bool            # cost <= budget
+    trace: tuple              # ((cost, loss, "layer.i: a->b"), ...) applied
+
+    def plan(self, candidates: dict, *, meta: dict | None = None,
+             default="fp32") -> QuantPlan:
+        return QuantPlan.from_assignment(
+            {k: candidates[v] for k, v in self.assignment.items()},
+            default=default, meta=meta)
+
+
+def _totals(assignment, costs, sens, cost_key, loss_key):
+    cost = sum(_get(costs[l][s], cost_key) for l, s in assignment.items())
+    loss = sum(_get(sens[l][s], loss_key) for l, s in assignment.items())
+    return cost, loss
+
+
+def _get(cell, key):
+    if isinstance(cell, dict):
+        return float(cell[key])
+    return float(getattr(cell, key))
+
+
+def greedy_search(sens: dict, costs: dict, *, budget: float,
+                  cost_key: str = "bytes",
+                  loss_key: str = "kl") -> SearchResult:
+    """Assign one candidate scheme per layer so total cost <= budget.
+
+    ``sens``/``costs``: ``{layer: {scheme: cell}}`` where a cell is a dict
+    or object exposing ``loss_key`` / ``cost_key``.  Layers and their
+    candidate sets are taken from ``costs``; every (layer, scheme) must
+    also appear in ``sens``.
+    """
+    layers = list(costs)
+    # start: lowest sensitivity, ties broken toward cheaper
+    assignment = {
+        l: min(costs[l], key=lambda s: (_get(sens[l][s], loss_key),
+                                        _get(costs[l][s], cost_key)))
+        for l in layers}
+    cost, loss = _totals(assignment, costs, sens, cost_key, loss_key)
+    trace = [(cost, loss, "start")]
+
+    while cost > budget:
+        best = None          # (rate, layer, scheme, d_cost, d_loss)
+        for l in layers:
+            cur = assignment[l]
+            c_cur = _get(costs[l][cur], cost_key)
+            s_cur = _get(sens[l][cur], loss_key)
+            for s in costs[l]:
+                d_cost = c_cur - _get(costs[l][s], cost_key)
+                if d_cost <= 0:
+                    continue               # not a downgrade in this currency
+                d_loss = max(_get(sens[l][s], loss_key) - s_cur, 0.0)
+                rate = d_cost / (d_loss + _EPS)
+                if best is None or rate > best[0]:
+                    best = (rate, l, s, d_cost, d_loss)
+        if best is None:                   # fully narrowed, still over budget
+            break
+        _, l, s, d_cost, d_loss = best
+        assignment[l] = s
+        cost -= d_cost
+        loss += d_loss
+        trace.append((cost, loss, f"{l}: ->{s}"))
+    # re-total from the assignment: the clamped d_loss used for ranking can
+    # overstate the running loss when sensitivities are non-monotone
+    cost, loss = _totals(assignment, costs, sens, cost_key, loss_key)
+    return SearchResult(assignment=assignment, cost=cost, loss=loss,
+                        feasible=cost <= budget, trace=tuple(trace))
+
+
+def uniform_result(scheme: str, sens: dict, costs: dict, *,
+                   cost_key: str = "bytes",
+                   loss_key: str = "kl") -> SearchResult:
+    """The uniform plan's point in the same (cost, loss) space."""
+    assignment = {l: scheme for l in costs}
+    cost, loss = _totals(assignment, costs, sens, cost_key, loss_key)
+    return SearchResult(assignment=assignment, cost=cost, loss=loss,
+                        feasible=True,
+                        trace=((cost, loss, f"uniform {scheme}"),))
+
+
+def pareto_frontier(points) -> list:
+    """Non-dominated subset of (cost, loss) pairs, sorted by cost."""
+    pts = sorted(set(points))
+    out = []
+    best_loss = float("inf")
+    for c, l in pts:
+        if l < best_loss:
+            out.append((c, l))
+            best_loss = l
+    return out

@@ -8,7 +8,11 @@ The deployment path of the paper's scheme end-to-end:
                 ``a_bits`` (paper section V.B "inputs ... converted into
                 fixed point in runtime");
   * KV cache:   ``kv_bits`` stores K/V (or the SSM state) in the LQ wire
-                format (core/kvwire.py).
+                format (core/kvwire.py);
+  * mixed precision: ``EngineConfig.plan`` (a ``repro.plan.QuantPlan``)
+                assigns a per-layer scheme instead of one uniform
+                ``weight_scheme`` — the planned model serves through the
+                identical prefill/decode/paged paths.
 
 ``generate`` runs greedy or temperature sampling with a lax.scan'd decode
 loop inside one jit — per-token Python overhead is zero; batching is the
@@ -51,6 +55,7 @@ class EngineConfig:
     kv_group: int = 64
     weight_scheme: str | None = None     # e.g. "lq4w"; None = fp weights
     a_bits: int | None = None            # runtime activation quantization
+    plan: object = None                  # QuantPlan: per-layer mixed precision
     backend: str = "auto"
     temperature: float = 0.0             # 0 => greedy
     top_k: int | None = None
@@ -59,7 +64,17 @@ class EngineConfig:
 class Engine:
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
         self.cfg, self.ecfg = cfg, ecfg
-        if ecfg.weight_scheme is not None:
+        if ecfg.plan is not None:
+            if ecfg.weight_scheme is not None:
+                raise ValueError("pass either a uniform weight_scheme or a "
+                                 "plan, not both")
+            if ecfg.a_bits is not None:
+                raise ValueError("a_bits is per-layer under a plan — set it "
+                                 "in the plan's QuantConfigs instead")
+            self.params = transformer.quantize_params(params, cfg, ecfg.plan)
+            self.policy = ecfg.plan.policy(cfg, mode="serve",
+                                           backend=ecfg.backend)
+        elif ecfg.weight_scheme is not None:
             qcfg = schemes.get(ecfg.weight_scheme)
             if ecfg.a_bits is not None:
                 qcfg = dataclasses.replace(qcfg, a_bits=ecfg.a_bits)

@@ -1,0 +1,163 @@
+"""core/calibration.py observers: convergence, robustness, jit-compat.
+
+The mixed-precision sensitivity profiler (repro/plan/sensitivity.py)
+leans on these observers for per-layer activation ranges, so their
+numerics get dedicated coverage here.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import calibration
+
+
+def _stream(n=16, size=2048, lo=-3.0, hi=5.0, seed=0):
+    key = jax.random.key(seed)
+    for i in range(n):
+        k = jax.random.fold_in(key, i)
+        yield jax.random.uniform(k, (size,), minval=lo, maxval=hi)
+
+
+# ---------------------------------------------------------------------------
+# minmax
+# ---------------------------------------------------------------------------
+
+def test_minmax_tracks_true_range():
+    state = calibration.init("minmax")
+    for x in _stream():
+        state = calibration.update(state, x)
+    lo, hi = calibration.bounds(state)
+    assert -3.0 <= float(lo) < -2.8 and 4.8 < float(hi) <= 5.0
+    assert int(state.count) == 16
+
+
+def test_unknown_observer_rejected():
+    with pytest.raises(ValueError):
+        calibration.init("median")
+
+
+# ---------------------------------------------------------------------------
+# EMA: bounds converge to the stationary batch extremes
+# ---------------------------------------------------------------------------
+
+def test_ema_first_batch_initializes_exactly():
+    state = calibration.init("ema", momentum=0.9)
+    x = jnp.asarray([-1.0, 2.0])
+    state = calibration.update(state, x)
+    lo, hi = calibration.bounds(state)
+    assert float(lo) == -1.0 and float(hi) == 2.0
+
+
+def test_ema_converges_on_stationary_stream():
+    """On an i.i.d. stream the EMA bounds converge toward the typical
+    per-batch extremes and stay inside the global envelope."""
+    state = calibration.init("ema", momentum=0.8)
+    batch_los, batch_his = [], []
+    for x in _stream(n=50, seed=3):
+        state = calibration.update(state, x)
+        batch_los.append(float(x.min()))
+        batch_his.append(float(x.max()))
+    lo, hi = calibration.bounds(state)
+    assert np.min(batch_los) <= float(lo) <= np.mean(batch_los) + 0.05
+    assert np.mean(batch_his) - 0.05 <= float(hi) <= np.max(batch_his)
+
+
+def test_ema_forgets_transients_minmax_does_not():
+    """An early outlier batch decays out of the EMA range but pins the
+    min/max observer forever — the reason EMA exists."""
+    ema = calibration.init("ema", momentum=0.7)
+    mm = calibration.init("minmax")
+    spike = jnp.asarray([-100.0, 100.0])
+    ema = calibration.update(ema, spike)
+    mm = calibration.update(mm, spike)
+    for x in _stream(n=40, seed=5):
+        ema = calibration.update(ema, x)
+        mm = calibration.update(mm, x)
+    elo, ehi = calibration.bounds(ema)
+    mlo, mhi = calibration.bounds(mm)
+    assert float(ehi) < 10.0 and float(elo) > -10.0     # spike decayed
+    assert float(mhi) == 100.0 and float(mlo) == -100.0  # spike pinned
+
+
+# ---------------------------------------------------------------------------
+# percentile: histogram quantiles, outlier robustness
+# ---------------------------------------------------------------------------
+
+def test_percentile_bounds_clip_outliers():
+    state = calibration.init("percentile", percentile=99.0,
+                             hist_range=(-30.0, 30.0))
+    key = jax.random.key(7)
+    for i in range(8):
+        x = jax.random.normal(jax.random.fold_in(key, i), (4096,))
+        x = x.at[0].set(25.0)                  # 1 / 4096 outlier per batch
+        state = calibration.update(state, x)
+    lo, hi = calibration.bounds(state)
+    assert float(hi) < 5.0                     # outlier excluded
+    assert float(lo) > -5.0
+    assert 1.5 < float(hi)                     # but the bulk is covered
+
+
+def test_percentile_empty_histogram_falls_back_to_minmax():
+    state = calibration.init("percentile")
+    lo, hi = calibration.bounds(state)
+    assert not np.isfinite(float(lo)) or float(lo) > 0  # inf sentinel
+    state = calibration.update(state, jnp.asarray([0.5, 1.5]))
+    lo, hi = calibration.bounds(state)
+    assert 0.0 <= float(lo) <= 0.6 and 1.4 <= float(hi) <= 1.6
+
+
+def test_percentile_converges_to_quantiles():
+    """Histogram CDF read-out approximates the true stream quantiles."""
+    state = calibration.init("percentile", percentile=97.5,
+                             hist_range=(-30.0, 30.0))
+    xs = []
+    for x in _stream(n=30, lo=-8.0, hi=8.0, seed=11):
+        state = calibration.update(state, x)
+        xs.append(np.asarray(x))
+    lo, hi = calibration.bounds(state)
+    want_hi = np.quantile(np.concatenate(xs), 0.975)
+    want_lo = np.quantile(np.concatenate(xs), 0.025)
+    assert abs(float(hi) - want_hi) < 0.25     # bin width ~0.03
+    assert abs(float(lo) - want_lo) < 0.25
+
+
+# ---------------------------------------------------------------------------
+# jit-compatibility: observers run inside jit / scan unchanged
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["minmax", "ema", "percentile"])
+def test_update_is_jittable(kind):
+    state = calibration.init(kind)
+    xs = jnp.stack([x for x in _stream(n=6, size=128, seed=13)])
+    step = jax.jit(calibration.update)
+    for x in xs:
+        state = step(state, x)
+    ref = calibration.init(kind)
+    for x in xs:
+        ref = calibration.update(ref, x)
+    np.testing.assert_allclose(np.asarray(calibration.bounds(state)),
+                               np.asarray(calibration.bounds(ref)),
+                               rtol=1e-6)
+
+
+@pytest.mark.parametrize("kind", ["minmax", "ema", "percentile"])
+def test_observer_state_scans(kind):
+    """ObserverState is a registered pytree: lax.scan carries it."""
+    xs = jnp.stack([x for x in _stream(n=8, size=256, seed=17)])
+
+    def body(state, x):
+        return calibration.update(state, x), ()
+
+    state, _ = jax.lax.scan(body, calibration.init(kind), xs)
+    lo, hi = calibration.bounds(state)
+    assert float(lo) < float(hi)
+    assert int(state.count) == 8
+
+
+def test_calibrate_helper_end_to_end():
+    lo, hi = calibration.calibrate(lambda b: b * 2.0,
+                                   list(_stream(n=4, seed=19)),
+                                   kind="minmax")
+    assert float(lo) >= -6.0 and float(hi) <= 10.0
+    assert float(hi) > 9.0

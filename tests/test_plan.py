@@ -1,0 +1,349 @@
+"""Mixed-precision planner: plan round-trip, segmented model parity,
+cost model accounting, search optimality, and planned serving parity."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schemes
+from repro.kernels import ops as kops
+from repro.models import convnet, transformer
+from repro.models.config import ModelConfig
+from repro.models.layers import NO_QUANT, PlanPolicy, QuantPolicy
+from repro.plan import (QuantPlan, candidate_costs, greedy_search,
+                        layer_cost, layer_dense_params, pareto_frontier,
+                        plan_cost, profile_sensitivity, uniform_result,
+                        weight_bytes)
+from repro.plan.plan import candidates_for, layer_name
+from repro.serve import Engine, EngineConfig, PagedConfig, RequestParams, \
+    Server
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=4, d_model=64,
+                   vocab_size=256, n_heads=4, n_kv_heads=2, head_dim=16,
+                   d_ff=128, dtype="float32", remat="none")
+
+CANDS = candidates_for(TINY, ["lq8w", "lq4w", "lq2w"])
+
+
+@pytest.fixture(scope="module")
+def params():
+    return transformer.init_params(TINY, jax.random.key(0))
+
+
+def _batch(b=2, l=8, seed=1):
+    return {"tokens": jax.random.randint(jax.random.key(seed), (b, l), 0,
+                                         TINY.vocab_size, jnp.int32)}
+
+
+def _mixed_plan():
+    return QuantPlan.from_assignment(
+        {"layer.0": CANDS["lq8w"], "layer.1": CANDS["lq8w"],
+         "layer.2": CANDS["lq2w"]}, default="fp32",
+        meta={"origin": "test"})
+
+
+# ---------------------------------------------------------------------------
+# QuantPlan: resolve / JSON round trip / validation
+# ---------------------------------------------------------------------------
+
+def test_plan_json_roundtrip():
+    plan = _mixed_plan()
+    back = QuantPlan.from_json(plan.to_json())
+    assert back == plan
+    # registered schemes serialize by name, custom configs by field dict
+    obj = json.loads(QuantPlan.uniform("lq4").to_json())
+    assert obj["default"] == "lq4"
+    obj2 = json.loads(plan.to_json())
+    assert obj2["layers"]["layer.0"]["w_bits"] == 8       # gs=64, not 128
+
+
+def test_plan_resolve_fills_default_and_validates():
+    plan = _mixed_plan()
+    cfgs = plan.resolve(TINY)
+    assert len(cfgs) == TINY.n_layers
+    assert cfgs[3] == schemes.FP32                        # default fills
+    assert cfgs[0].w_bits == 8 and cfgs[2].w_bits == 2
+    with pytest.raises(ValueError, match="out of range"):
+        QuantPlan.from_assignment({"layer.9": "lq8"}).resolve(TINY)
+    with pytest.raises(ValueError, match="group_size"):
+        QuantPlan.uniform("lq8").resolve(TINY)            # gs 128 vs d64
+    with pytest.raises(ValueError, match="duplicate"):
+        QuantPlan(assignments=(("layer.0", schemes.FP32),
+                               ("layer.0", schemes.FP32)))
+
+
+def test_uniform_plan_is_trivial():
+    plan = QuantPlan.uniform(CANDS["lq8w"])
+    assert plan.is_uniform
+    assert set(plan.resolve(TINY)) == {CANDS["lq8w"]}
+
+
+# ---------------------------------------------------------------------------
+# segmented model path
+# ---------------------------------------------------------------------------
+
+def test_fp_plan_forward_matches_unplanned(params):
+    batch = _batch()
+    want, _ = transformer.forward(params, TINY, batch, policy=NO_QUANT,
+                                  training=False)
+    pol = QuantPlan.uniform("fp32").policy(TINY, mode="serve", backend="ref")
+    got, _ = transformer.forward(params, TINY, batch, policy=pol,
+                                 training=False)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_uniform_plan_matches_uniform_quantize(params):
+    batch = _batch()
+    plan = QuantPlan.uniform(CANDS["lq4w"])
+    qp_plan = transformer.quantize_params(params, TINY, plan)
+    got, _ = transformer.forward(
+        qp_plan, TINY, batch,
+        policy=plan.policy(TINY, mode="serve", backend="ref"),
+        training=False)
+    qp_uni = transformer.quantize_params(params, TINY, CANDS["lq4w"])
+    want, _ = transformer.forward(
+        qp_uni, TINY, batch,
+        policy=QuantPolicy.serve(CANDS["lq4w"], backend="ref"),
+        training=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_plan_segments_grouping():
+    a, b = CANDS["lq8w"], CANDS["lq2w"]
+    segs = transformer.plan_segments([a, a, b, a], 1, 4)
+    assert [(s, n) for s, n, _ in segs] == [(0, 2), (2, 1), (3, 1)]
+    segs2 = transformer.plan_segments([a, a, a, a], 2, 2)
+    assert len(segs2) == 1 and segs2[0][1] == 2
+
+
+def test_planned_quantize_packs_per_layer(params):
+    plan = _mixed_plan()
+    qp = transformer.quantize_params(params, TINY, plan)
+    segs = qp["decoder"]["super_segments"]
+    assert len(segs) == 3                     # [8,8] [2] [fp]
+    w0 = segs[0][0]["mixer"]["wq"]["w"]
+    w1 = segs[1][0]["mixer"]["wq"]["w"]
+    w2 = segs[2][0]["mixer"]["wq"]["w"]
+    assert isinstance(w0, kops.QWeight) and w0.bits == 8
+    assert w0.packed.shape[0] == 2            # two stacked superblocks
+    assert isinstance(w1, kops.QWeight) and w1.bits == 2
+    assert not isinstance(w2, kops.QWeight)   # fp layer untouched
+
+
+def test_plan_params_policy_mismatch_raises(params):
+    qp = transformer.quantize_params(params, TINY, _mixed_plan())
+    other = QuantPlan.from_assignment({"layer.0": CANDS["lq8w"]},
+                                      default=CANDS["lq2w"])
+    with pytest.raises(ValueError, match="mismatch"):
+        transformer.forward(qp, TINY, _batch(),
+                            policy=other.policy(TINY, backend="ref"),
+                            training=False)
+
+
+def test_planned_qat_matches_packed_serve(params):
+    """Fake-quant profiling numerics track the packed deployment."""
+    batch = _batch()
+    plan = _mixed_plan()
+    qat, _ = transformer.forward(params, TINY, batch,
+                                 policy=plan.policy(TINY, mode="qat"),
+                                 training=False)
+    qp = transformer.quantize_params(params, TINY, plan)
+    serve, _ = transformer.forward(
+        qp, TINY, batch, policy=plan.policy(TINY, backend="ref"),
+        training=False)
+    np.testing.assert_allclose(np.asarray(qat), np.asarray(serve),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_convnet_per_layer_policy():
+    cfg = convnet.MINI_CNN
+    params = convnet.init_params(cfg, jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (2, cfg.input_hw, cfg.input_hw,
+                                              cfg.in_ch))
+    fp = convnet.apply(params, cfg, x)
+    n = convnet.n_quant_layers(cfg)
+    cfgs = tuple(schemes.QuantConfig(w_bits=2, group_size=16)
+                 if i == 0 else schemes.FP32 for i in range(n))
+    mixed = convnet.apply(params, cfg, x,
+                          policy=PlanPolicy("qat", cfgs))
+    assert float(jnp.abs(mixed - fp).max()) > 0    # layer 0 quantized
+    with pytest.raises(ValueError):
+        convnet.apply(params, cfg, x, policy=PlanPolicy("qat", cfgs[:2]))
+
+
+# ---------------------------------------------------------------------------
+# cost model
+# ---------------------------------------------------------------------------
+
+def test_weight_bytes_matches_qweight_nbytes():
+    k = n = 256
+    w = jax.random.normal(jax.random.key(0), (k, n))
+    for bits in (8, 4, 2, 1):
+        qcfg = schemes.QuantConfig(w_bits=bits, group_size=64)
+        qw = kops.quantize_weight(w, bits, 64)
+        assert weight_bytes(k * n, qcfg) == qw.nbytes()
+
+
+def test_layer_costs_monotone_in_bits():
+    n = 100_000
+    by_bits = [layer_cost(n, schemes.QuantConfig(w_bits=b, group_size=64))
+               for b in (8, 4, 2)]
+    assert by_bits[0].bytes > by_bits[1].bytes > by_bits[2].bytes
+    assert by_bits[0].ms > by_bits[1].ms > by_bits[2].ms     # memory-bound
+    fp = layer_cost(n, schemes.FP32)
+    assert fp.bytes == 4.0 * n and fp.bytes > by_bits[0].bytes
+
+
+def test_lut_op_reduction_in_cost_model():
+    n = 90_000
+    lut_cfg = schemes.QuantConfig(w_bits=8, a_bits=2, lut=True,
+                                  group_size=9)
+    plain = layer_cost(n, schemes.QuantConfig(w_bits=8, group_size=9))
+    lut = layer_cost(n, lut_cfg)
+    assert lut.multiplies == n / 9                  # 1 mult per region
+    assert lut.adds == (n / 9) * 3                  # 2^2 - 1 per region
+    assert plain.multiplies == n
+
+
+def test_plan_cost_totals(params):
+    sizes = layer_dense_params(TINY)
+    assert len(sizes) == TINY.n_layers and len(set(sizes)) == 1
+    cfgs = _mixed_plan().resolve(TINY)
+    total = plan_cost(TINY, cfgs)
+    assert total["bytes"] == sum(weight_bytes(s, c)
+                                 for s, c in zip(sizes, cfgs))
+    # mixed plan sits between uniform-2 and fp
+    lo = plan_cost(TINY, (CANDS["lq2w"],) * 4)["bytes"]
+    hi = plan_cost(TINY, (schemes.FP32,) * 4)["bytes"]
+    assert lo < total["bytes"] < hi
+
+
+# ---------------------------------------------------------------------------
+# search
+# ---------------------------------------------------------------------------
+
+def _toy_problem():
+    sens = {"layer.0": {"w": {"kl": 0.001}, "n": {"kl": 1.0}},
+            "layer.1": {"w": {"kl": 0.0001}, "n": {"kl": 0.01}}}
+    costs = {"layer.0": {"w": {"bytes": 100.0}, "n": {"bytes": 25.0}},
+             "layer.1": {"w": {"bytes": 100.0}, "n": {"bytes": 25.0}}}
+    return sens, costs
+
+
+def test_greedy_downgrades_least_sensitive_first():
+    sens, costs = _toy_problem()
+    r = greedy_search(sens, costs, budget=125.0)
+    assert r.feasible
+    assert r.assignment == {"layer.0": "w", "layer.1": "n"}
+    assert r.cost == 125.0 and r.loss == pytest.approx(0.011)
+
+
+def test_greedy_infeasible_budget_flagged():
+    sens, costs = _toy_problem()
+    r = greedy_search(sens, costs, budget=10.0)
+    assert not r.feasible
+    assert r.assignment == {"layer.0": "n", "layer.1": "n"}
+
+
+def test_greedy_loss_retotaled_for_nonmonotone_sensitivity():
+    """Noisy profiles can make a narrower scheme measure *lower* loss;
+    the reported total must match the returned assignment exactly."""
+    sens = {"l0": {"w": {"kl": 0.2}, "m": {"kl": 0.5}, "n": {"kl": 0.4}}}
+    costs = {"l0": {"w": {"bytes": 100.0}, "m": {"bytes": 50.0},
+                    "n": {"bytes": 25.0}}}
+    r = greedy_search(sens, costs, budget=30.0)
+    assert r.assignment == {"l0": "n"}
+    assert r.loss == pytest.approx(0.4)        # not the clamped 0.5 path
+
+
+def test_uniform_and_frontier_helpers():
+    sens, costs = _toy_problem()
+    u = uniform_result("w", sens, costs)
+    assert u.cost == 200.0
+    pts = pareto_frontier([(200.0, 0.0011), (125.0, 0.011), (50.0, 1.01),
+                           (125.0, 0.5)])
+    assert pts == [(50.0, 1.01), (125.0, 0.011), (200.0, 0.0011)]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: searched plan strictly inside the uniform frontier
+# ---------------------------------------------------------------------------
+
+def test_searched_plan_strictly_inside_uniform_frontier(params):
+    from repro.launch.plan import build_plan, make_calib_stream
+    stream = make_calib_stream(TINY, n_batches=2, batch=4, seq_len=16)
+    cands = CANDS
+    prof = profile_sensitivity(params, TINY, stream, cands)
+    costs = {l: {s: c.to_dict() for s, c in row.items()}
+             for l, row in candidate_costs(TINY, cands).items()}
+    u8 = uniform_result("lq8w", prof.losses, costs)
+    u2 = uniform_result("lq2w", prof.losses, costs)
+    budget = (u8.cost + u2.cost) / 2
+    r = greedy_search(prof.losses, costs, budget=budget)
+    assert r.feasible
+    assert len(set(r.assignment.values())) > 1          # genuinely mixed
+    assert r.cost < u8.cost                             # cheaper than 8-bit
+    assert r.loss < u2.loss                             # better than 2-bit
+    # and the CLI-level wrapper agrees end to end
+    plan, result, _ = build_plan(TINY, params, list(cands),
+                                 budget_mb=budget / 2**20, batches=stream,
+                                 verbose=False)
+    assert result.feasible and not plan.is_uniform
+
+
+def test_plan_pareto_bench_smoke():
+    from benchmarks import plan_pareto
+    out = plan_pareto.run(verbose=False)
+    assert out["mixed_plan_inside_uniform_frontier"]
+    assert len(out["frontier"]) >= 3
+    json.dumps(out)                                     # JSON-serializable
+
+
+# ---------------------------------------------------------------------------
+# acceptance: planned model serves token-for-token through the paged path
+# ---------------------------------------------------------------------------
+
+def test_planned_serve_matches_solo_greedy(params):
+    plan = _mixed_plan()
+    prompts = [[7, 3, 200, 41, 9], [100, 2, 2, 55, 13, 77, 8]]
+    max_new = [9, 7]
+    solo = []
+    for p, n in zip(prompts, max_new):
+        eng = Engine(TINY, params, EngineConfig(max_len=32, plan=plan,
+                                                backend="ref"))
+        out, _ = eng.generate({"tokens": jnp.asarray([p], jnp.int32)},
+                              steps=n - 1)
+        solo.append(np.asarray(out)[0].tolist())
+
+    srv = Server(TINY, params,
+                 EngineConfig(max_len=32, plan=plan, backend="ref"),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                             max_context=32))
+    r0 = srv.submit(prompts[0], RequestParams(max_new_tokens=max_new[0]))
+    srv.step()
+    r1 = srv.submit(prompts[1], RequestParams(max_new_tokens=max_new[1]))
+    outs = srv.drain(max_steps=200)
+    assert outs[r0] == solo[0]
+    assert outs[r1] == solo[1]
+    assert srv.engine.decode_compilations == 1          # one compiled step
+
+
+def test_engine_rejects_scheme_and_plan(params):
+    with pytest.raises(ValueError, match="not both"):
+        Engine(TINY, params, EngineConfig(weight_scheme="lq4w",
+                                          plan=_mixed_plan()))
+    with pytest.raises(ValueError, match="per-layer under a plan"):
+        Engine(TINY, params, EngineConfig(a_bits=8, plan=_mixed_plan()))
+
+
+def test_convnet_quantize_rejects_misaligned_region():
+    cfg = convnet.MINI_CNN
+    params = convnet.init_params(cfg, jax.random.key(0))
+    n = convnet.n_quant_layers(cfg)
+    bad = (schemes.QuantConfig(w_bits=4, group_size=128),) * n  # fan-in 27
+    with pytest.raises(ValueError, match="does not divide fan-in"):
+        convnet.quantize_params(params, cfg, bad)
