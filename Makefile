@@ -1,7 +1,7 @@
 # Developer entry points.  PYTHONPATH is injected so no install is needed.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke quickstart serve-demo bench plan-smoke
+.PHONY: test smoke quickstart serve-demo bench plan-smoke fleet-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -23,3 +23,11 @@ plan-smoke:  ## mixed-precision planner: profile -> search -> serve a plan
 	$(PY) -m repro.launch.serve --arch llama3.2-1b \
 	    --plan /tmp/plan_smoke.json --steps 8
 	$(PY) -m benchmarks.run plan
+
+fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq8w,lq4w,lq2w --budget-mb 0.06 \
+	    --out examples/fleet_plan_smoke.json
+	$(PY) -m repro.launch.serve --fleet examples/fleet_smoke.json \
+	    --fleet-requests 2 --prompt-len 12 --steps 6
+	$(PY) -m benchmarks.run fleet

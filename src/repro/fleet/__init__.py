@@ -1,0 +1,20 @@
+"""Multi-tenant fleet: per-plan engines behind one host budget.
+
+    fleet.json -> FleetManifest -> FleetRegistry (priced tenants)
+               -> FleetRouter (plan-tagged admission, weighted RR)
+               -> FleetTelemetry (per-tenant tok/s, occupancy, rejects)
+
+See README.md in this directory for the subsystem design and
+``repro.launch.serve --fleet`` for the CLI entry point.
+"""
+from .registry import (FleetBudgetError, FleetManifest, FleetRegistry,
+                       Tenant, TenantSpec, load_manifest)
+from .router import FleetAdmissionError, FleetRouter, build_fleet
+from .telemetry import FleetTelemetry, TenantStats
+
+__all__ = [
+    "FleetBudgetError", "FleetManifest", "FleetRegistry", "Tenant",
+    "TenantSpec", "load_manifest",
+    "FleetAdmissionError", "FleetRouter", "build_fleet",
+    "FleetTelemetry", "TenantStats",
+]

@@ -1,0 +1,268 @@
+"""Tenant table for the multi-tenant fleet: spec -> priced, built tenant.
+
+A *tenant* is one quantization configuration of the shared base model —
+a mixed-precision :class:`~repro.plan.QuantPlan` or a uniform scheme —
+served by its own :class:`~repro.serve.PagedEngine` + page pool +
+scheduler.  The registry owns the tenant table and the **shared host
+budget**: before an engine is ever built, each tenant is priced with the
+planner's cost model (``plan/costmodel.py`` for resident weight bytes,
+``serve/pool.py::pool_nbytes`` for the page pool) and registration fails
+with :class:`FleetBudgetError` when the aggregate would exceed
+``budget_mb``.  That makes an over-budget ``fleet.json`` manifest a hard
+error at load time, not an OOM at serve time.
+
+Pricing convention matches ``repro.launch.plan --budget-mb``: weight
+bytes cover the dense decoder stack in the packed wire format (norms /
+embeddings / lm_head stay fp and are outside the budget, exactly as in
+the planner's search); pool bytes are the exact resident bytes of the
+tenant's paged KV pool.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+from repro.core import schemes
+from repro.plan import QuantPlan, plan_cost
+from repro.plan.plan import fit_group_size
+from repro.serve.engine import EngineConfig, PagedConfig, PagedEngine
+from repro.serve.pool import pool_nbytes
+from repro.serve.scheduler import Scheduler
+
+
+class FleetBudgetError(ValueError):
+    """Registering this tenant would exceed the shared host budget."""
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One manifest row: who the tenant is and what it costs.
+
+    Exactly one of ``plan`` / ``scheme`` may be set (both ``None`` serves
+    fp weights).  ``weight`` is the tenant's share in the router's
+    weighted round-robin; ``max_queued`` bounds its admission queue
+    (``None`` = unbounded).  The remaining fields are the tenant's pool
+    geometry and sampling configuration.
+    """
+    tenant_id: str
+    plan: QuantPlan | None = None       # mixed precision per-layer plan
+    scheme: str | None = None           # uniform weight scheme, e.g. "lq4w"
+    a_bits: int | None = None           # runtime activation quantization
+    kv_bits: int | None = None          # paged-pool wire format
+    kv_group: int = 64
+    weight: int = 1                     # weighted round-robin share
+    max_queued: int | None = None       # admission quota (queued requests)
+    max_slots: int = 4
+    page_size: int = 16
+    n_pages: int = 64
+    max_context: int = 256
+    temperature: float = 0.0
+    top_k: int | None = None
+
+    def __post_init__(self):
+        if not self.tenant_id:
+            raise ValueError("tenant_id must be non-empty")
+        if self.plan is not None and self.scheme is not None:
+            raise ValueError(f"{self.tenant_id}: pass either a plan or a "
+                             f"uniform scheme, not both")
+        if self.plan is not None and self.a_bits is not None:
+            raise ValueError(f"{self.tenant_id}: a_bits is per-layer under "
+                             f"a plan")
+        if self.weight < 1:
+            raise ValueError(f"{self.tenant_id}: weight must be >= 1")
+        if self.max_queued is not None and self.max_queued < 1:
+            raise ValueError(f"{self.tenant_id}: max_queued must be >= 1")
+
+    # ------------------------------------------------------------ derived
+    def resolved_plan(self, model_cfg) -> QuantPlan:
+        """The tenant's plan with local-region sizes fitted to the model.
+
+        Uniform schemes become the trivial plan (with ``a_bits`` folded
+        in); fp tenants are the all-fp32 plan.  Region fitting mirrors
+        the planner's ``candidates_for`` so registry pricing and the
+        built engine agree with ``launch.plan`` budgets.
+        """
+        base = self.plan
+        if base is None:
+            default = schemes.get(self.scheme or "fp32")
+            if self.a_bits is not None:
+                default = dataclasses.replace(default, a_bits=self.a_bits)
+            base = QuantPlan(default=default)
+        return QuantPlan(
+            assignments=tuple((n, fit_group_size(c, model_cfg))
+                              for n, c in base.assignments),
+            default=fit_group_size(base.default, model_cfg),
+            meta=base.meta)
+
+    def engine_config(self, model_cfg) -> EngineConfig:
+        if self.plan is None and self.scheme is None:
+            return EngineConfig(max_len=self.max_context,
+                                kv_bits=self.kv_bits, kv_group=self.kv_group,
+                                a_bits=self.a_bits,
+                                temperature=self.temperature,
+                                top_k=self.top_k)
+        return EngineConfig(max_len=self.max_context, kv_bits=self.kv_bits,
+                            kv_group=self.kv_group,
+                            plan=self.resolved_plan(model_cfg),
+                            temperature=self.temperature, top_k=self.top_k)
+
+    def paged_config(self) -> PagedConfig:
+        return PagedConfig(max_slots=self.max_slots,
+                           page_size=self.page_size, n_pages=self.n_pages,
+                           max_context=self.max_context)
+
+    # ----------------------------------------------------------- manifest
+    @staticmethod
+    def from_manifest(obj: dict, base_dir: str = ".") -> "TenantSpec":
+        """One ``fleet.json`` tenant entry -> spec.  ``plan`` is a path to
+        a QuantPlan JSON, resolved relative to the manifest file."""
+        obj = dict(obj)
+        plan_path = obj.pop("plan", None)
+        plan = None
+        if plan_path is not None:
+            if not os.path.isabs(plan_path):
+                plan_path = os.path.join(base_dir, plan_path)
+            plan = QuantPlan.load(plan_path)
+        tid = obj.pop("id", None) or obj.pop("tenant_id", None)
+        if tid is None:
+            raise ValueError("manifest tenant entry needs an 'id'")
+        return TenantSpec(tenant_id=tid, plan=plan, **obj)
+
+
+@dataclasses.dataclass
+class Tenant:
+    """A registered tenant: its spec plus the built serving stack."""
+    spec: TenantSpec
+    engine: PagedEngine
+    pool: object                  # PagedKVPool
+    scheduler: Scheduler
+    weight_bytes: float           # priced wire-format weight residency
+    pool_bytes: int               # exact paged-pool residency
+
+    @property
+    def tenant_id(self) -> str:
+        return self.spec.tenant_id
+
+    @property
+    def total_bytes(self) -> float:
+        return self.weight_bytes + self.pool_bytes
+
+
+class FleetRegistry:
+    """Tenant table + shared host-budget accounting.
+
+    All tenants serve the same base ``(model_cfg, params)``; each
+    registration quantizes its own copy of the weights per its plan.
+    """
+
+    def __init__(self, model_cfg, params, *, budget_mb: float | None = None,
+                 backend: str = "auto", seed: int = 0):
+        self.model_cfg, self.params = model_cfg, params
+        self.budget_mb = budget_mb
+        self.backend = backend
+        self.seed = seed
+        self.tenants: dict[str, Tenant] = {}
+
+    # ------------------------------------------------------------ pricing
+    def price(self, spec: TenantSpec) -> dict:
+        """Cost-model bytes for a spec, without building anything."""
+        wb = plan_cost(self.model_cfg, spec.resolved_plan(self.model_cfg)
+                       .resolve(self.model_cfg))["bytes"]
+        pb = pool_nbytes(self.model_cfg, n_pages=spec.n_pages,
+                         page_size=spec.page_size, kv_bits=spec.kv_bits,
+                         kv_group=spec.kv_group)
+        return {"weight_bytes": wb, "pool_bytes": pb, "total": wb + pb}
+
+    @property
+    def budget_bytes(self) -> float | None:
+        return None if self.budget_mb is None else self.budget_mb * 2**20
+
+    def total_bytes(self) -> float:
+        return sum(t.total_bytes for t in self.tenants.values())
+
+    def remaining_bytes(self) -> float:
+        if self.budget_bytes is None:
+            return float("inf")
+        return self.budget_bytes - self.total_bytes()
+
+    # ----------------------------------------------------------- register
+    def register(self, spec: TenantSpec) -> Tenant:
+        """Price, budget-check, then build the tenant's serving stack.
+        Token/completion callbacks are the router's to wire
+        (:meth:`FleetRouter._wire` owns the scheduler hooks)."""
+        if spec.tenant_id in self.tenants:
+            raise ValueError(f"duplicate tenant id {spec.tenant_id!r}")
+        priced = self.price(spec)
+        if priced["total"] > self.remaining_bytes():
+            raise FleetBudgetError(
+                f"tenant {spec.tenant_id!r} needs "
+                f"{priced['total'] / 2**20:.3f} MiB "
+                f"(weights {priced['weight_bytes'] / 2**20:.3f} + pool "
+                f"{priced['pool_bytes'] / 2**20:.3f}) but only "
+                f"{self.remaining_bytes() / 2**20:.3f} MiB of the "
+                f"{self.budget_mb:.3f} MiB host budget remain")
+        ecfg = dataclasses.replace(spec.engine_config(self.model_cfg),
+                                   backend=self.backend)
+        engine = PagedEngine(self.model_cfg, self.params, ecfg,
+                             spec.paged_config())
+        pool = engine.new_pool()
+        sched = Scheduler(engine, pool,
+                          seed=self.seed + len(self.tenants))
+        tenant = Tenant(spec=spec, engine=engine, pool=pool, scheduler=sched,
+                        weight_bytes=priced["weight_bytes"],
+                        pool_bytes=priced["pool_bytes"])
+        self.tenants[spec.tenant_id] = tenant
+        return tenant
+
+    def __getitem__(self, tenant_id: str) -> Tenant:
+        return self.tenants[tenant_id]
+
+    def __iter__(self):
+        return iter(self.tenants.values())
+
+    def __len__(self) -> int:
+        return len(self.tenants)
+
+    # ------------------------------------------------------------ summary
+    def describe(self) -> str:
+        lines = [f"FleetRegistry({len(self)} tenants, budget "
+                 f"{self.budget_mb} MiB, "
+                 f"used {self.total_bytes() / 2**20:.3f} MiB)"]
+        for t in self:
+            lines.append(
+                f"  {t.tenant_id:>12}: weight={t.spec.weight} "
+                f"wire {t.weight_bytes / 2**20:.3f} MiB + pool "
+                f"{t.pool_bytes / 2**20:.3f} MiB "
+                f"(kv_bits={t.spec.kv_bits}, slots={t.spec.max_slots}, "
+                f"pages={t.spec.n_pages}x{t.spec.page_size})")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# fleet.json manifest
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetManifest:
+    """Parsed ``fleet.json``: the shared arch/budget plus tenant specs."""
+    arch: str
+    tenants: tuple
+    budget_mb: float | None = None
+
+    def __post_init__(self):
+        ids = [t.tenant_id for t in self.tenants]
+        if len(set(ids)) != len(ids):
+            raise ValueError(f"duplicate tenant ids in manifest: {ids}")
+        if not self.tenants:
+            raise ValueError("manifest lists no tenants")
+
+
+def load_manifest(path: str) -> FleetManifest:
+    with open(path) as f:
+        obj = json.load(f)
+    base = os.path.dirname(os.path.abspath(path))
+    tenants = tuple(TenantSpec.from_manifest(t, base)
+                    for t in obj.get("tenants", []))
+    return FleetManifest(arch=obj["arch"], tenants=tenants,
+                         budget_mb=obj.get("budget_mb"))

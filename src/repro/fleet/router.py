@@ -1,0 +1,181 @@
+"""Plan-tagged admission + weighted round-robin stepping across engines.
+
+The router is the single front door of a multi-tenant host:
+
+* ``submit(tenant_id, prompt, ...)`` admits a request into its tenant's
+  scheduler, tagged so the eventual :class:`~repro.serve.Completion`
+  reports the tenant; per-tenant ``max_queued`` quotas reject (rather
+  than unboundedly queue) traffic bursts with
+  :class:`FleetAdmissionError`.
+* ``step()`` advances exactly one tenant's engine by one decode step,
+  chosen by smooth weighted round-robin over the tenants that currently
+  have work — a tenant with ``weight=3`` gets ~3x the decode steps of a
+  ``weight=1`` tenant under saturation, and idle tenants never waste a
+  step.
+
+Each tenant's engine/pool/scheduler is fully private (built by the
+:class:`~repro.fleet.registry.FleetRegistry` under the shared byte
+budget), so interleaving tenants at step granularity cannot perturb a
+tenant's greedy decode: per-tenant outputs match the tenant's solo
+engine token-for-token (asserted in ``benchmarks/fleet_throughput.py``
+and ``tests/test_fleet.py``).
+"""
+from __future__ import annotations
+
+from repro.fleet.registry import FleetManifest, FleetRegistry, load_manifest
+from repro.fleet.telemetry import FleetTelemetry
+
+
+class FleetAdmissionError(RuntimeError):
+    """Request rejected at the router (unknown tenant or quota)."""
+
+
+class FleetRouter:
+    """Routes plan-tagged requests across the registry's engines."""
+
+    def __init__(self, registry: FleetRegistry, *,
+                 telemetry: FleetTelemetry | None = None,
+                 on_token=None, on_complete=None):
+        self.registry = registry
+        self.telemetry = telemetry or FleetTelemetry()
+        self.on_token, self.on_complete = on_token, on_complete
+        self._credit = {t.tenant_id: 0 for t in registry}
+        for tenant in registry:
+            self._wire(tenant)
+
+    def _wire(self, tenant):
+        tid = tenant.tenant_id
+        self.telemetry.register(tid)   # uniform snapshot schema when idle
+
+        def tok(rid, token, _tid=tid):
+            self.telemetry.note_token(_tid)
+            if self.on_token:
+                self.on_token(_tid, rid, token)
+
+        def done(completion, _tid=tid):
+            self.telemetry.note_complete(_tid, completion.n_preemptions)
+            if self.on_complete:
+                self.on_complete(completion)
+
+        tenant.scheduler.on_token = tok
+        tenant.scheduler.on_complete = done
+
+    # -------------------------------------------------------------- submit
+    def submit(self, tenant_id: str, prompt, *, max_new_tokens: int = 16,
+               priority: int = 0, on_token=None) -> int:
+        """Admit a request for ``tenant_id``; returns its per-tenant rid.
+
+        Raises :class:`FleetAdmissionError` for unknown tenants and when
+        the tenant's ``max_queued`` admission quota is full; scheduler-
+        level validation errors (impossible requests) propagate as
+        ``ValueError``.
+        """
+        if tenant_id not in self.registry.tenants:
+            raise FleetAdmissionError(
+                f"unknown tenant {tenant_id!r}; registered: "
+                f"{sorted(self.registry.tenants)}")
+        tenant = self.registry[tenant_id]
+        quota = tenant.spec.max_queued
+        if quota is not None and \
+                len(tenant.scheduler.queued_requests()) >= quota:
+            self.telemetry.note_reject(tenant_id)
+            raise FleetAdmissionError(
+                f"tenant {tenant_id!r} admission queue is full "
+                f"({quota} queued); retry after completions")
+        rid = tenant.scheduler.submit(
+            prompt, max_new_tokens=max_new_tokens, priority=priority,
+            on_token=on_token, tenant=tenant_id)
+        self.telemetry.note_submit(tenant_id)
+        return rid
+
+    # ---------------------------------------------------------------- step
+    @property
+    def has_work(self) -> bool:
+        return any(t.scheduler.has_work for t in self.registry)
+
+    def _pick(self, eligible) -> str:
+        """Smooth weighted round-robin among tenants with work."""
+        total = sum(t.spec.weight for t in eligible)
+        best = None
+        for t in eligible:
+            self._credit[t.tenant_id] += t.spec.weight
+            if best is None or \
+                    self._credit[t.tenant_id] > self._credit[best]:
+                best = t.tenant_id
+        self._credit[best] -= total
+        return best
+
+    def step(self):
+        """Advance one tenant one decode step.  Returns ``(tenant_id,
+        completions)``, or ``None`` when no tenant has work."""
+        eligible = [t for t in self.registry if t.scheduler.has_work]
+        if not eligible:
+            return None
+        tid = self._pick(eligible)
+        tenant = self.registry[tid]
+        completions = tenant.scheduler.step()
+        self.telemetry.note_step(tid, tenant.pool.occupancy())
+        return tid, completions
+
+    def drain(self, max_steps: int | None = None) -> dict:
+        """Run until every tenant is quiescent.  Returns
+        ``{tenant_id: {rid: generated tokens}}``."""
+        steps = 0
+        while self.has_work:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps > max_steps:
+                raise RuntimeError("fleet drain exceeded max_steps")
+        return {t.tenant_id: t.scheduler.outputs()
+                for t in self.registry}
+
+    # ---------------------------------------------------------------- misc
+    def reset_telemetry(self, telemetry: FleetTelemetry | None = None
+                        ) -> FleetTelemetry:
+        """Swap in fresh telemetry (e.g. per benchmark cell) and re-wire
+        every tenant's callbacks onto it."""
+        self.telemetry = telemetry or FleetTelemetry()
+        for tenant in self.registry:
+            self._wire(tenant)
+        return self.telemetry
+
+    def output(self, tenant_id: str, rid: int) -> list[int]:
+        return list(self.registry[tenant_id].scheduler.request(rid)
+                    .generated)
+
+    def stats(self) -> dict:
+        s = self.telemetry.snapshot()
+        s["budget_mb"] = self.registry.budget_mb
+        s["used_mb"] = round(self.registry.total_bytes() / 2**20, 4)
+        for t in self.registry:
+            live = t.scheduler.stats()
+            s["tenants"].setdefault(t.tenant_id, {}).update(
+                active=live["active"], queued=live["queued"],
+                pool_occupancy=live["pool_occupancy"],
+                bytes={"weights": t.weight_bytes, "pool": t.pool_bytes})
+        return s
+
+
+# ---------------------------------------------------------------------------
+# manifest -> running fleet
+# ---------------------------------------------------------------------------
+
+def build_fleet(manifest: FleetManifest | str, model_cfg, params, *,
+                budget_mb: float | None = None, backend: str = "auto",
+                seed: int = 0, telemetry: FleetTelemetry | None = None,
+                on_token=None, on_complete=None) -> FleetRouter:
+    """Build registry + router from a manifest (path or parsed).
+
+    ``budget_mb`` overrides the manifest's budget when given.  Raises
+    :class:`~repro.fleet.registry.FleetBudgetError` if the tenants do
+    not fit the shared host budget.
+    """
+    if isinstance(manifest, str):
+        manifest = load_manifest(manifest)
+    budget = budget_mb if budget_mb is not None else manifest.budget_mb
+    registry = FleetRegistry(model_cfg, params, budget_mb=budget,
+                             backend=backend, seed=seed)
+    for spec in manifest.tenants:
+        registry.register(spec)
+    return FleetRouter(registry, telemetry=telemetry, on_token=on_token,
+                       on_complete=on_complete)

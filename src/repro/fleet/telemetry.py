@@ -1,0 +1,118 @@
+"""Per-tenant serving telemetry: tok/s, occupancy, preemptions, rejects.
+
+The router feeds events in (`note_*`); consumers pull JSON-able
+snapshots out.  Rates are computed over the wall-clock window between
+the first and the most recent observed decode step, so warmup before
+traffic starts does not dilute tok/s.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import time
+
+
+@dataclasses.dataclass
+class TenantStats:
+    """Mutable event counters for one tenant."""
+    submitted: int = 0
+    rejected: int = 0            # admission-quota rejections
+    completed: int = 0
+    tokens: int = 0              # decode tokens emitted
+    steps: int = 0               # decode steps this tenant was scheduled
+    preemptions: int = 0
+    occupancy_sum: float = 0.0   # summed per-step pool occupancy
+    occupancy_peak: float = 0.0
+    first_step_t: float | None = None
+    last_step_t: float | None = None
+
+    def tok_per_s(self) -> float:
+        if self.first_step_t is None or self.last_step_t is None:
+            return 0.0
+        dt = self.last_step_t - self.first_step_t
+        return self.tokens / dt if dt > 0 else 0.0
+
+    def occupancy_mean(self) -> float:
+        return self.occupancy_sum / self.steps if self.steps else 0.0
+
+    def snapshot(self) -> dict:
+        return {"submitted": self.submitted, "rejected": self.rejected,
+                "completed": self.completed, "tokens": self.tokens,
+                "steps": self.steps, "preemptions": self.preemptions,
+                "tok_per_s": round(self.tok_per_s(), 3),
+                "occupancy_mean": round(self.occupancy_mean(), 4),
+                "occupancy_peak": round(self.occupancy_peak, 4)}
+
+
+class FleetTelemetry:
+    """Aggregates :class:`TenantStats` across the fleet.
+
+    ``clock`` is injectable for deterministic tests.
+    """
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self.per_tenant: dict[str, TenantStats] = {}
+
+    def _stats(self, tenant_id: str) -> TenantStats:
+        return self.per_tenant.setdefault(tenant_id, TenantStats())
+
+    def register(self, tenant_id: str):
+        """Create the tenant's (zeroed) stats row so snapshots carry a
+        uniform schema even for tenants that never saw traffic."""
+        self._stats(tenant_id)
+
+    # -------------------------------------------------------------- events
+    def note_submit(self, tenant_id: str):
+        self._stats(tenant_id).submitted += 1
+
+    def note_reject(self, tenant_id: str):
+        self._stats(tenant_id).rejected += 1
+
+    def note_token(self, tenant_id: str):
+        self._stats(tenant_id).tokens += 1
+
+    def note_complete(self, tenant_id: str, n_preemptions: int = 0):
+        s = self._stats(tenant_id)
+        s.completed += 1
+        s.preemptions += n_preemptions
+
+    def note_step(self, tenant_id: str, occupancy: float):
+        s = self._stats(tenant_id)
+        now = self._clock()
+        if s.first_step_t is None:
+            s.first_step_t = now
+        s.last_step_t = now
+        s.steps += 1
+        s.occupancy_sum += occupancy
+        s.occupancy_peak = max(s.occupancy_peak, occupancy)
+
+    # ----------------------------------------------------------- snapshots
+    def snapshot(self) -> dict:
+        per = {tid: s.snapshot() for tid, s in self.per_tenant.items()}
+        # aggregate tok/s is host tokens over the union step window —
+        # NOT the sum of per-tenant rates, whose windows overlap
+        firsts = [s.first_step_t for s in self.per_tenant.values()
+                  if s.first_step_t is not None]
+        lasts = [s.last_step_t for s in self.per_tenant.values()
+                 if s.last_step_t is not None]
+        tokens = sum(s["tokens"] for s in per.values())
+        window = (max(lasts) - min(firsts)) if firsts else 0.0
+        return {"tenants": per,
+                "aggregate": {
+                    "submitted": sum(s["submitted"] for s in per.values()),
+                    "rejected": sum(s["rejected"] for s in per.values()),
+                    "completed": sum(s["completed"] for s in per.values()),
+                    "tokens": tokens,
+                    "steps": sum(s["steps"] for s in per.values()),
+                    "preemptions": sum(s["preemptions"]
+                                       for s in per.values()),
+                    "tok_per_s": round(tokens / window, 3)
+                    if window > 0 else 0.0}}
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent)
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())

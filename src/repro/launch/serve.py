@@ -8,6 +8,12 @@ cache-bytes saving.
 ``--continuous N`` switches to the continuous-batching serve layer
 (serve/server.py): N requests with staggered arrivals are scheduled over
 the paged quantized KV pool, reporting throughput and pool occupancy.
+
+``--fleet fleet.json`` hosts a multi-tenant fleet (repro.fleet): every
+manifest tenant gets its own per-plan engine + pool behind one router and
+one ``--budget-mb`` host budget; a staggered workload is routed across
+tenants and per-tenant telemetry (tok/s, occupancy, rejections) is
+reported.  The manifest carries the arch, so ``--arch`` is optional.
 """
 from __future__ import annotations
 
@@ -63,9 +69,59 @@ def _continuous(cfg, params, ecfg, args):
     print("sample:", server.output(rids[0])[:16])
 
 
+def _fleet(args):
+    """Multi-tenant fleet from a manifest: route, drain, report."""
+    import json
+
+    from repro.fleet import FleetAdmissionError, build_fleet, load_manifest
+
+    manifest = load_manifest(args.fleet)
+    cfg = configs.smoke(manifest.arch)
+    params = transformer.init_params(cfg, jax.random.key(0))
+    router = build_fleet(manifest, cfg, params, budget_mb=args.budget_mb,
+                         backend="ref")
+    print(router.registry.describe())
+
+    rng = jax.random.key(3)
+    tenants = [t.tenant_id for t in router.registry]
+    for i, tid in enumerate(tenants):          # warm both jits off the clock
+        warm = jax.random.randint(jax.random.fold_in(rng, 1000 + i),
+                                  (args.prompt_len,), 0, cfg.vocab_size)
+        router.submit(tid, warm.tolist(), max_new_tokens=2)
+    router.drain(max_steps=10_000)
+    router.reset_telemetry()                   # drop warmup counters
+
+    t0 = time.perf_counter()
+    for i in range(args.fleet_requests):
+        for j, tid in enumerate(tenants):
+            prompt = jax.random.randint(jax.random.fold_in(rng, i * 64 + j),
+                                        (args.prompt_len,), 0,
+                                        cfg.vocab_size)
+            try:
+                router.submit(tid, prompt.tolist(),
+                              max_new_tokens=args.steps + 1)
+            except FleetAdmissionError as e:     # quota full: shed + go on
+                print(f"[fleet] rejected: {e}")
+            for _ in range(args.arrival_every):  # staggered arrivals
+                router.step()
+    router.drain(max_steps=100_000)
+    dt = time.perf_counter() - t0
+
+    stats = router.stats()
+    toks = stats["aggregate"]["tokens"]
+    print(f"fleet: {len(tenants)} tenants x {args.fleet_requests} requests, "
+          f"{toks} tokens in {dt:.2f}s -> {toks / dt:.1f} tok/s aggregate")
+    print(json.dumps(stats, indent=1))
+    if args.stats_out:
+        with open(args.stats_out, "w") as f:
+            json.dump(stats, f, indent=1)
+        print(f"wrote {args.stats_out}")
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True, choices=list(configs.names()))
+    ap.add_argument("--arch", default=None, choices=list(configs.names()),
+                    help="required unless --fleet supplies the arch")
     ap.add_argument("--scheme", default=None, help="weight scheme, e.g. lq4w")
     ap.add_argument("--plan", default=None, metavar="PLAN.json",
                     help="mixed-precision QuantPlan (repro.launch.plan "
@@ -85,7 +141,23 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=128)
+    ap.add_argument("--fleet", default=None, metavar="FLEET.json",
+                    help="multi-tenant manifest (repro.fleet); per-plan "
+                         "engines behind one host budget")
+    ap.add_argument("--budget-mb", type=float, default=None,
+                    help="shared host byte budget for --fleet (overrides "
+                         "the manifest's budget_mb)")
+    ap.add_argument("--fleet-requests", type=int, default=4,
+                    help="requests submitted per tenant in --fleet mode")
+    ap.add_argument("--stats-out", default=None,
+                    help="write the fleet stats snapshot to this JSON file")
     args = ap.parse_args()
+
+    if args.fleet is not None:
+        _fleet(args)
+        return
+    if args.arch is None:
+        ap.error("--arch is required without --fleet")
 
     cfg = configs.smoke(args.arch)
     params = transformer.init_params(cfg, jax.random.key(0))

@@ -6,6 +6,6 @@ from .kvcache import (quantize_kv, dequantize_kv, make_quant_kv,
                       cache_nbytes)
 from .engine import (Engine, EngineConfig, PagedConfig, PagedEngine,
                      greedy_sample, temperature_sample)
-from .pool import PagedKVPool
+from .pool import PagedKVPool, make_pool_pages, pool_nbytes
 from .scheduler import Completion, Request, Scheduler
 from .server import RequestParams, Server

@@ -36,6 +36,49 @@ def _check_paged_support(cfg: ModelConfig):
         raise ValueError("paged serving needs rope (per-slot positions)")
 
 
+def make_pool_pages(cfg: ModelConfig, *, n_pages: int, page_size: int,
+                    kv_bits: int | None = None, kv_group: int = 64,
+                    dtype=None):
+    """Build the zero-initialized page pytree of a :class:`PagedKVPool`.
+
+    Module-level so callers can price a pool without materializing it:
+    ``jax.eval_shape(lambda: make_pool_pages(...))`` yields the structure
+    abstractly (see :func:`pool_nbytes`, used by the fleet registry's
+    host-budget accounting).
+    """
+    _check_paged_support(cfg)
+    if n_pages < 2:
+        raise ValueError("need at least one allocatable page + scratch")
+    if kv_bits is not None and cfg.head_dim % kv_group:
+        raise ValueError(f"head_dim={cfg.head_dim} not divisible by "
+                         f"kv_group={kv_group}")
+    dtype = dtype or cfg.activation_dtype
+
+    def leaf(stack: int | None):
+        one = kvwire.make_paged_kv(n_pages, page_size, cfg.n_kv_heads,
+                                   cfg.head_dim, kv_bits, kv_group, dtype)
+        if stack is None:
+            return one
+        return jax.tree.map(
+            lambda a: jnp.zeros((stack,) + a.shape, a.dtype), one)
+
+    sup = tuple({"self": {"k": leaf(cfg.n_super), "v": leaf(cfg.n_super)}}
+                for _ in cfg.pattern)
+    tail = [{"self": {"k": leaf(None), "v": leaf(None)}}
+            for _ in range(cfg.n_tail)]
+    return {"super": sup, "tail": tail}
+
+
+def pool_nbytes(cfg: ModelConfig, *, n_pages: int, page_size: int,
+                kv_bits: int | None = None, kv_group: int = 64,
+                dtype=None) -> int:
+    """Resident bytes of a pool with this geometry, without building it."""
+    pages = jax.eval_shape(lambda: make_pool_pages(
+        cfg, n_pages=n_pages, page_size=page_size, kv_bits=kv_bits,
+        kv_group=kv_group, dtype=dtype))
+    return kvwire.cache_nbytes(pages)
+
+
 class PagedKVPool:
     """Block/paged KV storage + host-side page allocator.
 
@@ -47,30 +90,12 @@ class PagedKVPool:
 
     def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
                  kv_bits: int | None = None, kv_group: int = 64, dtype=None):
-        _check_paged_support(cfg)
-        if n_pages < 2:
-            raise ValueError("need at least one allocatable page + scratch")
-        if kv_bits is not None and cfg.head_dim % kv_group:
-            raise ValueError(f"head_dim={cfg.head_dim} not divisible by "
-                             f"kv_group={kv_group}")
         self.cfg = cfg
         self.n_pages, self.page_size = n_pages, page_size
         self.kv_bits, self.kv_group = kv_bits, kv_group
-        dtype = dtype or cfg.activation_dtype
-
-        def leaf(stack: int | None):
-            one = kvwire.make_paged_kv(n_pages, page_size, cfg.n_kv_heads,
-                                       cfg.head_dim, kv_bits, kv_group, dtype)
-            if stack is None:
-                return one
-            return jax.tree.map(
-                lambda a: jnp.zeros((stack,) + a.shape, a.dtype), one)
-
-        sup = tuple({"self": {"k": leaf(cfg.n_super), "v": leaf(cfg.n_super)}}
-                    for _ in cfg.pattern)
-        tail = [{"self": {"k": leaf(None), "v": leaf(None)}}
-                for _ in range(cfg.n_tail)]
-        self.pages = {"super": sup, "tail": tail}
+        self.pages = make_pool_pages(cfg, n_pages=n_pages,
+                                     page_size=page_size, kv_bits=kv_bits,
+                                     kv_group=kv_group, dtype=dtype)
         self._permute = jax.jit(lambda pages, perm: {
             "super": kvwire.permute_pages(pages["super"], perm, stacked=True),
             "tail": kvwire.permute_pages(pages["tail"], perm)})

@@ -40,6 +40,7 @@ class Request:
     state: str = QUEUED
     n_preemptions: int = 0
     arrival: int = 0          # submit order; FCFS tiebreak + victim choice
+    tenant: str | None = None  # fleet routing tag (fleet/router.py)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +48,7 @@ class Completion:
     rid: int
     tokens: tuple[int, ...]
     n_preemptions: int
+    tenant: str | None = None
 
 
 class Scheduler:
@@ -69,23 +71,33 @@ class Scheduler:
 
     # ------------------------------------------------------------- submit
     def submit(self, prompt, *, max_new_tokens: int = 16, priority: int = 0,
-               on_token=None) -> int:
+               on_token=None, tenant: str | None = None) -> int:
+        """Validate-and-enqueue.  Every reason a request could never be
+        admitted is rejected here with a ValueError (instead of live-locking
+        the admit loop later): empty prompts, non-positive token budgets,
+        contexts beyond the prefill bucket, and page demands the pool cannot
+        satisfy even when completely empty."""
         prompt = [int(t) for t in prompt]
         if not prompt:
             raise ValueError("empty prompt")
         if max_new_tokens < 1:
-            raise ValueError("max_new_tokens must be >= 1")
+            raise ValueError(f"max_new_tokens must be >= 1, "
+                             f"got {max_new_tokens}")
         total = len(prompt) + max_new_tokens
         if total > self.pcfg.max_context:
             raise ValueError(f"prompt+max_new_tokens={total} exceeds "
                              f"max_context={self.pcfg.max_context}")
         need = -(-total // self.pcfg.page_size)
         if need > self.pool.n_allocatable:
-            raise ValueError("request needs more pages than the pool holds")
+            raise ValueError(
+                f"request needs {need} pages at full length but the pool "
+                f"holds only {self.pool.n_allocatable} allocatable pages "
+                f"(n_pages={self.pool.n_pages} minus scratch); it could "
+                f"never be admitted")
         rid = self._next_rid
         self._next_rid += 1
         req = Request(rid, prompt, max_new_tokens, priority=priority,
-                      on_token=on_token, arrival=rid)
+                      on_token=on_token, arrival=rid, tenant=tenant)
         self._requests[rid] = req
         self._lanes.setdefault(priority, deque()).append(req)
         return rid
@@ -106,10 +118,16 @@ class Scheduler:
         return {"active": len(self.active_requests()),
                 "queued": len(self.queued_requests()),
                 "pool_occupancy": self.pool.occupancy(),
-                "steps": self._decode_steps}
+                "steps": self._decode_steps,
+                "preemptions": sum(r.n_preemptions
+                                   for r in self._requests.values())}
 
     def request(self, rid: int) -> Request:
         return self._requests[rid]
+
+    def outputs(self) -> dict[int, list[int]]:
+        """Generated tokens of every submitted request so far."""
+        return {rid: list(r.generated) for rid, r in self._requests.items()}
 
     # ------------------------------------------------------------ helpers
     def _emit(self, req: Request, tok: int):
@@ -125,7 +143,8 @@ class Scheduler:
             self._slots[slot] = None
         self.pool.free(req.rid)
         req.state = COMPLETE
-        done = Completion(req.rid, tuple(req.generated), req.n_preemptions)
+        done = Completion(req.rid, tuple(req.generated), req.n_preemptions,
+                          tenant=req.tenant)
         events.append(done)
         if self.on_complete:
             self.on_complete(done)
@@ -250,4 +269,4 @@ class Scheduler:
             steps += 1
             if max_steps is not None and steps > max_steps:
                 raise RuntimeError("drain exceeded max_steps")
-        return {rid: list(r.generated) for rid, r in self._requests.items()}
+        return self.outputs()

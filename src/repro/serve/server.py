@@ -24,6 +24,7 @@ class RequestParams:
     """Per-request sampling/scheduling parameters."""
     max_new_tokens: int = 16
     priority: int = 0
+    tenant: str | None = None    # fleet tenant tag; echoed on Completion
 
 
 class Server:
@@ -44,7 +45,8 @@ class Server:
         """Enqueue a request; returns its request id immediately."""
         return self.scheduler.submit(
             prompt, max_new_tokens=params.max_new_tokens,
-            priority=params.priority, on_token=on_token)
+            priority=params.priority, on_token=on_token,
+            tenant=params.tenant)
 
     def step(self) -> list[Completion]:
         """Advance every in-flight request by one token."""

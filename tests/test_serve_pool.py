@@ -179,6 +179,28 @@ def test_preemption_recovers_and_is_exact_fp(params):
     assert srv.pool.n_allocated == 0           # everything released
 
 
+def test_priority_request_survives_preemption_and_matches_solo(params):
+    """Priority lanes under pool pressure: when pages run out, the
+    low-priority request is the preemption victim; the high-priority
+    request is never preempted and reproduces its solo-engine greedy
+    tokens exactly (and the fp victim recovers exactly too)."""
+    low_p, high_p = _prompts()[:2]
+    ref_high = _solo(params, high_p, 16)
+    ref_low = _solo(params, low_p, 16)
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=10,
+                             max_context=32))
+    low = srv.submit(low_p, RequestParams(max_new_tokens=16, priority=0))
+    srv.step()                                 # low takes a slot first
+    high = srv.submit(high_p, RequestParams(max_new_tokens=16, priority=5))
+    outs = srv.drain(max_steps=500)
+    assert srv.scheduler.request(low).n_preemptions >= 1
+    assert srv.scheduler.request(high).n_preemptions == 0
+    assert outs[high] == ref_high              # uninterrupted, solo-exact
+    assert outs[low] == ref_low                # fp recompute resume is exact
+    assert srv.scheduler.stats()["preemptions"] >= 1
+
+
 def test_pool_too_small_for_single_request_rejected(params):
     srv = Server(TINY, params, EngineConfig(max_len=32),
                  PagedConfig(max_slots=2, page_size=4, n_pages=3,
@@ -195,6 +217,36 @@ def test_submit_validation(params):
         srv.submit([], RequestParams())
     with pytest.raises(ValueError):
         srv.submit(list(range(30)), RequestParams(max_new_tokens=8))
+    with pytest.raises(ValueError):            # non-positive token budget
+        srv.submit([1, 2, 3], RequestParams(max_new_tokens=0))
+    with pytest.raises(ValueError):
+        srv.submit([1, 2, 3], RequestParams(max_new_tokens=-4))
+
+
+def test_submit_rejects_request_pool_can_never_hold(params):
+    """A request whose full length exceeds the pool's allocatable pages is
+    rejected at submit with a clear error instead of live-locking the
+    admit loop (pool: 4 pages x 4 = 16 token-slots < 18 needed)."""
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=1, page_size=4, n_pages=5,
+                             max_context=32))
+    with pytest.raises(ValueError, match="never be admitted"):
+        srv.submit(list(range(10)), RequestParams(max_new_tokens=8))
+    srv.submit(list(range(10)), RequestParams(max_new_tokens=6))  # 16 fits
+    srv.drain(max_steps=200)
+
+
+def test_completion_carries_tenant_tag(params):
+    srv = Server(TINY, params, EngineConfig(max_len=32),
+                 PagedConfig(max_slots=1, page_size=4, n_pages=20,
+                             max_context=32))
+    done = []
+    srv.scheduler.on_complete = done.append
+    srv.submit(_prompts()[0], RequestParams(max_new_tokens=2,
+                                            tenant="gold"))
+    srv.submit(_prompts()[1], RequestParams(max_new_tokens=2))
+    srv.drain(max_steps=200)
+    assert [c.tenant for c in done] == ["gold", None]
 
 
 # ---------------------------------------------------------------------------
