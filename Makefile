@@ -1,7 +1,8 @@
 # Developer entry points.  PYTHONPATH is injected so no install is needed.
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
-.PHONY: test smoke quickstart serve-demo bench plan-smoke fleet-smoke
+.PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
+	fleet-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -23,6 +24,17 @@ plan-smoke:  ## mixed-precision planner: profile -> search -> serve a plan
 	$(PY) -m repro.launch.serve --arch llama3.2-1b \
 	    --plan /tmp/plan_smoke.json --steps 8
 	$(PY) -m benchmarks.run plan
+
+kv-plan-smoke: ## joint weight x kv plan -> serve via heterogeneous pool
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq8w,lq4w,lq2w --budget-mb 0.075 \
+	    --kv 8,4,2 --kv-group 16 --kv-tokens 256 \
+	    --out /tmp/kv_plan_smoke.json
+	$(PY) -m repro.launch.serve --arch llama3.2-1b \
+	    --plan /tmp/kv_plan_smoke.json --continuous 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6
+	$(PY) -m benchmarks.run kvplan
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

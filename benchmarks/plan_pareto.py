@@ -7,19 +7,31 @@ acceptance bar — a searched plan strictly inside the uniform frontier
 (cheaper than uniform-8 at lower sensitivity loss than uniform-2) — is
 checked here and asserted in tests/test_plan.py.
 
-Run:  PYTHONPATH=src python -m benchmarks.plan_pareto
+``--kv`` (or :func:`run_kv`) sweeps the *cache* axis instead: per-layer
+KV bitwidths searched over {8, 4, 2, 1}-bit wire formats against the
+uniform-kv points {8, 4, 2}, in exact cache bytes/token.  The bar is the
+same box: some genuinely mixed kv map strictly inside the uniform-kv
+frontier (fewer bytes/token than uniform-8 at lower kv fake-quant loss
+than uniform-2), plus a count of the uniform points each mixed plan
+dominates outright.
+
+Run:  PYTHONPATH=src python -m benchmarks.plan_pareto [--kv]
 """
 from __future__ import annotations
 
 import json
+import sys
 
 import jax
 
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.models import transformer
 from repro.models.config import ModelConfig
-from repro.plan import (candidate_costs, greedy_search, pareto_frontier,
-                        profile_sensitivity, uniform_result)
+from repro.plan import (QuantPlan, candidate_costs, greedy_search,
+                        kv_bits_of_label, kv_candidate_costs, kv_label,
+                        pareto_frontier, plan_kv_cost,
+                        profile_kv_sensitivity, profile_sensitivity,
+                        uniform_result)
 from repro.plan.plan import candidates_for
 
 CFG = ModelConfig(name="plan-bench", family="dense", n_layers=4,
@@ -27,15 +39,23 @@ CFG = ModelConfig(name="plan-bench", family="dense", n_layers=4,
                   head_dim=16, d_ff=128, dtype="float32", remat="none")
 
 SCHEMES = ("lq8w", "lq4w", "lq2w")
+KV_CANDIDATES = (8, 4, 2, 1)       # searched cache bitwidths
+KV_UNIFORMS = (8, 4, 2)            # the uniform-kv comparison points
+KV_GROUP = 16                      # divides head_dim
 N_BUDGETS = 5
 METRIC = "kl"
 
 
-def _profile():
+def _calib_params():
     params = transformer.init_params(CFG, jax.random.key(0))
     data = SyntheticLM(DataConfig(vocab_size=CFG.vocab_size, seq_len=32,
                                   global_batch=4, seed=7))
     batches = [{"tokens": data.batch(i)["tokens"]} for i in range(2)]
+    return params, batches
+
+
+def _profile():
+    params, batches = _calib_params()
     cands = candidates_for(CFG, SCHEMES)
     prof = profile_sensitivity(params, CFG, batches, cands)
     costs = {l: {s: c.to_dict() for s, c in row.items()}
@@ -90,5 +110,82 @@ def run(verbose: bool = True) -> dict:
     return out
 
 
+# ---------------------------------------------------------------------------
+# per-layer KV-bitwidth sweep (cache bytes/token vs kv fake-quant loss)
+# ---------------------------------------------------------------------------
+
+def run_kv(verbose: bool = True) -> dict:
+    params, batches = _calib_params()
+    kv_sens = profile_kv_sensitivity(params, CFG, batches, KV_CANDIDATES,
+                                     kv_group=KV_GROUP)
+    kv_costs = kv_candidate_costs(CFG, KV_CANDIDATES, kv_group=KV_GROUP)
+    uniforms = {b: uniform_result(kv_label(b), kv_sens, kv_costs,
+                                  cost_key="bytes_per_token",
+                                  loss_key=METRIC)
+                for b in KV_UNIFORMS}
+    wide, narrow = uniforms[KV_UNIFORMS[0]], uniforms[KV_UNIFORMS[-1]]
+
+    rows = []
+    for i in range(N_BUDGETS):
+        frac = (i + 1) / (N_BUDGETS + 1)
+        budget = narrow.cost + frac * (wide.cost - narrow.cost)
+        r = greedy_search(kv_sens, kv_costs, budget=budget,
+                          cost_key="bytes_per_token", loss_key=METRIC)
+        kv_map = {l: kv_bits_of_label(s) for l, s in r.assignment.items()}
+        plan = QuantPlan.from_assignment(
+            {}, default="fp32", kv_bits=kv_map, kv_group=KV_GROUP,
+            meta={"origin": "plan_pareto --kv",
+                  "budget_bytes_per_token": budget})
+        exact = plan_kv_cost(CFG, plan.resolve_kv(CFG), kv_group=KV_GROUP)
+        assert exact["bytes_per_token"] == r.cost    # cost model is exact
+        dominated = sum(1 for u in uniforms.values()
+                        if r.cost < u.cost and r.loss <= u.loss)
+        rows.append({"budget_bytes_per_token": budget,
+                     "bytes_per_token": r.cost, "loss": r.loss,
+                     "feasible": r.feasible, "kv_bits": kv_map,
+                     "mixed": len(set(kv_map.values())) > 1,
+                     "uniform_points_dominated": dominated,
+                     "plan": json.loads(plan.to_json())})
+
+    frontier = pareto_frontier(
+        [(r["bytes_per_token"], r["loss"]) for r in rows]
+        + [(u.cost, u.loss) for u in uniforms.values()])
+    # the acceptance bar: some genuinely mixed kv map strictly beats the
+    # box spanned by uniform-8 bytes/token and uniform-2 loss
+    inside = any(r["mixed"] and r["bytes_per_token"] < wide.cost
+                 and r["loss"] < narrow.loss for r in rows)
+
+    out = {
+        "model": CFG.name, "kv_candidates": list(KV_CANDIDATES),
+        "kv_uniforms": list(KV_UNIFORMS), "kv_group": KV_GROUP,
+        "metric": METRIC,
+        "uniform": {kv_label(b): {"bytes_per_token": u.cost, "loss": u.loss}
+                    for b, u in uniforms.items()},
+        "planned": rows,
+        "frontier": frontier,
+        "mixed_kv_inside_uniform_frontier": inside,
+        "kv_sensitivity": kv_sens,
+    }
+    if verbose:
+        print(f"\n== per-layer KV-bitwidth Pareto ({CFG.name}, "
+              f"{CFG.n_layers} layers, group {KV_GROUP}) ==")
+        print(f"  {'point':>20} {'B/token':>9} {METRIC:>12}")
+        for b, u in uniforms.items():
+            print(f"  {'uniform kv' + str(b):>20} {u.cost:>9,.0f} "
+                  f"{u.loss:>12.3e}")
+        for r in rows:
+            mix = "+".join(str(b) for b in
+                           sorted(set(r["kv_bits"].values()), reverse=True))
+            print(f"  {'kv plan ' + mix:>20} {r['bytes_per_token']:>9,.0f} "
+                  f"{r['loss']:>12.3e}  dominates "
+                  f"{r['uniform_points_dominated']}/{len(uniforms)} uniforms")
+        print(f"  mixed kv plan strictly inside uniform-kv frontier: "
+              f"{inside}")
+    return out
+
+
 if __name__ == "__main__":
-    print(json.dumps(run(), indent=2))
+    if "--kv" in sys.argv[1:]:
+        print(json.dumps(run_kv(), indent=2))
+    else:
+        print(json.dumps(run(), indent=2))

@@ -11,6 +11,7 @@ One benchmark per paper table/figure:
   fleet    multi-tenant fleet: two plans, one budget, per-tenant tok/s
   roofline dry-run roofline table (reads experiments/dryrun/)
   plan     mixed-precision plan Pareto sweep (accuracy proxy vs cost)
+  kvplan   per-layer KV-bitwidth sweep (cache bytes/token vs kv loss)
 """
 from __future__ import annotations
 
@@ -20,7 +21,7 @@ import sys
 def main(argv=None):
     names = (argv if argv is not None else sys.argv[1:]) or [
         "table3", "fig8", "table45", "kernels", "serve", "fleet", "plan",
-        "table2", "fig10", "roofline"]
+        "kvplan", "table2", "fig10", "roofline"]
     results = {}
     for name in names:
         if name == "table2":
@@ -43,6 +44,10 @@ def main(argv=None):
             from . import roofline_table as m
         elif name == "plan":
             from . import plan_pareto as m
+        elif name == "kvplan":
+            from . import plan_pareto as m
+            results[name] = m.run_kv()
+            continue
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         results[name] = m.run()

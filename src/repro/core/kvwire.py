@@ -188,9 +188,66 @@ def dequantize_state(q: dict, n: int) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# per-layer (heterogeneous) layout helpers
+# ---------------------------------------------------------------------------
+
+KV_BITS = (8, 4, 2, 1)     # the wire format's expressible widths (cpb 2^k)
+
+
+def check_kv_bits(bits) -> None:
+    """The wire format infers bits from shapes, so only power-of-two
+    widths round-trip (6/5/3-bit would alias another cpb)."""
+    if bits is not None and bits not in KV_BITS:
+        raise ValueError(f"kv_bits must be one of {KV_BITS} or None (fp), "
+                         f"got {bits!r}")
+
+
+def segment_runs(values, p_len: int, n_super: int) -> list:
+    """Group consecutive superblocks whose per-position values match.
+
+    ``values`` is a per-layer list (length >= n_super * p_len); the key of
+    superblock ``s`` is ``tuple(values[s*p_len + j] for j in range(p_len))``.
+    Returns ``[(start_super, size, key), ...]`` — the maximal runs one
+    stacked cache array (or scan body) can cover.  This is the shared
+    grouping rule behind ``transformer.plan_segments`` and the
+    heterogeneous pool layout in ``serve/pool.py``: per-layer kv bitwidths
+    change packed leaf *shapes*, so each run gets its own stacked array.
+    """
+    segs = []
+    s = 0
+    while s < n_super:
+        key = tuple(values[s * p_len + j] for j in range(p_len))
+        e = s + 1
+        while e < n_super and key == tuple(values[e * p_len + j]
+                                           for j in range(p_len)):
+            e += 1
+        segs.append((s, e - s, key))
+        s = e
+    return segs
+
+
+# ---------------------------------------------------------------------------
 # accounting
 # ---------------------------------------------------------------------------
 
 def cache_nbytes(cache) -> int:
     """Total bytes of a (possibly mixed fp/quantized) cache pytree."""
     return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def kv_token_nbytes(kv_heads: int, head_dim: int, bits: int | None,
+                    group_size: int = 64, fp_itemsize: int = 4) -> float:
+    """Exact wire bytes one cached token costs for one K+V pair.
+
+    Matches the paged-pool leaf byte-for-byte: packed codes are
+    ``head_dim * bits / 8`` per head plus an f32 (scale, zmin) pair per
+    local region; fp caches pay ``fp_itemsize`` per element.  Used by
+    ``plan/costmodel.py`` to price per-layer cache budgets and by the
+    pool-geometry property tests.
+    """
+    if bits is None:
+        per_head = head_dim * fp_itemsize
+    else:
+        check_kv_bits(bits)
+        per_head = head_dim * bits / 8 + 2 * 4 * (head_dim // group_size)
+    return 2.0 * kv_heads * per_head

@@ -25,7 +25,7 @@ import os
 
 from repro.core import schemes
 from repro.plan import QuantPlan, plan_cost
-from repro.plan.plan import fit_group_size
+from repro.plan.plan import fit_group_size, fit_kv_group
 from repro.serve.engine import EngineConfig, PagedConfig, PagedEngine
 from repro.serve.pool import pool_nbytes
 from repro.serve.scheduler import Scheduler
@@ -69,6 +69,10 @@ class TenantSpec:
         if self.plan is not None and self.a_bits is not None:
             raise ValueError(f"{self.tenant_id}: a_bits is per-layer under "
                              f"a plan")
+        if self.plan is not None and self.plan.has_kv \
+                and self.kv_bits is not None:
+            raise ValueError(f"{self.tenant_id}: kv_bits is per-layer under "
+                             f"a plan with a kv map")
         if self.weight < 1:
             raise ValueError(f"{self.tenant_id}: weight must be >= 1")
         if self.max_queued is not None and self.max_queued < 1:
@@ -93,7 +97,18 @@ class TenantSpec:
             assignments=tuple((n, fit_group_size(c, model_cfg))
                               for n, c in base.assignments),
             default=fit_group_size(base.default, model_cfg),
-            meta=base.meta)
+            meta=base.meta,
+            kv_bits=base.kv_bits, kv_default=base.kv_default,
+            kv_group=fit_kv_group(base.kv_group, model_cfg.head_dim))
+
+    def pool_kv(self, model_cfg) -> tuple:
+        """``(kv_bits, kv_group)`` of the tenant's page pool — the plan's
+        per-layer map when it carries one (heterogeneous geometry),
+        else the spec's uniform setting."""
+        rp = self.resolved_plan(model_cfg)
+        if rp.has_kv:
+            return rp.resolve_kv(model_cfg), rp.kv_group
+        return self.kv_bits, self.kv_group
 
     def engine_config(self, model_cfg) -> EngineConfig:
         if self.plan is None and self.scheme is None:
@@ -166,12 +181,19 @@ class FleetRegistry:
 
     # ------------------------------------------------------------ pricing
     def price(self, spec: TenantSpec) -> dict:
-        """Cost-model bytes for a spec, without building anything."""
+        """Cost-model bytes for a spec, without building anything.
+
+        Pool bytes honor a plan's per-layer kv map: a mixed-KV tenant is
+        priced with its exact heterogeneous page geometry (eval_shape over
+        the real pytree), so dropping deep layers to 2-bit cache frees
+        real budget headroom instead of being billed at the widest layer.
+        """
         wb = plan_cost(self.model_cfg, spec.resolved_plan(self.model_cfg)
                        .resolve(self.model_cfg))["bytes"]
+        kv_bits, kv_group = spec.pool_kv(self.model_cfg)
         pb = pool_nbytes(self.model_cfg, n_pages=spec.n_pages,
-                         page_size=spec.page_size, kv_bits=spec.kv_bits,
-                         kv_group=spec.kv_group)
+                         page_size=spec.page_size, kv_bits=kv_bits,
+                         kv_group=kv_group)
         return {"weight_bytes": wb, "pool_bytes": pb, "total": wb + pb}
 
     @property

@@ -8,6 +8,13 @@ stream, prices every (layer, scheme) cell with the roofline cost model,
 runs the greedy Pareto search under the byte (``--budget-mb``) or modeled
 latency (``--budget-ms``) budget, and emits a serializable QuantPlan that
 ``repro.launch.serve --plan plan.json`` deploys directly.
+
+``--kv 8,4,2`` (optionally with ``fp``) extends the search to the joint
+weight x KV-cache space: each layer's cache bitwidth is profiled
+(fake-quant of its K/V stream), priced at ``--kv-tokens`` of context in
+the exact wire format, and folded into the same byte budget, so the
+emitted plan carries a per-layer ``kv_bits`` map the paged serve pool
+deploys as heterogeneous page geometry.
 """
 from __future__ import annotations
 
@@ -18,7 +25,9 @@ import jax
 from repro import configs
 from repro.data.synthetic import DataConfig, SyntheticLM
 from repro.models import transformer
-from repro.plan import (candidate_costs, greedy_search, plan_cost,
+from repro.plan import (candidate_costs, fit_kv_group, greedy_search,
+                        joint_space, kv_candidate_costs, plan_cost,
+                        plan_kv_cost, profile_kv_sensitivity,
                         profile_sensitivity, uniform_result)
 from repro.plan.plan import candidates_for
 
@@ -32,8 +41,17 @@ def make_calib_stream(cfg, *, n_batches: int, batch: int, seq_len: int,
 
 
 def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
-               metric: str = "kl", batches=None, verbose: bool = True):
-    """profile -> price -> search.  Returns (plan, search_result, profile)."""
+               metric: str = "kl", batches=None, verbose: bool = True,
+               kv_bits=None, kv_group: int = 64, kv_tokens: int = 256):
+    """profile -> price -> search.  Returns (plan, search_result, profile).
+
+    ``kv_bits`` (e.g. ``[8, 4, 2]``, ``None`` entries meaning fp) switches
+    to the joint weight x cache search: sensitivities and byte costs of
+    both axes merge into one per-layer grid (``plan.search.joint_space``)
+    and the plan comes back with a per-layer kv map.  Joint search prices
+    the cache at ``kv_tokens`` tokens of context, and needs the byte
+    budget (``budget_mb``).
+    """
     if (budget_mb is None) == (budget_ms is None):
         raise ValueError("pass exactly one of budget_mb / budget_ms")
     cands = candidates_for(cfg, scheme_names)
@@ -42,6 +60,40 @@ def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
              for l, row in candidate_costs(cfg, cands).items()}
     cost_key = "bytes" if budget_ms is None else "ms"
     budget = budget_mb * 2**20 if budget_ms is None else budget_ms
+    if kv_bits is not None:
+        if budget_mb is None:
+            raise ValueError("joint kv search prices cache bytes — use "
+                             "budget_mb, not budget_ms")
+        kvg = fit_kv_group(kv_group, cfg.head_dim)
+        kv_sens = profile_kv_sensitivity(params, cfg, batches, kv_bits,
+                                         kv_group=kvg)
+        kv_costs = kv_candidate_costs(cfg, kv_bits, kv_group=kvg,
+                                      tokens=kv_tokens)
+        sens = joint_space(prof.losses, kv_sens)
+        costs = joint_space(costs, kv_costs)
+        result = greedy_search(sens, costs, budget=budget,
+                               cost_key=cost_key, loss_key=metric)
+        meta = {"arch": cfg.name, "budget": budget, "budget_key": cost_key,
+                "metric": metric, "schemes": ",".join(scheme_names),
+                "kv_bits": ",".join("fp" if b is None else str(b)
+                                    for b in kv_bits),
+                "kv_tokens": kv_tokens, "feasible": result.feasible}
+        plan = result.joint_plan(cands, kv_group=kvg, meta=meta)
+        if verbose:
+            print(f"== planned {cfg.name} (joint weight x kv): budget "
+                  f"{budget:.4g} {cost_key}, metric {metric} ==")
+            for layer in costs:
+                s = result.assignment[layer]
+                print(f"  {layer:>10} -> {s:>12}  "
+                      f"bytes={costs[layer][s]['bytes']:>12,.0f}  "
+                      f"{metric}={sens[layer][s][metric]:.3e}")
+            kv_resolved = plan.resolve_kv(cfg)
+            kvcost = plan_kv_cost(cfg, kv_resolved, kv_group=kvg,
+                                  tokens=kv_tokens)
+            print(f"  total: cost={result.cost:.4g} {cost_key} "
+                  f"loss={result.loss:.3e} feasible={result.feasible}; "
+                  f"cache {kvcost['bytes_per_token']:.0f} B/token")
+        return plan, result, prof
     result = greedy_search(prof.losses, costs, budget=budget,
                            cost_key=cost_key, loss_key=metric)
     meta = {"arch": cfg.name, "budget": budget, "budget_key": cost_key,
@@ -79,6 +131,14 @@ def main(argv=None):
     ap.add_argument("--batches", type=int, default=2)
     ap.add_argument("--batch-size", type=int, default=4)
     ap.add_argument("--seq-len", type=int, default=32)
+    ap.add_argument("--kv", default=None, metavar="BITS",
+                    help="comma-separated cache bitwidth candidates "
+                         "(e.g. '8,4,2' or 'fp,8,2'): joint weight x kv "
+                         "search; the plan gains a per-layer kv_bits map")
+    ap.add_argument("--kv-group", type=int, default=64,
+                    help="cache local-region size (clamped to head_dim)")
+    ap.add_argument("--kv-tokens", type=int, default=256,
+                    help="context tokens the cache budget is priced at")
     ap.add_argument("--out", default="plan.json")
     args = ap.parse_args(argv)
 
@@ -88,10 +148,15 @@ def main(argv=None):
     params = transformer.init_params(cfg, jax.random.key(0))
     stream = make_calib_stream(cfg, n_batches=args.batches,
                                batch=args.batch_size, seq_len=args.seq_len)
+    kv_bits = None
+    if args.kv is not None:
+        kv_bits = [None if s.strip() in ("fp", "none") else int(s)
+                   for s in args.kv.split(",")]
     plan, result, _ = build_plan(
         cfg, params, [s.strip() for s in args.schemes.split(",")],
         budget_mb=args.budget_mb, budget_ms=args.budget_ms,
-        metric=args.metric, batches=stream)
+        metric=args.metric, batches=stream,
+        kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=args.kv_tokens)
     print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg))['mb']:.4f} MiB")
     plan.save(args.out)
     print(f"wrote {args.out}")

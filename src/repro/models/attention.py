@@ -375,6 +375,16 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
                            rope=rope and kind != "cross",
                            positions=positions, rope_theta=rope_theta,
                            policy=policy)
+    if cache is None and kind != "cross" and \
+            getattr(policy, "kv_fq", None) is not None:
+        # cache-free forward under a kv-quantized policy: round K/V through
+        # the wire format so sensitivity profiling sees exactly the decode
+        # numerics (post-rope, per-position local regions along head_dim)
+        fq_bits, fq_group = policy.kv_fq
+        k = kvcache.dequantize_kv(kvcache.quantize_kv(k, fq_bits, fq_group),
+                                  head_dim, k.dtype)
+        v = kvcache.dequantize_kv(kvcache.quantize_kv(v, fq_bits, fq_group),
+                                  head_dim, v.dtype)
 
     new_cache = cache
     ring = kind in ("local", "chunked")   # fixed-size rotating cache

@@ -38,6 +38,7 @@ class QuantPolicy:
     mode: str = "none"
     cfg: schemes.QuantConfig = schemes.FP32
     backend: str = "auto"      # kernel backend: auto | pallas | interpret | ref
+    kv_fq: tuple | None = None  # (bits, group): fake-quant K/V when uncached
 
     @staticmethod
     def train_fp():
@@ -70,13 +71,21 @@ class PlanPolicy:
     configs: tuple                              # per-layer QuantConfig
     backend: str = "auto"
     base_cfg: schemes.QuantConfig = schemes.FP32
+    kv_bits: tuple = ()                         # per-layer cache bits | None
+    kv_group: int = 64                          # cache local-region size
 
     @property
     def cfg(self) -> schemes.QuantConfig:
         return self.base_cfg
 
+    def layer_kv(self, i: int) -> int | None:
+        """Cache bitwidth of decoder layer ``i`` (None = fp cache)."""
+        return self.kv_bits[i] if self.kv_bits else None
+
     def layer(self, i: int) -> QuantPolicy:
-        return QuantPolicy(self.mode, self.configs[i], self.backend)
+        kv = self.layer_kv(i)
+        return QuantPolicy(self.mode, self.configs[i], self.backend,
+                           kv_fq=None if kv is None else (kv, self.kv_group))
 
     @property
     def n_layers(self) -> int:

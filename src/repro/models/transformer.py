@@ -273,7 +273,8 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
     ``quantize_params(plan)`` — routes to the segmented walker, which
     scans each run of identically-configured superblocks separately.
     """
-    if isinstance(policy, PlanPolicy) or "super_segments" in params:
+    if isinstance(policy, PlanPolicy) or "super_segments" in params \
+            or (caches is not None and "super_segments" in caches):
         return _stack_apply_planned(
             params, x, cfg, pattern, policy=policy, caches=caches,
             cache_pos=cache_pos, enc_out=enc_out, positions=positions,
@@ -329,19 +330,25 @@ def plan_segments(configs, p_len: int, n_super: int) -> list:
 
     Returns ``[(start_super, size, per_position_cfgs), ...]`` — the
     maximal runs a single scan body can cover, so a mostly-uniform plan
-    stays nearly as compact as the uniform scan.
+    stays nearly as compact as the uniform scan.  ``configs`` entries may
+    be any hashable per-layer key: plain :class:`QuantConfig` for a
+    weight-only plan, or ``(QuantConfig, kv_bits)`` pairs when the plan
+    also assigns per-layer cache bitwidths — a segment must be uniform in
+    *both* so its stacked cache leaves share one wire shape.
     """
-    segs = []
-    s = 0
-    while s < n_super:
-        key = tuple(configs[s * p_len + j] for j in range(p_len))
-        e = s + 1
-        while e < n_super and key == tuple(configs[e * p_len + j]
-                                           for j in range(p_len)):
-            e += 1
-        segs.append((s, e - s, key))
-        s = e
-    return segs
+    return kvwire.segment_runs(configs, p_len, n_super)
+
+
+def _policy_kv_list(policy, n_layers: int) -> tuple:
+    """Per-layer cache bits a (possibly uniform) policy implies."""
+    kv = getattr(policy, "kv_bits", ()) or ()
+    return tuple(kv) if kv else (None,) * n_layers
+
+
+def _combined_segments(per_layer, kv_list, p_len: int, n_super: int) -> list:
+    """Walker segments keyed on (weight cfg, kv bits) per layer."""
+    keys = [(pol.cfg, kv_list[i]) for i, pol in enumerate(per_layer)]
+    return plan_segments(keys, p_len, n_super)
 
 
 def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
@@ -357,21 +364,43 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
     segmented = "super_segments" in params
     if isinstance(policy, PlanPolicy):
         per_layer = [policy.layer(i) for i in range(policy.n_layers)]
+        kv_list = _policy_kv_list(policy, policy.n_layers)
     else:
         per_layer = [policy] * cfg.n_layers
+        kv_list = _policy_kv_list(policy, cfg.n_layers)
     n_super = len(per_layer) // p_len
     n_tail = len(per_layer) - n_super * p_len
     if segmented:
         seg_param_list = params["super_segments"]
-    segs = plan_segments([p.cfg for p in per_layer], p_len, n_super)
+    segs = _combined_segments(per_layer, kv_list, p_len, n_super)
     if segmented and len(segs) != len(seg_param_list):
         raise ValueError(
             f"policy implies {len(segs)} segments but params carry "
             f"{len(seg_param_list)} — plan/params mismatch")
 
     aux_total = jnp.zeros((), jnp.float32)
-    sup_caches = caches["super"] if caches is not None else None
+    sup_caches = cache_runs = None
+    if caches is not None:
+        if "super_segments" in caches:
+            # heterogeneous cache: one stacked tree per run of superblocks
+            # sharing a kv wire shape (serve/pool.py page geometry)
+            cache_runs = list(caches["super_segments"])
+            run_sizes = [jax.tree.leaves(r)[0].shape[0] for r in cache_runs]
+            run_starts = [sum(run_sizes[:i]) for i in range(len(run_sizes))]
+        else:
+            sup_caches = caches["super"]
     new_sup_parts = []
+    new_run_parts = [[] for _ in (cache_runs or ())]
+
+    def _cache_run(start, size):
+        """The kv run holding walker segment [start, start+size)."""
+        for r, (rs, rn) in enumerate(zip(run_starts, run_sizes)):
+            if rs <= start and start + size <= rs + rn:
+                return r, start - rs
+        raise ValueError(
+            f"walker segment [{start}, {start + size}) straddles the "
+            f"cache's kv runs {list(zip(run_starts, run_sizes))} — "
+            f"plan/cache kv_bits mismatch")
 
     for k, (start, size, _) in enumerate(segs):
         seg_policies = tuple(per_layer[start * p_len + j]
@@ -381,8 +410,14 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
         else:
             seg_params = jax.tree.map(lambda a: a[start:start + size],
                                       params["super"])
-        seg_caches = None
-        if sup_caches is not None:
+        seg_caches = run = None
+        if cache_runs is not None:
+            run, off = _cache_run(start, size)
+            seg_caches = cache_runs[run]
+            if size != run_sizes[run]:
+                seg_caches = jax.tree.map(lambda a: a[off:off + size],
+                                          seg_caches)
+        elif sup_caches is not None:
             seg_caches = jax.tree.map(lambda a: a[start:start + size],
                                       sup_caches)
 
@@ -406,17 +441,24 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
         body = _maybe_remat(body, cfg, training)
         (x, aux_total), new_seg = jax.lax.scan(
             body, (x, aux_total), (seg_params, seg_caches))
-        if sup_caches is not None:
+        if cache_runs is not None:
+            new_run_parts[run].append(new_seg)
+        elif sup_caches is not None:
             new_sup_parts.append(new_seg)
 
+    def _concat(parts):
+        if len(parts) == 1:
+            return parts[0]
+        return jax.tree.map(lambda *leaves: jnp.concatenate(leaves, axis=0),
+                            *parts)
+
     new_sup = sup_caches
-    if sup_caches is not None and new_sup_parts:
-        if len(new_sup_parts) == 1:
-            new_sup = new_sup_parts[0]
-        else:
-            new_sup = jax.tree.map(
-                lambda *leaves: jnp.concatenate(leaves, axis=0),
-                *new_sup_parts)
+    new_runs = None
+    if cache_runs is not None:
+        new_runs = [_concat(parts) if parts else cache_runs[r]
+                    for r, parts in enumerate(new_run_parts)]
+    elif sup_caches is not None and new_sup_parts:
+        new_sup = _concat(new_sup_parts)
 
     new_tail = []
     tail_params = params["tail"]
@@ -436,7 +478,10 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
 
     new_caches = None
     if caches is not None:
-        new_caches = {"super": new_sup, "tail": new_tail}
+        if cache_runs is not None:
+            new_caches = {"super_segments": new_runs, "tail": new_tail}
+        else:
+            new_caches = {"super": new_sup, "tail": new_tail}
     return x, new_caches, aux_total
 
 
@@ -533,24 +578,82 @@ def _logits(params, cfg: ModelConfig, x, policy):
     return constrain(logits.astype(jnp.float32), "batch", "seq", "vocab")
 
 
+def normalize_kv_quant(cfg: ModelConfig, kv_quant):
+    """Canonicalize a cache-quantization spec.
+
+    ``kv_quant`` is ``None`` (fp), ``(bits, group_size)`` (uniform), or
+    ``(per_layer_bits, group_size)`` with a length-``n_layers`` sequence of
+    ``bits | None`` entries.  A per-layer map whose entries all agree
+    collapses to the uniform form, so a plan with a uniform ``kv_bits``
+    map builds the exact same cache/pool pytree as the plain path.
+    """
+    if kv_quant is None:
+        return None
+    bits, gs = kv_quant
+    if isinstance(bits, (tuple, list)):
+        bits = tuple(bits)
+        if len(bits) != cfg.n_layers:
+            raise ValueError(f"per-layer kv_bits has {len(bits)} entries "
+                             f"for {cfg.n_layers} layers")
+        for b in bits:
+            kvwire.check_kv_bits(b)
+        if any(b != bits[0] for b in bits):
+            return (bits, gs)
+        bits = bits[0]
+    if bits is None:
+        return None
+    kvwire.check_kv_bits(bits)
+    return (bits, gs)
+
+
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                dtype=None, kv_quant=None) -> dict:
     """Decode cache.  ``kv_quant=(bits, group_size)`` stores attention K/V
-    in the LQ wire format (bits in {8,4,2,1}; group_size divides head_dim).
+    in the LQ wire format (bits in {8,4,2,1}; group_size divides head_dim);
+    ``bits`` may be a per-layer sequence (see :func:`normalize_kv_quant`),
+    in which case superblocks are stacked per run of identical kv bits
+    under a ``"super_segments"`` key — packed wire shapes differ across
+    bitwidths, so heterogeneous layers cannot share one stacked array.
     """
     dtype = dtype or cfg.activation_dtype
     cross = cfg.n_enc_layers > 0
-    sup = []
-    for j, spec in enumerate(cfg.pattern):
-        one = _block_cache(cfg, spec, batch, max_len, cross, dtype, kv_quant)
-        sup.append(jax.tree.map(
-            lambda a: jnp.zeros((cfg.n_super,) + a.shape, a.dtype), one))
-    tail = [_block_cache(cfg, cfg.pattern[(cfg.n_super * len(cfg.pattern)
-                                           + t) % len(cfg.pattern)],
-                         batch, max_len, cross, dtype, kv_quant)
+    kv_quant = normalize_kv_quant(cfg, kv_quant)
+    p_len = len(cfg.pattern)
+    per_layer = kv_quant is not None and isinstance(kv_quant[0], tuple)
+
+    def layer_kvq(i: int):
+        if not per_layer:
+            return kv_quant
+        b = kv_quant[0][i]
+        return None if b is None else (b, kv_quant[1])
+
+    def stacked(stack: int, spec, kvq):
+        one = _block_cache(cfg, spec, batch, max_len, cross, dtype, kvq)
+        return jax.tree.map(
+            lambda a: jnp.zeros((stack,) + a.shape, a.dtype), one)
+
+    tail = [_block_cache(cfg, cfg.pattern[(cfg.n_super * p_len + t) % p_len],
+                         batch, max_len, cross, dtype,
+                         layer_kvq(cfg.n_super * p_len + t))
             for t in range(cfg.n_tail)]
-    return {"super": tuple(sup), "tail": tail,
-            "pos": jnp.zeros((), jnp.int32)}
+    out = {"tail": tail, "pos": jnp.zeros((), jnp.int32)}
+    if per_layer:
+        runs = plan_segments(list(kv_quant[0]), p_len, cfg.n_super)
+        out["super_segments"] = [
+            tuple(stacked(size, spec,
+                          None if key[j] is None else (key[j], kv_quant[1]))
+                  for j, spec in enumerate(cfg.pattern))
+            for _, size, key in runs]
+    else:
+        out["super"] = tuple(stacked(cfg.n_super, spec, kv_quant)
+                             for spec in cfg.pattern)
+    return out
+
+
+def _layer_caches(cache) -> dict:
+    """The decoder-stack view of a cache dict (either super layout)."""
+    key = "super_segments" if "super_segments" in cache else "super"
+    return {key: cache[key], "tail": cache["tail"]}
 
 
 def prefill(params, cfg: ModelConfig, batch, cache, *,
@@ -572,7 +675,7 @@ def prefill(params, cfg: ModelConfig, batch, cache, *,
     l = x.shape[1]
     x, new_caches, _ = _stack_apply(
         params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches={"super": cache["super"], "tail": cache["tail"]},
+        caches=_layer_caches(cache),
         cache_pos=None, enc_out=enc_out, positions=None)
     if logits_pos is None:
         x = x[:, -1:]
@@ -594,7 +697,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
     x = x.astype(cfg.activation_dtype)
     x, new_caches, _ = _stack_apply(
         params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches={"super": cache["super"], "tail": cache["tail"]},
+        caches=_layer_caches(cache),
         cache_pos=pos, enc_out=None, positions=None)
     x = _norm_apply(cfg, params["final_norm"], x)
     logits = _logits(params, cfg, x, policy)
@@ -620,7 +723,7 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
     x = x.astype(cfg.activation_dtype)
     x, new_pages, _ = _stack_apply(
         params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches={"super": pages["super"], "tail": pages["tail"]},
+        caches=_layer_caches(pages),
         cache_pos=pos, enc_out=None, positions=pos[:, None],
         page_table=page_table)
     x = _norm_apply(cfg, params["final_norm"], x)
@@ -699,16 +802,21 @@ def quantize_params(params, cfg: ModelConfig, qcfg) -> dict:
 
 def _quantize_params_plan(params, cfg: ModelConfig, plan) -> dict:
     configs = plan.resolve(cfg)
+    kv = (plan.resolve_kv(cfg) if hasattr(plan, "resolve_kv")
+          else (None,) * cfg.n_layers)
     p_len = len(cfg.pattern)
     dec = params["decoder"]
-    segs = plan_segments(configs, p_len, cfg.n_super)
+    # segment on the combined (weight, kv) key so param segments line up
+    # with the planned walker's — a kv boundary splits the scan even when
+    # the weight scheme is unchanged across it
+    segs = plan_segments(list(zip(configs, kv)), p_len, cfg.n_super)
     seg_trees = []
-    for start, size, seg_cfgs in segs:
+    for start, size, seg_key in segs:
         pos_trees = []
         for j in range(p_len):
             sub = jax.tree.map(lambda a: a[start:start + size],
                                dec["super"][j])
-            pos_trees.append(_quantize_tree(sub, seg_cfgs[j]))
+            pos_trees.append(_quantize_tree(sub, seg_key[j][0]))
         seg_trees.append(tuple(pos_trees))
     tail = [_quantize_tree(blk, configs[cfg.n_super * p_len + t])
             for t, blk in enumerate(dec["tail"])]

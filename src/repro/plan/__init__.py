@@ -5,18 +5,27 @@
 See README.md in this directory for the subsystem design and the
 ``repro.launch.plan`` CLI walkthrough.
 """
-from .plan import QuantPlan, layer_name
-from .costmodel import (LayerCost, candidate_costs, layer_cost,
-                        layer_dense_params, plan_cost, weight_bytes)
+from .plan import QuantPlan, fit_kv_group, layer_name
+from .costmodel import (LayerCost, candidate_costs, kv_bits_of_label,
+                        kv_candidate_costs, kv_label, kv_layer_options,
+                        kv_searchable, layer_cost, layer_dense_params,
+                        layer_kv_bytes_per_token, plan_cost, plan_kv_cost,
+                        weight_bytes)
 from .sensitivity import (SensitivityProfile, layer_output_ranges,
-                          profile_sensitivity)
-from .search import (SearchResult, greedy_search, pareto_frontier,
+                          profile_kv_sensitivity, profile_sensitivity)
+from .search import (SearchResult, greedy_search, joint_space,
+                     pareto_frontier, split_joint_assignment,
                      uniform_result)
 
 __all__ = [
-    "QuantPlan", "layer_name",
+    "QuantPlan", "fit_kv_group", "layer_name",
     "LayerCost", "candidate_costs", "layer_cost", "layer_dense_params",
     "plan_cost", "weight_bytes",
+    "kv_label", "kv_bits_of_label", "kv_candidate_costs",
+    "kv_layer_options", "kv_searchable",
+    "layer_kv_bytes_per_token", "plan_kv_cost",
     "SensitivityProfile", "layer_output_ranges", "profile_sensitivity",
-    "SearchResult", "greedy_search", "pareto_frontier", "uniform_result",
+    "profile_kv_sensitivity",
+    "SearchResult", "greedy_search", "joint_space",
+    "split_joint_assignment", "pareto_frontier", "uniform_result",
 ]

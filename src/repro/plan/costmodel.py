@@ -79,6 +79,95 @@ def layer_cost(n_params: int, qcfg, hw: HW | None = None) -> LayerCost:
                      ms=max(compute_s, memory_s) * 1e3)
 
 
+# ---------------------------------------------------------------------------
+# KV-cache pricing (the decode-time memory bottleneck the serve layer pays)
+# ---------------------------------------------------------------------------
+
+def kv_label(bits) -> str:
+    """Canonical scheme name of a cache bitwidth (``"kvfp"``, ``"kv8"``...)."""
+    return "kvfp" if bits is None else f"kv{bits}"
+
+
+def kv_bits_of_label(label: str):
+    if label == "kvfp":
+        return None
+    if label.startswith("kv"):
+        return int(label[2:])
+    raise ValueError(f"not a kv scheme label: {label!r}")
+
+
+def layer_kv_bytes_per_token(model_cfg, i: int, bits,
+                             kv_group: int = 64) -> float:
+    """Exact cache wire bytes layer ``i`` appends per decoded token.
+
+    Matches the paged pool's per-page bytes / page_size byte-for-byte
+    (``kvwire.kv_token_nbytes``); attention layers grow by one K+V row per
+    token, fixed-size recurrent states (mamba2 / rglru) cost nothing
+    *per token* and price at zero here — their residency is the pool /
+    contiguous-cache accounting's job.
+    """
+    from repro.core import kvwire
+    mixer, _ = model_cfg.layer_spec(i)
+    if not mixer.startswith("attn"):
+        return 0.0
+    return kvwire.kv_token_nbytes(
+        model_cfg.n_kv_heads, model_cfg.head_dim, bits, kv_group,
+        fp_itemsize=model_cfg.activation_dtype.itemsize)
+
+
+def kv_searchable(model_cfg, i: int) -> bool:
+    """Whether the kv search may assign cache bits to layer ``i``.
+
+    Only attention layers: rglru has no quantizable cache at all, and
+    mamba2's SSM state — while the engine can store it quantized — is
+    invisible to both the per-token byte price (fixed-size state) and the
+    kv fake-quant profiler, so the search must not silently deploy it.
+    """
+    mixer, _ = model_cfg.layer_spec(i)
+    return mixer.startswith("attn")
+
+
+def kv_layer_options(model_cfg, i: int, bits_options) -> list:
+    """Layer ``i``'s candidate set: the full grid on attention layers,
+    the fp cache alone everywhere else."""
+    if kv_searchable(model_cfg, i):
+        return list(bits_options)
+    return [None]
+
+
+def kv_candidate_costs(model_cfg, bits_options, *, kv_group: int = 64,
+                       tokens: int = 1) -> dict:
+    """``{layer_name: {kv_label: {"bytes", "bytes_per_token"}}}``.
+
+    ``tokens`` scales per-token bytes into the search's byte currency —
+    price a pool's worth of context (e.g. ``n_pages * page_size``) so kv
+    bytes and weight bytes share one ``--budget-mb``.  Layers without a
+    searchable cache (see :func:`kv_searchable`) get the fp option only.
+    """
+    from .plan import layer_name
+    return {layer_name(i): {
+        kv_label(b): {
+            "bytes": tokens * layer_kv_bytes_per_token(model_cfg, i, b,
+                                                       kv_group),
+            "bytes_per_token": layer_kv_bytes_per_token(model_cfg, i, b,
+                                                        kv_group)}
+        for b in kv_layer_options(model_cfg, i, bits_options)}
+        for i in range(model_cfg.n_layers)}
+
+
+def plan_kv_cost(model_cfg, kv_list, *, kv_group: int = 64,
+                 tokens: int = 1) -> dict:
+    """Aggregate cache cost of a resolved per-layer kv bits tuple."""
+    if len(kv_list) != model_cfg.n_layers:
+        raise ValueError(f"{len(kv_list)} kv entries for "
+                         f"{model_cfg.n_layers} layers")
+    per = [layer_kv_bytes_per_token(model_cfg, i, b, kv_group)
+           for i, b in enumerate(kv_list)]
+    return {"bytes_per_token": sum(per),
+            "bytes": tokens * sum(per),
+            "per_layer": per}
+
+
 def candidate_costs(model_cfg, candidates: dict,
                     hw: HW | None = None) -> dict:
     """``{layer_name: {scheme_name: LayerCost}}`` for every candidate.

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import json
 
-from repro.core import schemes
+from repro.core import kvwire, schemes
 from repro.core.schemes import QuantConfig
 
 
@@ -34,6 +34,14 @@ def fit_group_size(cfg: QuantConfig, model_cfg) -> QuantConfig:
     while model_cfg.d_model % gs:
         gs -= 1
     return dataclasses.replace(cfg, group_size=gs)
+
+
+def fit_kv_group(kv_group: int, head_dim: int) -> int:
+    """Clamp the kv wire region size to divide ``head_dim``."""
+    gs = min(kv_group, head_dim)
+    while head_dim % gs:
+        gs -= 1
+    return gs
 
 
 def candidates_for(model_cfg, scheme_names) -> dict:
@@ -61,10 +69,21 @@ def _cfg_from_json(obj) -> QuantConfig:
 
 @dataclasses.dataclass(frozen=True)
 class QuantPlan:
-    """Ordered ``layer name -> QuantConfig`` assignment + default."""
+    """Ordered ``layer name -> QuantConfig`` assignment + default.
+
+    ``kv_bits`` extends the plan to the decode-time KV cache: an ordered
+    ``layer name -> bits`` mapping (``None`` = fp cache) with its own
+    ``kv_default``, quantized in local regions of ``kv_group`` elements
+    along head_dim (the cache wire format of ``core/kvwire.py``).  Weights
+    and cache are independent axes — sensitive early layers can keep an
+    8-bit cache while deep layers drop to 2-bit.
+    """
     assignments: tuple = ()             # ((name, QuantConfig), ...)
     default: QuantConfig = schemes.FP32
     meta: tuple = ()                    # ((key, value), ...) provenance
+    kv_bits: tuple = ()                 # ((name, bits | None), ...)
+    kv_default: int | None = None       # cache bits for unnamed layers
+    kv_group: int = 64                  # cache local-region size (head_dim)
 
     def __post_init__(self):
         seen = set()
@@ -75,6 +94,15 @@ class QuantPlan:
             if not isinstance(cfg, QuantConfig):
                 raise TypeError(f"{name!r}: expected QuantConfig, "
                                 f"got {type(cfg).__name__}")
+        seen = set()
+        for name, bits in self.kv_bits:
+            if name in seen:
+                raise ValueError(f"duplicate kv_bits entry {name!r}")
+            seen.add(name)
+            kvwire.check_kv_bits(bits)
+        kvwire.check_kv_bits(self.kv_default)
+        if self.kv_group < 1:
+            raise ValueError(f"kv_group must be >= 1, got {self.kv_group}")
 
     # ------------------------------------------------------------- build
     @staticmethod
@@ -84,11 +112,24 @@ class QuantPlan:
 
     @staticmethod
     def from_assignment(assignment: dict, default="fp32",
-                        meta: dict | None = None) -> "QuantPlan":
+                        meta: dict | None = None,
+                        kv_bits: dict | None = None,
+                        kv_default: int | None = None,
+                        kv_group: int = 64) -> "QuantPlan":
         """``{"layer.0": "lq8", ...}`` (names or QuantConfigs) -> plan."""
         items = tuple((k, schemes.get(v)) for k, v in assignment.items())
         return QuantPlan(assignments=items, default=schemes.get(default),
-                         meta=tuple(sorted((meta or {}).items())))
+                         meta=tuple(sorted((meta or {}).items())),
+                         kv_bits=tuple((kv_bits or {}).items()),
+                         kv_default=kv_default, kv_group=kv_group)
+
+    def with_kv(self, kv_bits: dict | None = None,
+                default: int | None = None,
+                kv_group: int | None = None) -> "QuantPlan":
+        """This plan with a per-layer cache bitwidth map attached."""
+        return dataclasses.replace(
+            self, kv_bits=tuple((kv_bits or {}).items()), kv_default=default,
+            kv_group=self.kv_group if kv_group is None else kv_group)
 
     # ----------------------------------------------------------- resolve
     def resolve(self, model_cfg) -> tuple:
@@ -109,35 +150,89 @@ class QuantPlan:
                 raise ValueError(
                     f"{layer_name(i)}: group_size {cfg.group_size} does not "
                     f"divide d_model {model_cfg.d_model}")
+        self.resolve_kv(model_cfg)          # kv map validates with the plan
         return tuple(configs)
+
+    def resolve_kv(self, model_cfg) -> tuple:
+        """Validate the cache map against the model; return per-layer bits
+        (length ``model_cfg.n_layers``, entries in {8, 4, 2, 1, None})."""
+        n = model_cfg.n_layers
+        by_name = dict(self.kv_bits)
+        bits = []
+        for i in range(n):
+            bits.append(by_name.pop(layer_name(i), self.kv_default))
+        if by_name:
+            raise ValueError(
+                f"kv_bits names {sorted(by_name)} out of range for "
+                f"{model_cfg.name!r} with {n} layers "
+                f"(pattern {model_cfg.pattern!r})")
+        for i, b in enumerate(bits):
+            if b is None:
+                continue
+            kvwire.check_kv_bits(b)
+            mixer, _ = model_cfg.layer_spec(i)
+            if not (mixer.startswith("attn") or mixer == "mamba2"):
+                raise ValueError(
+                    f"{layer_name(i)}: mixer {mixer!r} has no quantizable "
+                    f"cache; kv_bits applies to attention/SSM layers only")
+            if mixer.startswith("attn") and model_cfg.head_dim % self.kv_group:
+                raise ValueError(
+                    f"{layer_name(i)}: kv_group {self.kv_group} does not "
+                    f"divide head_dim {model_cfg.head_dim}")
+        return tuple(bits)
 
     def policy(self, model_cfg, *, mode: str = "serve",
                backend: str = "auto"):
         """A :class:`repro.models.layers.PlanPolicy` over this plan."""
         from repro.models.layers import PlanPolicy
-        return PlanPolicy(mode, self.resolve(model_cfg), backend)
+        return PlanPolicy(mode, self.resolve(model_cfg), backend,
+                          kv_bits=self.resolve_kv(model_cfg),
+                          kv_group=self.kv_group)
 
     @property
     def is_uniform(self) -> bool:
         return not self.assignments
 
+    @property
+    def has_kv(self) -> bool:
+        """True when the plan says anything about the cache at all."""
+        return self.kv_default is not None or any(
+            b is not None for _, b in self.kv_bits)
+
+    def uniform_kv(self, model_cfg) -> tuple:
+        """``(is_uniform, bits)`` of the resolved cache map — uniform maps
+        collapse to the homogeneous pool/cache layout byte-for-byte."""
+        bits = set(self.resolve_kv(model_cfg))
+        if len(bits) == 1:
+            return True, next(iter(bits))
+        return False, None
+
     # -------------------------------------------------------------- JSON
     def to_json(self, indent: int | None = 2) -> str:
-        return json.dumps({
+        obj = {
             "version": 1,
             "default": _cfg_to_json(self.default),
             "layers": {k: _cfg_to_json(v) for k, v in self.assignments},
             "meta": dict(self.meta),
-        }, indent=indent)
+        }
+        if self.has_kv:
+            obj["kv"] = {"default": self.kv_default,
+                         "layers": dict(self.kv_bits),
+                         "group": self.kv_group}
+        return json.dumps(obj, indent=indent)
 
     @staticmethod
     def from_json(text: str) -> "QuantPlan":
         obj = json.loads(text)
+        kv = obj.get("kv", {})
         return QuantPlan(
             assignments=tuple((k, _cfg_from_json(v))
                               for k, v in obj.get("layers", {}).items()),
             default=_cfg_from_json(obj.get("default", "fp32")),
-            meta=tuple(sorted(obj.get("meta", {}).items())))
+            meta=tuple(sorted(obj.get("meta", {}).items())),
+            kv_bits=tuple(kv.get("layers", {}).items()),
+            kv_default=kv.get("default"),
+            kv_group=kv.get("group", 64))
 
     def save(self, path: str) -> None:
         with open(path, "w") as f:
@@ -150,11 +245,21 @@ class QuantPlan:
 
     # ----------------------------------------------------------- display
     def describe(self, model_cfg=None) -> str:
-        lines = [f"QuantPlan(default={_cfg_to_json(self.default)})"]
+        def kv_str(b):
+            return "" if not self.has_kv else \
+                f"  kv={'fp' if b is None else b}"
+
+        lines = [f"QuantPlan(default={_cfg_to_json(self.default)}"
+                 + (f", kv_default={self.kv_default}, kv_group="
+                    f"{self.kv_group}" if self.has_kv else "") + ")"]
         if model_cfg is not None:
+            kv = self.resolve_kv(model_cfg)
             for i, cfg in enumerate(self.resolve(model_cfg)):
-                lines.append(f"  {layer_name(i):>10}: {_cfg_to_json(cfg)}")
+                lines.append(f"  {layer_name(i):>10}: {_cfg_to_json(cfg)}"
+                             f"{kv_str(kv[i])}")
         else:
+            kv = dict(self.kv_bits)
             for name, cfg in self.assignments:
-                lines.append(f"  {name:>10}: {_cfg_to_json(cfg)}")
+                lines.append(f"  {name:>10}: {_cfg_to_json(cfg)}"
+                             + (kv_str(kv[name]) if name in kv else ""))
         return "\n".join(lines)

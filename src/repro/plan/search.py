@@ -40,6 +40,17 @@ class SearchResult:
             {k: candidates[v] for k, v in self.assignment.items()},
             default=default, meta=meta)
 
+    def joint_plan(self, candidates: dict, *, kv_group: int = 64,
+                   meta: dict | None = None, default="fp32") -> QuantPlan:
+        """A joint (weight x kv) assignment -> QuantPlan with a kv map."""
+        from .costmodel import kv_bits_of_label
+        w, kv = split_joint_assignment(self.assignment)
+        return QuantPlan.from_assignment(
+            {l: candidates[s] for l, s in w.items()}, default=default,
+            meta=meta,
+            kv_bits={l: kv_bits_of_label(s) for l, s in kv.items()},
+            kv_default=None, kv_group=kv_group)
+
 
 def _totals(assignment, costs, sens, cost_key, loss_key):
     cost = sum(_get(costs[l][s], cost_key) for l, s in assignment.items())
@@ -109,6 +120,61 @@ def uniform_result(scheme: str, sens: dict, costs: dict, *,
     return SearchResult(assignment=assignment, cost=cost, loss=loss,
                         feasible=True,
                         trace=((cost, loss, f"uniform {scheme}"),))
+
+
+# ---------------------------------------------------------------------------
+# joint (weight-bits x kv-bits) space
+# ---------------------------------------------------------------------------
+#
+# The cache is just a second cost/loss axis per layer, so the joint search
+# is the same greedy descent over a product candidate grid: every joint
+# scheme "lq4w|kv8" sums its weight and kv cells key-wise (the additive
+# sensitivity assumption extended to the cache).  A downgrade step may then
+# narrow a layer's weights, its cache, or both — whatever buys the most
+# bytes per unit of added loss.
+
+JOINT_SEP = "|"
+
+
+def joint_name(w_scheme: str, kv_scheme: str) -> str:
+    return f"{w_scheme}{JOINT_SEP}{kv_scheme}"
+
+
+def split_joint_name(name: str) -> tuple:
+    w, _, k = name.partition(JOINT_SEP)
+    if not k:
+        raise ValueError(f"not a joint scheme name: {name!r}")
+    return w, k
+
+
+def joint_space(w_cells: dict, kv_cells: dict) -> dict:
+    """Product grid: ``{layer: {"w|kv": merged cell}}``.
+
+    ``w_cells`` / ``kv_cells`` are ``{layer: {scheme: {key: float}}}``;
+    merged cells sum values on shared keys and keep one-sided keys as-is
+    (so weight ``bytes`` + kv ``bytes`` fold into one byte currency while
+    ``ms`` or ``bytes_per_token`` survive untouched).
+    """
+    if set(w_cells) != set(kv_cells):
+        raise ValueError("weight and kv grids cover different layers: "
+                         f"{sorted(set(w_cells) ^ set(kv_cells))}")
+    out = {}
+    for layer, w_row in w_cells.items():
+        row = {}
+        for ws, wc in w_row.items():
+            for ks, kc in kv_cells[layer].items():
+                row[joint_name(ws, ks)] = {
+                    k: float(wc.get(k, 0.0)) + float(kc.get(k, 0.0))
+                    for k in set(wc) | set(kc)}
+        out[layer] = row
+    return out
+
+
+def split_joint_assignment(assignment: dict) -> tuple:
+    """A joint search assignment -> (weight map, kv map by label)."""
+    w = {l: split_joint_name(s)[0] for l, s in assignment.items()}
+    kv = {l: split_joint_name(s)[1] for l, s in assignment.items()}
+    return w, kv
 
 
 def pareto_frontier(points) -> list:

@@ -108,6 +108,62 @@ def profile_sensitivity(params, model_cfg, batches, candidates: dict,
 
 
 # ---------------------------------------------------------------------------
+# KV-cache sensitivity: one-hot fake-quant of each layer's K/V stream
+# ---------------------------------------------------------------------------
+
+def profile_kv_sensitivity(params, model_cfg, batches, bits_options,
+                           *, kv_group: int = 64) -> dict:
+    """Per-layer cache-quantization damage over the calibration stream.
+
+    For each decoder layer ``i`` and candidate cache bitwidth ``b`` the
+    model runs with layer ``i``'s post-rope K/V rounded through the wire
+    format (``QuantPolicy.kv_fq`` — exactly the grid the paged pool's
+    scatter applies at decode), everything else fp, scored against the fp
+    logits.  Returns ``{layer_name: {kv_label: {"kl", "mse"}}}`` keyed
+    with :func:`repro.plan.costmodel.kv_label`; the fp option scores an
+    exact 0.0 without a forward, and layers without a searchable cache
+    (rglru, mamba2 — see :func:`repro.plan.costmodel.kv_searchable`)
+    carry only that fp cell, mirroring ``kv_candidate_costs``.
+    """
+    from .costmodel import kv_label, kv_layer_options
+
+    if model_cfg.n_enc_layers:
+        raise ValueError("kv sensitivity profiling supports decoder-only "
+                         "models (plans cover the decoder stack)")
+    n = model_cfg.n_layers
+    if model_cfg.head_dim % kv_group:
+        raise ValueError(f"kv_group {kv_group} does not divide head_dim "
+                         f"{model_cfg.head_dim}")
+
+    @jax.jit
+    def fp_fn(p, b):
+        return transformer.forward(p, model_cfg, b, policy=NO_QUANT,
+                                   training=False)[0]
+
+    fp_logits = [fp_fn(params, b) for b in batches]
+    fp_cfgs = (schemes.FP32,) * n
+
+    losses = {}
+    for i in range(n):
+        row = {}
+        for bits in kv_layer_options(model_cfg, i, bits_options):
+            if bits is None:
+                row[kv_label(bits)] = {"mse": 0.0, "kl": 0.0}
+                continue
+            kv = tuple(bits if j == i else None for j in range(n))
+            pol = PlanPolicy("qat", fp_cfgs, kv_bits=kv, kv_group=kv_group)
+            q_fn = jax.jit(lambda p, b, pol=pol: transformer.forward(
+                p, model_cfg, b, policy=pol, training=False)[0])
+            acc = {"mse": 0.0, "kl": 0.0}
+            for b, fp in zip(batches, fp_logits):
+                m = _metrics(fp, q_fn(params, b))
+                acc = {k: acc[k] + float(v) for k, v in m.items()}
+            row[kv_label(bits)] = {k: v / len(batches) for k, v in acc.items()}
+        losses[layer_name(i)] = row
+    return losses
+
+
+# ---------------------------------------------------------------------------
 # per-layer activation ranges (calibration observers over an unrolled pass)
 # ---------------------------------------------------------------------------
 

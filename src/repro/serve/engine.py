@@ -83,17 +83,31 @@ class Engine:
         else:
             self.params = params
             self.policy = NO_QUANT
+        self._kv_layout = self._resolve_kv_layout()
         self._sample = (greedy_sample if ecfg.temperature == 0.0 else
                         temperature_sample(ecfg.temperature, ecfg.top_k))
         self._generate = jax.jit(self._generate_impl,
                                  static_argnames=("steps",))
 
     # ------------------------------------------------------------------
+    def _resolve_kv_layout(self):
+        """The engine's cache wire spec: ``(bits, group)`` where ``bits``
+        is None (fp), one int (uniform), or the plan's per-layer map."""
+        plan = self.ecfg.plan
+        if plan is not None and getattr(plan, "has_kv", False):
+            if self.ecfg.kv_bits is not None:
+                raise ValueError("kv_bits is per-layer under a plan with a "
+                                 "kv map — set it in the plan instead")
+            return plan.resolve_kv(self.cfg), plan.kv_group
+        return self.ecfg.kv_bits, self.ecfg.kv_group
+
+    def _kv_quant(self):
+        bits, group = self._kv_layout
+        return None if bits is None else (bits, group)
+
     def init_cache(self, batch: int):
-        kvq = ((self.ecfg.kv_bits, self.ecfg.kv_group)
-               if self.ecfg.kv_bits is not None else None)
         return transformer.init_cache(self.cfg, batch, self.ecfg.max_len,
-                                      kv_quant=kvq)
+                                      kv_quant=self._kv_quant())
 
     def _generate_impl(self, params, batch, cache, key, *, steps: int):
         logits, cache = transformer.prefill(params, self.cfg, batch, cache,
@@ -172,27 +186,32 @@ class PagedEngine(Engine):
         if pcfg.max_context > ecfg.max_len:
             raise ValueError("pcfg.max_context exceeds ecfg.max_len")
         self.pcfg = pcfg
-        self._kvq = ((ecfg.kv_bits, ecfg.kv_group)
-                     if ecfg.kv_bits is not None else None)
+        self._kvq = self._kv_quant()
         self._prefill_paged = jax.jit(self._prefill_paged_impl)
         self._step_paged = jax.jit(self._step_paged_impl)
 
     def new_pool(self) -> PagedKVPool:
+        bits, group = self._kv_layout
         return PagedKVPool(self.cfg, n_pages=self.pcfg.n_pages,
                            page_size=self.pcfg.page_size,
-                           kv_bits=self.ecfg.kv_bits,
-                           kv_group=self.ecfg.kv_group)
+                           kv_bits=bits, kv_group=group)
 
     # ------------------------------------------------------------- jitted
     def _scatter_bucket(self, pages, cache, page_ids):
-        sup = tuple(kvwire.scatter_prefill(pages["super"][j],
-                                           cache["super"][j], page_ids,
-                                           stacked=True)
-                    for j in range(len(pages["super"])))
-        tail = [kvwire.scatter_prefill(pages["tail"][t], cache["tail"][t],
-                                       page_ids)
-                for t in range(len(pages["tail"]))]
-        return {"super": sup, "tail": tail}
+        """Scatter a contiguous B=1 prefill cache into pool pages.
+
+        The bucket cache and the pool share one decoder-stack layout
+        (homogeneous ``"super"`` or heterogeneous ``"super_segments"`` —
+        both built from the engine's kv spec), so the copy is structural:
+        ``scatter_prefill`` tree-maps leaf-for-leaf at whatever wire
+        format each layer carries.
+        """
+        sup_key = "super_segments" if "super_segments" in pages else "super"
+        return {sup_key: kvwire.scatter_prefill(pages[sup_key],
+                                                cache[sup_key], page_ids,
+                                                stacked=True),
+                "tail": kvwire.scatter_prefill(pages["tail"], cache["tail"],
+                                               page_ids)}
 
     def _prefill_paged_impl(self, params, tokens, pages, page_ids,
                             logits_pos, key):
@@ -201,9 +220,7 @@ class PagedEngine(Engine):
         logits, cache = transformer.prefill(
             params, self.cfg, {"tokens": tokens}, cache, policy=self.policy,
             logits_pos=logits_pos)
-        pages = self._scatter_bucket(
-            pages, {"super": cache["super"], "tail": cache["tail"]},
-            page_ids)
+        pages = self._scatter_bucket(pages, cache, page_ids)
         return self._sample(logits[:, -1], key), pages
 
     def _step_paged_impl(self, params, pages, tokens, page_table, pos, key):

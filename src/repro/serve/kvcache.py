@@ -13,11 +13,14 @@ from repro.core.kvwire import (quantize_kv, dequantize_kv, make_quant_kv,
                                make_paged_kv, gather_pages, scatter_token,
                                scatter_prefill, permute_pages,
                                quantize_state, dequantize_state,
-                               is_quant_state, cache_nbytes, _infer)
+                               is_quant_state, cache_nbytes, _infer,
+                               KV_BITS, check_kv_bits, segment_runs,
+                               kv_token_nbytes)
 
 __all__ = ["quantize_kv", "dequantize_kv", "make_quant_kv",
            "update_quant_kv", "is_quant_kv", "kv_bits_of",
            "make_paged_kv", "gather_pages", "scatter_token",
            "scatter_prefill", "permute_pages",
            "quantize_state", "dequantize_state", "is_quant_state",
-           "cache_nbytes"]
+           "cache_nbytes",
+           "KV_BITS", "check_kv_bits", "segment_runs", "kv_token_nbytes"]

@@ -37,42 +37,75 @@ def _check_paged_support(cfg: ModelConfig):
 
 
 def make_pool_pages(cfg: ModelConfig, *, n_pages: int, page_size: int,
-                    kv_bits: int | None = None, kv_group: int = 64,
-                    dtype=None):
+                    kv_bits=None, kv_group: int = 64, dtype=None):
     """Build the zero-initialized page pytree of a :class:`PagedKVPool`.
+
+    ``kv_bits`` is ``None`` (fp), one int (every layer shares the wire
+    format), or a per-layer sequence of ``bits | None`` — the
+    heterogeneous page geometry of a mixed-KV :class:`~repro.plan.QuantPlan`.
+    Homogeneous pools stack superblock leaves under ``"super"`` as before;
+    a genuinely mixed map stores one stacked leaf per run of superblocks
+    sharing a wire shape under ``"super_segments"`` (packed widths differ,
+    so heterogeneous layers cannot share an array), mirroring
+    ``transformer.init_cache``.  Page ids stay *global*: page ``p`` of
+    every layer's array belongs to the same request, whatever that
+    layer's bitwidth — only the bytes behind a page differ per layer.
 
     Module-level so callers can price a pool without materializing it:
     ``jax.eval_shape(lambda: make_pool_pages(...))`` yields the structure
     abstractly (see :func:`pool_nbytes`, used by the fleet registry's
     host-budget accounting).
     """
+    from repro.models.transformer import normalize_kv_quant
+
     _check_paged_support(cfg)
     if n_pages < 2:
         raise ValueError("need at least one allocatable page + scratch")
-    if kv_bits is not None and cfg.head_dim % kv_group:
+    kvq = normalize_kv_quant(cfg, (kv_bits, kv_group))
+    per_layer = kvq is not None and isinstance(kvq[0], tuple)
+    if kvq is not None and cfg.head_dim % kv_group:
         raise ValueError(f"head_dim={cfg.head_dim} not divisible by "
                          f"kv_group={kv_group}")
     dtype = dtype or cfg.activation_dtype
 
-    def leaf(stack: int | None):
+    def leaf(stack: int | None, bits):
         one = kvwire.make_paged_kv(n_pages, page_size, cfg.n_kv_heads,
-                                   cfg.head_dim, kv_bits, kv_group, dtype)
+                                   cfg.head_dim, bits, kv_group, dtype)
         if stack is None:
             return one
         return jax.tree.map(
             lambda a: jnp.zeros((stack,) + a.shape, a.dtype), one)
 
-    sup = tuple({"self": {"k": leaf(cfg.n_super), "v": leaf(cfg.n_super)}}
+    p_len = len(cfg.pattern)
+    if per_layer:
+        bits_list = kvq[0]
+        runs = kvwire.segment_runs(list(bits_list), p_len, cfg.n_super)
+        sup = [tuple({"self": {"k": leaf(size, key[j]),
+                               "v": leaf(size, key[j])}}
+                     for j in range(p_len))
+               for _, size, key in runs]
+        tail = [{"self": {"k": leaf(None, bits_list[cfg.n_super * p_len + t]),
+                          "v": leaf(None, bits_list[cfg.n_super * p_len + t])}}
+                for t in range(cfg.n_tail)]
+        return {"super_segments": sup, "tail": tail}
+
+    bits = None if kvq is None else kvq[0]
+    sup = tuple({"self": {"k": leaf(cfg.n_super, bits),
+                          "v": leaf(cfg.n_super, bits)}}
                 for _ in cfg.pattern)
-    tail = [{"self": {"k": leaf(None), "v": leaf(None)}}
+    tail = [{"self": {"k": leaf(None, bits), "v": leaf(None, bits)}}
             for _ in range(cfg.n_tail)]
     return {"super": sup, "tail": tail}
 
 
 def pool_nbytes(cfg: ModelConfig, *, n_pages: int, page_size: int,
-                kv_bits: int | None = None, kv_group: int = 64,
-                dtype=None) -> int:
-    """Resident bytes of a pool with this geometry, without building it."""
+                kv_bits=None, kv_group: int = 64, dtype=None) -> int:
+    """Resident bytes of a pool with this geometry, without building it.
+
+    Exact by construction (``eval_shape`` over the real pytree), including
+    per-layer heterogeneous ``kv_bits`` maps — the fleet registry prices
+    mixed-KV tenants with these bytes, not a uniform over-approximation.
+    """
     pages = jax.eval_shape(lambda: make_pool_pages(
         cfg, n_pages=n_pages, page_size=page_size, kv_bits=kv_bits,
         kv_group=kv_group, dtype=dtype))
@@ -83,21 +116,27 @@ class PagedKVPool:
     """Block/paged KV storage + host-side page allocator.
 
     n_pages counts physical pages including the reserved scratch page 0, so
-    ``n_pages - 1`` pages are allocatable.  ``kv_bits`` in {8, 4, 2, 1}
-    stores pages in the packed wire format; packing is along head_dim, so
-    page_size is independent of kv_bits (see serve/README.md).
+    ``n_pages - 1`` pages are allocatable.  ``kv_bits`` in {8, 4, 2, 1} —
+    one int, or a per-layer map (heterogeneous page geometry) — stores
+    pages in the packed wire format; packing is along head_dim, so
+    page_size is independent of kv_bits (see serve/README.md).  The
+    allocator below is bitwidth-blind: a page id spans every layer's
+    array, so alloc/free/defrag never need to know the geometry.
     """
 
     def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
-                 kv_bits: int | None = None, kv_group: int = 64, dtype=None):
+                 kv_bits=None, kv_group: int = 64, dtype=None):
         self.cfg = cfg
         self.n_pages, self.page_size = n_pages, page_size
         self.kv_bits, self.kv_group = kv_bits, kv_group
         self.pages = make_pool_pages(cfg, n_pages=n_pages,
                                      page_size=page_size, kv_bits=kv_bits,
                                      kv_group=kv_group, dtype=dtype)
+        sup_key = ("super_segments" if "super_segments" in self.pages
+                   else "super")
         self._permute = jax.jit(lambda pages, perm: {
-            "super": kvwire.permute_pages(pages["super"], perm, stacked=True),
+            sup_key: kvwire.permute_pages(pages[sup_key], perm,
+                                          stacked=True),
             "tail": kvwire.permute_pages(pages["tail"], perm)})
 
         self._free = list(range(n_pages - 1, 0, -1))   # LIFO free list

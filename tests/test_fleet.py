@@ -124,6 +124,73 @@ def test_registry_tracks_aggregate_bytes(params):
 
 
 # ---------------------------------------------------------------------------
+# mixed-KV tenants: heterogeneous pool pricing under the shared budget
+# ---------------------------------------------------------------------------
+
+MIXED_KV_PLAN = QuantPlan.from_assignment(
+    {"layer.0": "lq4w"}, default="lq4w",
+    kv_bits={"layer.0": 8}, kv_default=2, kv_group=16)
+
+
+def test_spec_rejects_kv_bits_with_kv_plan():
+    with pytest.raises(ValueError, match="per-layer under a plan"):
+        TenantSpec("t", plan=MIXED_KV_PLAN, kv_bits=8)
+    # a plan without a kv map still takes the spec's uniform kv_bits
+    TenantSpec("t", plan=GOLD_PLAN, kv_bits=8)
+
+
+def test_mixed_kv_pricing_matches_exact_pool_bytes(params):
+    """Registry totals are eval_shape-exact for heterogeneous geometry."""
+    reg = FleetRegistry(TINY, params, backend="ref")
+    spec = _spec(plan=MIXED_KV_PLAN)
+    kv_bits, kv_group = spec.pool_kv(TINY)
+    assert kv_bits == (8, 2, 2) and kv_group == 16
+    priced = reg.price(spec)
+    want_p = pool_nbytes(TINY, n_pages=spec.n_pages,
+                         page_size=spec.page_size, kv_bits=(8, 2, 2),
+                         kv_group=16)
+    assert priced["pool_bytes"] == want_p
+    tenant = reg.register(spec)
+    assert tenant.pool_bytes == want_p == tenant.pool.nbytes()
+    # the engine's actual pool is genuinely heterogeneous
+    assert "super_segments" in tenant.pool.pages
+
+
+def test_mixed_kv_tenants_fit_where_uniform8_do_not(params):
+    """The packing win: two mixed-KV tenants admit under a budget that
+    rejects their uniform-8-bit-cache equivalents."""
+    reg0 = FleetRegistry(TINY, params, backend="ref")
+    uni8 = _spec("u", plan=GOLD_PLAN, kv_bits=8)
+    mixed = _spec("m", plan=QuantPlan(
+        assignments=GOLD_PLAN.assignments, default=GOLD_PLAN.default,
+        kv_bits=(("layer.0", 8),), kv_default=2, kv_group=16))
+    cost_uni, cost_mixed = reg0.price(uni8), reg0.price(mixed)
+    assert cost_mixed["weight_bytes"] == cost_uni["weight_bytes"]
+    assert cost_mixed["pool_bytes"] < cost_uni["pool_bytes"]
+
+    # midpoint budget: two mixed-KV tenants fit, two uniform-8 do not
+    budget_mb = (cost_mixed["total"] + cost_uni["total"]) / 2**20
+    assert 2 * cost_mixed["total"] <= budget_mb * 2**20
+    assert 2 * cost_uni["total"] > budget_mb * 2**20
+
+    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    reg.register(dataclasses.replace(uni8, tenant_id="u1"))
+    with pytest.raises(FleetBudgetError):           # second uniform-8: no
+        reg.register(dataclasses.replace(uni8, tenant_id="u2"))
+
+    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    t1 = reg.register(dataclasses.replace(mixed, tenant_id="m1"))
+    t2 = reg.register(dataclasses.replace(mixed, tenant_id="m2"))
+    assert reg.total_bytes() == t1.total_bytes + t2.total_bytes
+    assert t1.pool_bytes == t1.pool.nbytes()        # exact, not modeled
+    # and the registered mixed tenants actually serve
+    sched = t1.scheduler
+    rid = sched.submit(_prompts()[0], max_new_tokens=3)
+    outs = sched.drain(max_steps=200)
+    assert len(outs[rid]) == 3
+
+
+# ---------------------------------------------------------------------------
 # manifest
 # ---------------------------------------------------------------------------
 

@@ -82,6 +82,78 @@ def test_uniform_plan_is_trivial():
 
 
 # ---------------------------------------------------------------------------
+# per-layer kv_bits: schema, JSON round trip, resolve validation
+# ---------------------------------------------------------------------------
+
+def _kv_plan(**kw):
+    base = dict(kv_bits={"layer.0": 8, "layer.2": 2}, default=None,
+                kv_group=16)
+    base.update(kw)
+    return QuantPlan.uniform("fp32").with_kv(
+        base["kv_bits"], default=base["default"],
+        kv_group=base["kv_group"])
+
+
+def test_kv_plan_json_roundtrip():
+    plan = _kv_plan()
+    back = QuantPlan.from_json(plan.to_json())
+    assert back == plan
+    obj = json.loads(plan.to_json())
+    assert obj["kv"] == {"default": None, "group": 16,
+                         "layers": {"layer.0": 8, "layer.2": 2}}
+    # plans without a kv map serialize exactly as before (no "kv" key)
+    assert "kv" not in json.loads(_mixed_plan().to_json())
+    assert not _mixed_plan().has_kv and _kv_plan().has_kv
+
+
+def test_kv_plan_resolve_fills_default():
+    assert _kv_plan().resolve_kv(TINY) == (8, None, 2, None)
+    assert _kv_plan(default=4).resolve_kv(TINY) == (8, 4, 2, 4)
+    uni, bits = _kv_plan(kv_bits={}, default=8).uniform_kv(TINY)
+    assert uni and bits == 8
+    uni, _ = _kv_plan().uniform_kv(TINY)
+    assert not uni
+
+
+def test_kv_plan_rejects_non_power_of_two_bits():
+    for bad in (6, 3, 0, 16):
+        with pytest.raises(ValueError, match="kv_bits"):
+            QuantPlan.uniform("fp32").with_kv({"layer.0": bad}, kv_group=16)
+    with pytest.raises(ValueError, match="kv_bits"):
+        QuantPlan.uniform("fp32").with_kv(default=5)
+
+
+def test_kv_plan_rejects_missing_layers():
+    plan = QuantPlan.uniform("fp32").with_kv({"layer.9": 8}, kv_group=16)
+    with pytest.raises(ValueError, match="out of range"):
+        plan.resolve_kv(TINY)
+    with pytest.raises(ValueError, match="out of range"):
+        plan.resolve(TINY)                     # resolve() validates kv too
+
+
+def test_kv_plan_rejects_layers_without_caches():
+    hybrid = ModelConfig(name="thyb", family="hybrid", n_layers=3,
+                         d_model=64, vocab_size=256, n_heads=4, n_kv_heads=2,
+                         head_dim=16, d_ff=128, lru_width=64,
+                         pattern=(("rglru", "swiglu"), ("rglru", "swiglu"),
+                                  ("attn", "swiglu")),
+                         dtype="float32", remat="none")
+    ok = QuantPlan.uniform("fp32").with_kv({"layer.2": 8}, kv_group=16)
+    assert ok.resolve_kv(hybrid) == (None, None, 8)
+    bad = QuantPlan.uniform("fp32").with_kv({"layer.0": 8}, kv_group=16)
+    with pytest.raises(ValueError, match="no quantizable cache"):
+        bad.resolve_kv(hybrid)
+
+
+def test_kv_plan_rejects_group_not_dividing_head_dim():
+    plan = QuantPlan.uniform("fp32").with_kv({"layer.0": 8}, kv_group=12)
+    with pytest.raises(ValueError, match="head_dim"):
+        plan.resolve_kv(TINY)
+    with pytest.raises(ValueError, match="duplicate kv_bits"):
+        QuantPlan(kv_bits=(("layer.0", 8), ("layer.0", 2)))
+
+
+# ---------------------------------------------------------------------------
 # segmented model path
 # ---------------------------------------------------------------------------
 
@@ -223,6 +295,117 @@ def test_plan_cost_totals(params):
 
 
 # ---------------------------------------------------------------------------
+# kv cost model + joint (weight x kv) search space
+# ---------------------------------------------------------------------------
+
+def test_kv_bytes_per_token_matches_pool_pages():
+    """The per-token kv price is exactly one pool page's bytes per layer
+    divided by page_size, for every wire format."""
+    from repro.plan import layer_kv_bytes_per_token
+    from repro.serve import pool_nbytes
+    page_size, n_pages = 4, 6
+    for bits in (None, 8, 4, 2, 1):
+        per_tok = sum(layer_kv_bytes_per_token(TINY, i, bits, 16)
+                      for i in range(TINY.n_layers))
+        total = pool_nbytes(TINY, n_pages=n_pages, page_size=page_size,
+                            kv_bits=bits, kv_group=16)
+        assert per_tok * page_size * n_pages == total
+
+
+def test_kv_costs_monotone_and_labels():
+    from repro.plan import (kv_bits_of_label, kv_candidate_costs, kv_label,
+                            plan_kv_cost)
+    assert kv_label(None) == "kvfp" and kv_label(8) == "kv8"
+    assert kv_bits_of_label("kvfp") is None and kv_bits_of_label("kv2") == 2
+    costs = kv_candidate_costs(TINY, (None, 8, 4, 2, 1), kv_group=16,
+                               tokens=10)
+    row = costs["layer.0"]
+    seq = [row[kv_label(b)]["bytes"] for b in (None, 8, 4, 2, 1)]
+    assert seq == sorted(seq, reverse=True)     # fp > 8 > 4 > 2 > 1
+    assert row["kv8"]["bytes"] == 10 * row["kv8"]["bytes_per_token"]
+    total = plan_kv_cost(TINY, (8, 2, None, 1), kv_group=16)
+    assert total["bytes_per_token"] == sum(total["per_layer"])
+    with pytest.raises(ValueError):
+        plan_kv_cost(TINY, (8, 2), kv_group=16)
+
+
+def test_joint_space_and_split():
+    from repro.plan import joint_space, split_joint_assignment
+    w = {"layer.0": {"lq8w": {"bytes": 100.0, "kl": 0.1, "ms": 7.0}}}
+    kv = {"layer.0": {"kv2": {"bytes": 5.0, "kl": 0.02,
+                              "bytes_per_token": 1.0}}}
+    j = joint_space(w, kv)
+    cell = j["layer.0"]["lq8w|kv2"]
+    assert cell["bytes"] == 105.0 and cell["kl"] == pytest.approx(0.12)
+    assert cell["ms"] == 7.0 and cell["bytes_per_token"] == 1.0
+    ws, kvs = split_joint_assignment({"layer.0": "lq8w|kv2"})
+    assert ws == {"layer.0": "lq8w"} and kvs == {"layer.0": "kv2"}
+    with pytest.raises(ValueError, match="different layers"):
+        joint_space(w, {"layer.1": {}})
+
+
+def test_kv_search_confined_to_attention_layers():
+    """Layers without a searchable cache (rglru, mamba2) get the fp cell
+    only, in both grids, so a joint search on a hybrid arch emits a plan
+    that resolve_kv() accepts instead of assigning bits to cache-less
+    mixers (and never deploys unprofiled SSM-state quantization)."""
+    from repro.plan import kv_candidate_costs, kv_searchable
+    hybrid = ModelConfig(name="thyb", family="hybrid", n_layers=3,
+                         d_model=64, vocab_size=256, n_heads=4, n_kv_heads=2,
+                         head_dim=16, d_ff=128, lru_width=64,
+                         pattern=(("rglru", "swiglu"), ("rglru", "swiglu"),
+                                  ("attn", "swiglu")),
+                         dtype="float32", remat="none")
+    assert [kv_searchable(hybrid, i) for i in range(3)] == \
+        [False, False, True]
+    costs = kv_candidate_costs(hybrid, (8, 4, 2), kv_group=16)
+    assert set(costs["layer.0"]) == {"kvfp"}
+    assert set(costs["layer.2"]) == {"kv8", "kv4", "kv2"}
+    params = transformer.init_params(hybrid, jax.random.key(0))
+    from repro.plan import profile_kv_sensitivity
+    sens = profile_kv_sensitivity(params, hybrid, [_batch()], (8, 2),
+                                  kv_group=16)
+    assert sens["layer.0"] == {"kvfp": {"mse": 0.0, "kl": 0.0}}
+    assert set(sens["layer.2"]) == {"kv8", "kv2"}
+
+
+def test_joint_search_descends_both_axes():
+    """Greedy over the joint grid narrows the cache where kv sensitivity
+    is negligible and the weights where weight sensitivity is."""
+    from repro.plan import greedy_search, joint_space
+    w_sens = {"l0": {"w8": {"kl": 0.0}, "w2": {"kl": 1.0}},
+              "l1": {"w8": {"kl": 0.0}, "w2": {"kl": 0.001}}}
+    w_cost = {"l0": {"w8": {"bytes": 80.0}, "w2": {"bytes": 20.0}},
+              "l1": {"w8": {"bytes": 80.0}, "w2": {"bytes": 20.0}}}
+    kv_sens = {"l0": {"kv8": {"kl": 0.0}, "kv2": {"kl": 0.0005}},
+               "l1": {"kv8": {"kl": 0.0}, "kv2": {"kl": 2.0}}}
+    kv_cost = {"l0": {"kv8": {"bytes": 40.0}, "kv2": {"bytes": 10.0}},
+               "l1": {"kv8": {"bytes": 40.0}, "kv2": {"bytes": 10.0}}}
+    r = greedy_search(joint_space(w_sens, kv_sens),
+                      joint_space(w_cost, kv_cost), budget=150.0)
+    assert r.feasible
+    # l0: cheap cache, expensive weights stay wide; l1: the reverse
+    assert r.assignment == {"l0": "w8|kv2", "l1": "w2|kv8"}
+    plan = r.joint_plan({"w8": CANDS["lq8w"], "w2": CANDS["lq2w"]},
+                        kv_group=16)
+    assert dict(plan.kv_bits) == {"l0": 2, "l1": 8}
+
+
+def test_planned_quantize_splits_segments_on_kv_boundary(params):
+    """Identical weights but a kv boundary mid-stack: the packed params
+    must segment on the combined key so the walker's scan bodies see one
+    wire shape each."""
+    plan = QuantPlan.uniform(CANDS["lq4w"]).with_kv(
+        {"layer.0": 8, "layer.1": 8}, default=2, kv_group=16)
+    qp = transformer.quantize_params(params, TINY, plan)
+    segs = qp["decoder"]["super_segments"]
+    assert len(segs) == 2                      # [kv8, kv8] | [kv2, kv2]
+    assert all(isinstance(s[0]["mixer"]["wq"]["w"], kops.QWeight)
+               for s in segs)
+    assert segs[0][0]["mixer"]["wq"]["w"].packed.shape[0] == 2
+
+
+# ---------------------------------------------------------------------------
 # search
 # ---------------------------------------------------------------------------
 
@@ -303,6 +486,36 @@ def test_plan_pareto_bench_smoke():
     json.dumps(out)                                     # JSON-serializable
 
 
+def test_kv_pareto_bench_mixed_inside_uniform_frontier():
+    """The kv acceptance bar: some genuinely mixed per-layer kv map lands
+    strictly inside the uniform-kv bytes/token-vs-loss frontier."""
+    from benchmarks import plan_pareto
+    out = plan_pareto.run_kv(verbose=False)
+    assert out["mixed_kv_inside_uniform_frontier"]
+    assert any(r["mixed"] for r in out["planned"])
+    for r in out["planned"]:                   # cost model exact per plan
+        assert set(r["kv_bits"]) == {f"layer.{i}" for i in range(4)}
+    json.dumps(out)
+
+
+def test_joint_build_plan_emits_kv_map(params):
+    """CLI-level wrapper: joint profile -> search -> plan with kv_bits."""
+    from repro.launch.plan import build_plan, make_calib_stream
+    stream = make_calib_stream(TINY, n_batches=1, batch=2, seq_len=16)
+    u8 = plan_cost(TINY, (CANDS["lq8w"],) * 4)["bytes"]
+    plan, result, _ = build_plan(
+        TINY, params, list(CANDS), budget_mb=0.6 * u8 / 2**20,
+        batches=stream, verbose=False,
+        kv_bits=[8, 4, 2], kv_group=64, kv_tokens=64)
+    assert result.feasible and plan.has_kv
+    assert plan.kv_group == 16                 # fitted to head_dim
+    kv = plan.resolve_kv(TINY)
+    assert len(kv) == 4 and all(b in (8, 4, 2) for b in kv)
+    with pytest.raises(ValueError, match="budget_mb"):
+        build_plan(TINY, params, list(CANDS), budget_ms=1.0,
+                   batches=stream, verbose=False, kv_bits=[8, 2])
+
+
 # ---------------------------------------------------------------------------
 # acceptance: planned model serves token-for-token through the paged path
 # ---------------------------------------------------------------------------
@@ -338,6 +551,8 @@ def test_engine_rejects_scheme_and_plan(params):
                                           plan=_mixed_plan()))
     with pytest.raises(ValueError, match="per-layer under a plan"):
         Engine(TINY, params, EngineConfig(a_bits=8, plan=_mixed_plan()))
+    with pytest.raises(ValueError, match="per-layer under a plan"):
+        Engine(TINY, params, EngineConfig(kv_bits=8, plan=_kv_plan()))
 
 
 def test_convnet_quantize_rejects_misaligned_region():

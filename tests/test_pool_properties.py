@@ -1,0 +1,200 @@
+"""Property tests for the heterogeneous paged KV pool.
+
+Random alloc/free/defrag sequences against a pool with per-layer page
+geometry must preserve the allocator invariants the decode path relies
+on: the scratch page 0 is never handed out, no physical page is ever
+owned by two requests (page ids are global across layers, so per-slot
+disjointness IS cross-layer disjointness), the free list and the page
+tables partition the allocatable pages, and defrag compacts to
+``[1, n_allocated]`` while preserving each request's page order.  Pool bytes
+are checked against the exact per-layer wire arithmetic
+(``kvwire.kv_token_nbytes``), not just monotonicity.
+
+Hypothesis is optional extra coverage (same guard as tests/test_packing.py);
+the exact-bytes and example-sequence tests always run.
+"""
+import jax
+import numpy as np
+import pytest
+
+try:        # property tests are extra coverage; the container may lack it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+from repro.core import kvwire
+from repro.models.config import ModelConfig
+from repro.serve import PagedKVPool, pool_nbytes
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                   vocab_size=256, n_heads=4, n_kv_heads=2, head_dim=16,
+                   d_ff=128, dtype="float32", remat="none")
+
+KV_MAPS = [(8, None, 2), (2, 2, 8), (None, 1, 4), (8, 8, 8), (None,) * 3]
+N_PAGES, PAGE_SIZE, KV_GROUP = 8, 4, 16
+
+
+def _expected_nbytes(cfg, kv_map, n_pages, page_size, kv_group):
+    """Sum of exact per-layer page bytes, from the wire format arithmetic."""
+    per_token = sum(
+        kvwire.kv_token_nbytes(cfg.n_kv_heads, cfg.head_dim, b, kv_group,
+                               fp_itemsize=cfg.activation_dtype.itemsize)
+        for b in kv_map)
+    return int(per_token * page_size * n_pages)
+
+
+@pytest.mark.parametrize("kv_map", KV_MAPS)
+def test_pool_nbytes_is_sum_of_per_layer_page_bytes(kv_map):
+    got = pool_nbytes(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                      kv_bits=kv_map, kv_group=KV_GROUP)
+    assert got == _expected_nbytes(TINY, kv_map, N_PAGES, PAGE_SIZE,
+                                   KV_GROUP)
+
+
+def _check_invariants(pool):
+    tables = {rid: list(t) for rid, t in pool.page_tables.items()}
+    owned = [p for t in tables.values() for p in t]
+    # scratch page 0 stays reserved
+    assert 0 not in owned and 0 not in pool._free
+    # no page aliased across requests (page ids are global across layers)
+    assert len(owned) == len(set(owned))
+    # free list and tables partition the allocatable pages
+    assert not set(owned) & set(pool._free)
+    assert sorted(owned + list(pool._free)) == list(range(1, pool.n_pages))
+    assert pool.n_allocated == len(owned)
+    assert pool.n_free == pool.n_allocatable - len(owned)
+
+
+def _run_ops(pool, ops):
+    """Drive the allocator; returns {rid: pages} shadow bookkeeping."""
+    shadow = {}
+    for kind, rid, n in ops:
+        if kind == 0:                       # alloc
+            before = pool.pages_of(rid)
+            ok = pool.alloc(rid, n)
+            after = pool.pages_of(rid)
+            if ok:
+                assert after[:len(before)] == before    # append-only
+                assert len(after) == len(before) + n
+                shadow[rid] = after
+            else:                           # all-or-nothing on exhaustion
+                assert after == before
+                assert n > pool.n_free
+        elif kind == 1:                     # free
+            freed = pool.free(rid)
+            assert freed == len(shadow.pop(rid, []))
+        else:                               # defrag
+            mapping = pool.defrag()
+            assert set(mapping) == {p for t in shadow.values() for p in t}
+            shadow = {rid: [mapping[p] for p in t]
+                      for rid, t in shadow.items()}
+            # compact: allocated pages are exactly [1, n_allocated],
+            # preserving each request's page order
+            owned = sorted(p for t in shadow.values() for p in t)
+            assert owned == list(range(1, pool.n_allocated + 1))
+        for rid2, t in shadow.items():
+            assert pool.pages_of(rid2) == t
+        _check_invariants(pool)
+    return shadow
+
+
+def test_example_sequence_all_maps():
+    """Deterministic walk of every kv map (always runs, no hypothesis)."""
+    ops = [(0, 1, 2), (0, 2, 3), (1, 1, 0), (2, 0, 0), (0, 3, 4),
+           (0, 4, 9), (1, 2, 0), (2, 0, 0), (0, 5, 1), (1, 3, 0),
+           (2, 0, 0)]
+    for kv_map in KV_MAPS:
+        pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                           kv_bits=kv_map, kv_group=KV_GROUP)
+        _run_ops(pool, ops)
+        assert pool.nbytes() == _expected_nbytes(
+            TINY, kv_map, N_PAGES, PAGE_SIZE, KV_GROUP)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(
+        kv_map=st.sampled_from(KV_MAPS),
+        ops=st.lists(
+            st.tuples(st.integers(0, 2),    # 0=alloc, 1=free, 2=defrag
+                      st.integers(1, 5),    # rid
+                      st.integers(1, 4)),   # pages requested
+            min_size=1, max_size=24),
+    )
+    def test_random_alloc_free_defrag_never_aliases(kv_map, ops):
+        pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                           kv_bits=kv_map, kv_group=KV_GROUP)
+        _run_ops(pool, ops)
+        assert pool.nbytes() == _expected_nbytes(
+            TINY, kv_map, N_PAGES, PAGE_SIZE, KV_GROUP)
+
+
+def _defrag_data_check(kv_map, sizes, victim):
+    """Write a sentinel token row into every allocated page of every layer
+    (at that layer's own wire format), shuffle the pool with frees +
+    defrag, and check each surviving request still reads its own rows —
+    i.e. pages never alias across slots or layers under compaction."""
+    pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                       kv_bits=kv_map, kv_group=KV_GROUP)
+    rids = [1, 2, 3]
+    for r, n in zip(rids, sizes):
+        assert pool.alloc(r, n)
+
+    # one token row per rid, scattered into page row 0 of its first page
+    # at that layer's own wire format (every run has stack size 1 here)
+    import jax.numpy as jnp
+    toks = {r: jax.random.normal(jax.random.key(r),
+                                 (1, 1, TINY.n_kv_heads, TINY.head_dim))
+            for r in rids}
+    for s, seg in enumerate(pool.pages["super_segments"]):
+        bits = kv_map[s]
+        kw = {} if bits is None else dict(bits=bits, group_size=KV_GROUP)
+        leaf = jax.tree.map(lambda a: a[0], seg[0]["self"]["k"])
+        for r in rids:
+            page = jnp.asarray([pool.pages_of(r)[0]])
+            row = jnp.asarray([0])
+            leaf = kvwire.scatter_token(leaf, toks[r], page, row, **kw)
+        seg[0]["self"]["k"] = jax.tree.map(lambda a: a[None], leaf)
+
+    def slot_views():
+        """{(seg, rid): full gathered wire view of rid's pages}."""
+        out = {}
+        for s, seg in enumerate(pool.pages["super_segments"]):
+            leaf = jax.tree.map(lambda a: a[0], seg[0]["self"]["k"])
+            for r in rids:
+                if r == victim and victim_freed[0]:
+                    continue
+                tbl = jnp.asarray([pool.pages_of(r)], jnp.int32)
+                out[(s, r)] = kvwire.gather_pages(leaf, tbl)
+        return out
+
+    victim_freed = [False]
+    before = slot_views()
+    victim_freed[0] = True
+    pool.free(victim)
+    pool.defrag()
+    after = slot_views()
+    # a defrag is a pure page permutation: every surviving request reads
+    # back byte-identical wire data at every layer's own format
+    for key, want in before.items():
+        if key[1] == victim:
+            continue
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), want, after[key])
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=8, deadline=None)
+    @given(kv_map=st.sampled_from([(8, None, 2), (2, 1, 8)]),
+           sizes=st.tuples(st.integers(1, 2), st.integers(1, 2),
+                           st.integers(1, 2)),
+           victim=st.sampled_from([1, 2, 3]))
+    def test_defrag_preserves_slot_data_across_geometries(kv_map, sizes,
+                                                          victim):
+        _defrag_data_check(kv_map, sizes, victim)
+else:
+    def test_defrag_preserves_slot_data_example():
+        """Hypothesis-free fallback: fixed draws of the same property."""
+        _defrag_data_check((8, None, 2), (2, 1, 2), 2)
+        _defrag_data_check((2, 1, 8), (1, 2, 1), 1)

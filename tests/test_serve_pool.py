@@ -281,6 +281,160 @@ def test_staggered_arrivals_match_solo_greedy(params, kv_bits):
     assert srv.engine.decode_compilations == 1  # no per-step retrace
 
 
+# ---------------------------------------------------------------------------
+# per-layer kv plans: heterogeneous page geometry, golden-token parity
+# ---------------------------------------------------------------------------
+
+def _kv_plan(kv_map, default=None):
+    from repro.plan import QuantPlan
+    return QuantPlan.uniform("fp32").with_kv(kv_map, default=default,
+                                             kv_group=16)
+
+
+def test_hetero_pool_layout_and_bytes():
+    """A mixed kv map stores one stacked leaf per run of same-format
+    superblocks; a uniform map collapses to the homogeneous layout."""
+    from repro.serve import cache_nbytes, make_pool_pages, pool_nbytes
+    mixed = PagedKVPool(TINY, n_pages=8, page_size=4, kv_bits=(8, None, 2),
+                        kv_group=16)
+    assert list(mixed.pages) == ["super_segments", "tail"]
+    assert len(mixed.pages["super_segments"]) == 3
+    assert pool_nbytes(TINY, n_pages=8, page_size=4, kv_bits=(8, None, 2),
+                       kv_group=16) == mixed.nbytes()
+    uni = make_pool_pages(TINY, n_pages=8, page_size=4, kv_bits=(2, 2, 2),
+                          kv_group=16)
+    ref = make_pool_pages(TINY, n_pages=8, page_size=4, kv_bits=2,
+                          kv_group=16)
+    assert jax.tree.structure(uni) == jax.tree.structure(ref)
+    assert cache_nbytes(uni) == cache_nbytes(ref)
+    # mixed sits strictly between its narrowest and widest uniform pools
+    lo = pool_nbytes(TINY, n_pages=8, page_size=4, kv_bits=2, kv_group=16)
+    hi = pool_nbytes(TINY, n_pages=8, page_size=4, kv_bits=None)
+    assert lo < mixed.nbytes() < hi
+
+
+def test_hetero_pool_defrag_preserves_contents():
+    """Defrag permutes every segment's pages coherently: data written to a
+    request's pages at different per-layer bitwidths survives compaction."""
+    pool = PagedKVPool(TINY, n_pages=10, page_size=4, kv_bits=(8, None, 2),
+                       kv_group=16)
+    pool.alloc(1, 2), pool.alloc(2, 3), pool.alloc(3, 1)
+    x = jax.random.normal(jax.random.key(0),
+                          (1, 3 * 4, TINY.n_kv_heads, TINY.head_dim))
+    ids = jnp.asarray(pool.pages_of(2), jnp.int32)
+    segs = list(pool.pages["super_segments"])
+    written = []
+    for s, seg in enumerate(segs):
+        leaf = seg[0]["self"]["k"]
+        bits = (8, None, 2)[s]
+        contig = (x[:, None] if bits is None
+                  else kvwire.quantize_kv(x[:, None], bits, 16))
+        w = kvwire.scatter_prefill(leaf, contig, ids, stacked=True)
+        segs[s] = (dict(seg[0], self={"k": w, "v": seg[0]["self"]["v"]}),)
+        written.append(w)
+    pool.pages["super_segments"] = segs
+    tbl = jnp.asarray([pool.table_array(2, 3)])
+    before = [jax.tree.map(lambda a: kvwire.gather_pages(a[0], tbl), w)
+              for w in written]
+
+    pool.free(1)
+    mapping = pool.defrag()
+    assert len(mapping) == 4
+    tbl2 = jnp.asarray([pool.table_array(2, 3)])
+    for s, want in enumerate(before):
+        got = jax.tree.map(
+            lambda a: kvwire.gather_pages(a[0], tbl2),
+            pool.pages["super_segments"][s][0]["self"]["k"])
+        jax.tree.map(lambda a, b: np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b)), want, got)
+
+
+@pytest.mark.parametrize("kv_bits", [None, 8, 2])
+def test_uniform_kv_plan_matches_uniform_kv_engine(params, kv_bits):
+    """Golden-token parity, degenerate case: a PagedEngine under a plan
+    whose kv map is uniform reproduces the plain uniform-kv engine
+    token-for-token (and the solo reference), with one compiled step."""
+    kw = dict(kv_bits=kv_bits, kv_group=16) if kv_bits else {}
+    prompts = _prompts()
+    max_new = [8, 6, 7]
+    ref = [_solo(params, p, n, **kw) for p, n in zip(prompts, max_new)]
+
+    plan = _kv_plan({}, default=kv_bits)
+    srv_plan = Server(TINY, params,
+                      EngineConfig(max_len=32, plan=plan, backend="ref"),
+                      PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                                  max_context=32))
+    srv_uni = Server(TINY, params, EngineConfig(max_len=32, **kw),
+                     PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                                 max_context=32))
+    outs = []
+    for srv in (srv_plan, srv_uni):
+        rids = [srv.submit(p, RequestParams(max_new_tokens=n))
+                for p, n in zip(prompts, max_new)]
+        done = srv.drain(max_steps=200)
+        outs.append([done[r] for r in rids])
+        assert srv.engine.decode_compilations == 1
+    assert outs[0] == outs[1] == ref
+    # and the plan's pool collapsed to the homogeneous layout
+    assert "super" in srv_plan.engine.new_pool().pages
+
+
+def test_mixed_kv_paged_matches_solo_reference(params):
+    """The acceptance bar: a genuinely mixed per-layer kv plan served
+    through the heterogeneous paged pool reproduces the solo (non-paged)
+    mixed-kv ``engine.generate`` reference token-for-token, decode
+    compiled once."""
+    plan = _kv_plan({"layer.0": 8, "layer.2": 2}, default=None)
+    prompts = _prompts()
+    max_new = [10, 6, 8]
+    solo = []
+    for p, n in zip(prompts, max_new):
+        eng = Engine(TINY, params, EngineConfig(max_len=32, plan=plan,
+                                                backend="ref"))
+        out, _ = eng.generate({"tokens": jnp.asarray([p], jnp.int32)},
+                              steps=n - 1)
+        solo.append(np.asarray(out)[0].tolist())
+
+    srv = Server(TINY, params,
+                 EngineConfig(max_len=32, plan=plan, backend="ref"),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                             max_context=32))
+    r0 = srv.submit(prompts[0], RequestParams(max_new_tokens=max_new[0]))
+    srv.step(); srv.step()
+    r1 = srv.submit(prompts[1], RequestParams(max_new_tokens=max_new[1]))
+    srv.step()
+    r2 = srv.submit(prompts[2], RequestParams(max_new_tokens=max_new[2]))
+    outs = srv.drain(max_steps=200)
+    for rid, want in zip((r0, r1, r2), solo):
+        assert outs[rid] == want
+    assert srv.engine.decode_compilations == 1
+    assert "super_segments" in srv.pool.pages  # genuinely heterogeneous
+
+
+def test_mixed_weights_and_kv_paged_matches_solo(params):
+    """Mixed weights AND mixed cache in one plan through the paged path."""
+    from repro.plan import QuantPlan
+    from repro.plan.plan import candidates_for
+    cands = candidates_for(TINY, ["lq8w", "lq2w"])
+    plan = QuantPlan.from_assignment(
+        {"layer.0": cands["lq8w"]}, default=cands["lq2w"],
+        kv_bits={"layer.0": 8}, kv_default=2, kv_group=16)
+    prompt = _prompts()[0]
+    eng = Engine(TINY, params, EngineConfig(max_len=32, plan=plan,
+                                            backend="ref"))
+    out, _ = eng.generate({"tokens": jnp.asarray([prompt], jnp.int32)},
+                          steps=9)
+    solo = np.asarray(out)[0].tolist()
+    srv = Server(TINY, params,
+                 EngineConfig(max_len=32, plan=plan, backend="ref"),
+                 PagedConfig(max_slots=2, page_size=4, n_pages=40,
+                             max_context=32))
+    rid = srv.submit(prompt, RequestParams(max_new_tokens=10))
+    outs = srv.drain(max_steps=200)
+    assert outs[rid] == solo
+    assert srv.engine.decode_compilations == 1
+
+
 def test_completions_and_stats(params):
     srv = Server(TINY, params, EngineConfig(max_len=32),
                  PagedConfig(max_slots=2, page_size=4, n_pages=20,
