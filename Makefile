@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke
+	fleet-smoke spec-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -35,6 +35,15 @@ kv-plan-smoke: ## joint weight x kv plan -> serve via heterogeneous pool
 	    --max-slots 2 --page-size 8 --n-pages 32 \
 	    --prompt-len 12 --steps 6
 	$(PY) -m benchmarks.run kvplan
+
+spec-smoke:  ## search a 2-bit draft plan -> speculative serve parity bench
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq2w --budget-mb 1 --out /tmp/spec_draft_smoke.json
+	$(PY) -m repro.launch.serve --arch llama3.2-1b --scheme lq8w \
+	    --continuous 3 --spec-plan /tmp/spec_draft_smoke.json --spec-k 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6
+	$(PY) -m benchmarks.run spec
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

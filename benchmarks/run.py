@@ -8,6 +8,7 @@ One benchmark per paper table/figure:
   table45  per-format hardware cost model          (paper Tables 4/5)
   kernels  per-kernel microbench
   serve    continuous-batching throughput + pool occupancy
+  spec     self-speculative decode: acceptance + verifier steps/token
   fleet    multi-tenant fleet: two plans, one budget, per-tenant tok/s
   roofline dry-run roofline table (reads experiments/dryrun/)
   plan     mixed-precision plan Pareto sweep (accuracy proxy vs cost)
@@ -20,8 +21,8 @@ import sys
 
 def main(argv=None):
     names = (argv if argv is not None else sys.argv[1:]) or [
-        "table3", "fig8", "table45", "kernels", "serve", "fleet", "plan",
-        "kvplan", "table2", "fig10", "roofline"]
+        "table3", "fig8", "table45", "kernels", "serve", "spec", "fleet",
+        "plan", "kvplan", "table2", "fig10", "roofline"]
     results = {}
     for name in names:
         if name == "table2":
@@ -38,6 +39,8 @@ def main(argv=None):
             from . import kernels_bench as m
         elif name == "serve":
             from . import serve_throughput as m
+        elif name == "spec":
+            from . import spec_decode as m
         elif name == "fleet":
             from . import fleet_throughput as m
         elif name == "roofline":

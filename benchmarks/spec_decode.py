@@ -1,0 +1,114 @@
+"""Self-speculative decoding benchmark: acceptance rate + verifier work.
+
+Sweeps draft bitwidth (8/4/2-bit plans of the same checkpoint) and draft
+length k against an 8-bit verifier, reporting the two numbers that decide
+whether speculation pays: the draft-token acceptance rate and the
+verifier steps per emitted token (a plain engine pays exactly 1.0; lower
+is decode speedup, floored at 1/k).  Every cell also asserts the safety
+property that makes the mode shippable — speculative greedy output is
+token-for-token identical to the verifier-only engine, with ONE compiled
+trace for the batched verify step.
+
+Wall times on the CPU host are indicative only (the kernels target TPU);
+acceptance, steps/token, and parity are exact.
+
+Run:  PYTHONPATH=src python -m benchmarks.spec_decode
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.plan import QuantPlan
+from repro.plan.plan import candidates_for
+from repro.serve import EngineConfig, PagedConfig, RequestParams, Server
+from repro.spec import SpeculativeEngine
+
+CFG = ModelConfig(name="spec-bench", family="dense", n_layers=4,
+                  d_model=128, vocab_size=512, n_heads=8, n_kv_heads=4,
+                  head_dim=16, d_ff=256, dtype="float32", remat="none")
+
+N_REQ, MAX_NEW = 6, 16
+VERIFIER = "lq8w"
+DRAFTS = ("lq8w", "lq4w", "lq2w")
+KS = (2, 4)
+
+
+def _cell(params, cands, draft: str, k: int, ref: list) -> dict:
+    verifier_plan = QuantPlan(default=cands[VERIFIER])
+    draft_plan = QuantPlan(default=cands[draft])
+    ecfg = EngineConfig(max_len=64, plan=verifier_plan, kv_bits=8,
+                        kv_group=16, backend="ref")
+    pcfg = PagedConfig(max_slots=3, page_size=8, n_pages=48, max_context=64)
+    eng = SpeculativeEngine(CFG, params, ecfg, pcfg,
+                            draft_plan=draft_plan, spec_k=k)
+    server = Server(CFG, params, ecfg, pcfg, engine=eng)
+    outs = _drive(server)
+    assert outs == ref, f"speculative output diverged at draft={draft} k={k}"
+    assert eng.decode_compilations == 1    # one batched verify trace
+    assert eng.draft_compilations == 1
+    spt = eng.verify_steps_per_token()
+    if k >= 2 and draft != "lq2w":
+        assert spt < 1.0, f"no verifier saving at draft={draft} k={k}"
+    return {"acceptance_rate": eng.acceptance_rate(),
+            "verify_steps_per_token": spt,
+            "rejected_tokens": server.scheduler.stats()["rejected_tokens"],
+            "shared_weight_bytes": eng.shared_weight_bytes(),
+            "draft_pool_bytes": server.pool.draft_nbytes()}
+
+
+def _prompts():
+    rng = np.random.default_rng(17)
+    return [list(map(int, rng.integers(0, CFG.vocab_size, size=int(n))))
+            for n in rng.integers(6, 20, size=N_REQ)]
+
+
+def _drive(server) -> list:
+    rids = []
+    for p in _prompts():
+        rids.append(server.submit(p, RequestParams(max_new_tokens=MAX_NEW)))
+        server.step()
+    outs = server.drain(max_steps=2000)
+    return [outs[r] for r in rids]
+
+
+def run(verbose: bool = True) -> dict:
+    params = transformer.init_params(CFG, jax.random.key(0))
+    cands = candidates_for(CFG, list(DRAFTS))
+    # the verifier-only reference stream (the parity bar for every cell)
+    ecfg = EngineConfig(max_len=64, plan=QuantPlan(default=cands[VERIFIER]),
+                        kv_bits=8, kv_group=16, backend="ref")
+    pcfg = PagedConfig(max_slots=3, page_size=8, n_pages=48, max_context=64)
+    ref = _drive(Server(CFG, params, ecfg, pcfg))
+
+    rows = {}
+    for draft in DRAFTS:
+        for k in KS:
+            cell = _cell(params, cands, draft, k, ref)
+            for key, v in cell.items():
+                rows[f"{draft}_k{k}_{key}"] = v
+
+    if verbose:
+        print(f"\n== self-speculative decode ({N_REQ} reqs x {MAX_NEW} "
+              f"toks, verifier {VERIFIER}, token-exact in every cell) ==")
+        print(f"{'draft':>6} {'k':>3} {'accept':>8} {'verify-steps/tok':>17} "
+              f"{'rejected':>9} {'shared-KiB':>11}")
+        for draft in DRAFTS:
+            for k in KS:
+                p = f"{draft}_k{k}_"
+                print(f"{draft:>6} {k:>3} "
+                      f"{rows[p + 'acceptance_rate']:>8.3f} "
+                      f"{rows[p + 'verify_steps_per_token']:>17.3f} "
+                      f"{rows[p + 'rejected_tokens']:>9} "
+                      f"{rows[p + 'shared_weight_bytes'] / 1024:>11.1f}")
+        print("(steps/token: plain decode pays 1.0; floor is 1/k; "
+              "identical draft==verifier plans hit it)")
+    return rows
+
+
+if __name__ == "__main__":
+    print(json.dumps(run(), indent=2))

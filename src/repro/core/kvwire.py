@@ -73,12 +73,20 @@ def dequantize_kv(q: dict, d: int, dtype=jnp.float32) -> jnp.ndarray:
 
 
 def make_quant_kv(shape: tuple, bits: int, group_size: int) -> dict:
-    """Zero-initialized wire cache for a (..., D) tensor."""
+    """Zero-initialized wire cache for a (..., D) tensor.
+
+    ALL leaves init to zero — including ``scale``, so an unwritten row
+    dequantizes to 0 (code 0 * scale 0 + zmin 0) and the zero wire state
+    is one uniform fill.  Scan-stacked cache/pool layouts build their
+    leaves with ``jnp.zeros`` over this structure
+    (``transformer.init_cache``, ``serve/pool.py``), and cache rewind
+    (:func:`reset_page_rows`) restores exactly this state.
+    """
     *lead, d = shape
     cpb = packing.codes_per_byte(bits)
     g = d // group_size
     return {"packed": jnp.zeros((*lead, d // cpb), jnp.uint8),
-            "scale": jnp.ones((*lead, g), jnp.float32),
+            "scale": jnp.zeros((*lead, g), jnp.float32),
             "zmin": jnp.zeros((*lead, g), jnp.float32)}
 
 
@@ -147,6 +155,62 @@ def scatter_token(leaf, new: jnp.ndarray, page_idx, row, *,
             lambda a, w: a.at[page_idx, row].set(w[:, 0].astype(a.dtype)),
             leaf, wire)
     return leaf.at[page_idx, row].set(new[:, 0].astype(leaf.dtype))
+
+
+def scatter_tokens(leaf, new: jnp.ndarray, page_idx, row, *,
+                   bits: int | None = None, group_size: int | None = None):
+    """Write a length-L run of tokens per batch row into its pages.
+
+    ``new`` is fp (B, L, KV, D); ``page_idx``/``row`` are (B, L) physical
+    page ids and in-page rows — the speculative verify path writes all L
+    candidate positions of every slot in one scatter.  Rows of inactive
+    (or overflowing) slots should point at the scratch page; duplicate
+    scratch writes are unordered, which is fine — the scratch page is
+    never read unmasked.
+    """
+    if is_quant_kv(leaf):
+        wire = quantize_kv(new, bits, group_size)
+        return jax.tree.map(
+            lambda a, w: a.at[page_idx, row].set(w.astype(a.dtype)),
+            leaf, wire)
+    return leaf.at[page_idx, row].set(new.astype(leaf.dtype))
+
+
+def reset_table_rows(tree, table, keep_tokens, *, stacked: bool = False):
+    """Un-write every row past ``keep_tokens`` tokens of one request's
+    page table, in ONE fused update per leaf.
+
+    ``table`` is the request's (scratch-padded, fixed-length) ordered
+    page-id vector; entry i of the table covers token positions
+    ``[i * page_size, (i+1) * page_size)``.  Rows at positions
+    ``>= keep_tokens`` on the table's real (non-scratch) pages are reset
+    to the zero-initialized wire state (all leaves -> 0, matching
+    :func:`make_quant_kv`); scratch-padded entries are left untouched.
+
+    This is the device half of cache rewind: a speculative verify writes
+    L candidate rows, the accept decision keeps a prefix, and the pool
+    un-writes the rejected suffix so its bytes are indistinguishable from
+    a pool that never speculated (``serve/pool.py::PagedKVPool.truncate``)
+    — one dispatch per rewind, however many pages it spans.
+    """
+    n_tbl = table.shape[0]
+
+    def reset(a):
+        pages = a[:, table] if stacked else a[table]   # (.., n_tbl, ps, ..)
+        lead = 2 if stacked else 1
+        ps = pages.shape[lead]
+        pos = (jnp.arange(n_tbl)[:, None] * ps
+               + jnp.arange(ps)[None])                  # (n_tbl, ps)
+        mask = (pos >= keep_tokens) & (table > 0)[:, None]
+        mask = mask.reshape((1,) * (lead - 1) + (n_tbl, ps)
+                            + (1,) * (pages.ndim - lead - 1))
+        new = jnp.where(mask, jnp.zeros((), a.dtype), pages)
+        # duplicate scratch entries all scatter their own UNCHANGED rows
+        # (mask is False there), so the unordered dupes are harmless
+        return (a.at[:, table].set(new) if stacked
+                else a.at[table].set(new))
+
+    return jax.tree.map(reset, tree)
 
 
 def scatter_prefill(leaf, contig, page_ids: jnp.ndarray, *,

@@ -24,7 +24,8 @@ import json
 import os
 
 from repro.core import schemes
-from repro.plan import QuantPlan, plan_cost
+from repro.models import transformer
+from repro.plan import QuantPlan, leaf_key_bytes, plan_cost
 from repro.plan.plan import fit_group_size, fit_kv_group
 from repro.serve.engine import EngineConfig, PagedConfig, PagedEngine
 from repro.serve.pool import pool_nbytes
@@ -152,8 +153,10 @@ class Tenant:
     engine: PagedEngine
     pool: object                  # PagedKVPool
     scheduler: Scheduler
-    weight_bytes: float           # priced wire-format weight residency
+    weight_bytes: float           # incremental wire-format weight residency
     pool_bytes: int               # exact paged-pool residency
+    shared_bytes: float = 0.0     # packed leaves re-used from earlier
+    #                               tenants (priced once, registry dedup)
 
     @property
     def tenant_id(self) -> str:
@@ -172,21 +175,47 @@ class FleetRegistry:
     """
 
     def __init__(self, model_cfg, params, *, budget_mb: float | None = None,
-                 backend: str = "auto", seed: int = 0):
+                 backend: str = "auto", seed: int = 0,
+                 share_weights: bool = True):
         self.model_cfg, self.params = model_cfg, params
         self.budget_mb = budget_mb
         self.backend = backend
         self.seed = seed
+        self.share_weights = share_weights
         self.tenants: dict[str, Tenant] = {}
+        # packed-leaf dedup across tenants of the one shared checkpoint:
+        # quantize_params segment subtrees keyed on (range, position,
+        # QuantConfig) — identical leaves are materialized and PRICED once
+        # (the registry is per-(arch, base params), completing the key)
+        self._leaf_cache: dict = {}
 
     # ------------------------------------------------------------ pricing
-    def price(self, spec: TenantSpec) -> dict:
+    def _plan_keys(self, spec: TenantSpec) -> list:
+        return transformer.plan_leaf_keys(
+            self.model_cfg, spec.resolved_plan(self.model_cfg))
+
+    def shared_bytes(self, spec: TenantSpec) -> float:
+        """Wire bytes of the spec's packed leaves already resident via an
+        earlier tenant (0 when sharing is off or the tenant serves raw fp
+        params)."""
+        if not self.share_weights or (spec.plan is None
+                                      and spec.scheme is None):
+            return 0.0
+        return sum(leaf_key_bytes(self.model_cfg, k)
+                   for k in self._plan_keys(spec) if k in self._leaf_cache)
+
+    def price(self, spec: TenantSpec, *, with_sharing: bool = False) -> dict:
         """Cost-model bytes for a spec, without building anything.
 
         Pool bytes honor a plan's per-layer kv map: a mixed-KV tenant is
         priced with its exact heterogeneous page geometry (eval_shape over
         the real pytree), so dropping deep layers to 2-bit cache frees
         real budget headroom instead of being billed at the widest layer.
+
+        ``with_sharing`` discounts packed leaves the registry already
+        holds (cross-tenant dedup): ``weight_bytes`` becomes the tenant's
+        *incremental* residency and ``shared_bytes`` reports the re-used
+        wire bytes — registration charges the budget this way.
         """
         wb = plan_cost(self.model_cfg, spec.resolved_plan(self.model_cfg)
                        .resolve(self.model_cfg))["bytes"]
@@ -194,7 +223,13 @@ class FleetRegistry:
         pb = pool_nbytes(self.model_cfg, n_pages=spec.n_pages,
                          page_size=spec.page_size, kv_bits=kv_bits,
                          kv_group=kv_group)
-        return {"weight_bytes": wb, "pool_bytes": pb, "total": wb + pb}
+        out = {"weight_bytes": wb, "pool_bytes": pb, "total": wb + pb}
+        if with_sharing:
+            sh = self.shared_bytes(spec)
+            out["shared_bytes"] = sh
+            out["weight_bytes"] = wb - sh
+            out["total"] = wb - sh + pb
+        return out
 
     @property
     def budget_bytes(self) -> float | None:
@@ -215,25 +250,34 @@ class FleetRegistry:
         (:meth:`FleetRouter._wire` owns the scheduler hooks)."""
         if spec.tenant_id in self.tenants:
             raise ValueError(f"duplicate tenant id {spec.tenant_id!r}")
-        priced = self.price(spec)
+        priced = self.price(spec, with_sharing=True)
         if priced["total"] > self.remaining_bytes():
             raise FleetBudgetError(
                 f"tenant {spec.tenant_id!r} needs "
                 f"{priced['total'] / 2**20:.3f} MiB "
                 f"(weights {priced['weight_bytes'] / 2**20:.3f} + pool "
-                f"{priced['pool_bytes'] / 2**20:.3f}) but only "
-                f"{self.remaining_bytes() / 2**20:.3f} MiB of the "
+                f"{priced['pool_bytes'] / 2**20:.3f}, after "
+                f"{priced.get('shared_bytes', 0.0) / 2**20:.3f} shared) "
+                f"but only {self.remaining_bytes() / 2**20:.3f} MiB of the "
                 f"{self.budget_mb:.3f} MiB host budget remain")
         ecfg = dataclasses.replace(spec.engine_config(self.model_cfg),
                                    backend=self.backend)
-        engine = PagedEngine(self.model_cfg, self.params, ecfg,
+        build_params = self.params
+        if self.share_weights and ecfg.plan is not None:
+            # pre-pack through the registry's leaf cache: segments another
+            # tenant already packed come back as the SAME device buffers
+            build_params = transformer.quantize_params(
+                self.params, self.model_cfg, ecfg.plan,
+                leaf_cache=self._leaf_cache)
+        engine = PagedEngine(self.model_cfg, build_params, ecfg,
                              spec.paged_config())
         pool = engine.new_pool()
         sched = Scheduler(engine, pool,
                           seed=self.seed + len(self.tenants))
         tenant = Tenant(spec=spec, engine=engine, pool=pool, scheduler=sched,
                         weight_bytes=priced["weight_bytes"],
-                        pool_bytes=priced["pool_bytes"])
+                        pool_bytes=priced["pool_bytes"],
+                        shared_bytes=priced.get("shared_bytes", 0.0))
         self.tenants[spec.tenant_id] = tenant
         return tenant
 
@@ -252,9 +296,11 @@ class FleetRegistry:
                  f"{self.budget_mb} MiB, "
                  f"used {self.total_bytes() / 2**20:.3f} MiB)"]
         for t in self:
+            shared = (f" (+{t.shared_bytes / 2**20:.3f} shared)"
+                      if t.shared_bytes else "")
             lines.append(
                 f"  {t.tenant_id:>12}: weight={t.spec.weight} "
-                f"wire {t.weight_bytes / 2**20:.3f} MiB + pool "
+                f"wire {t.weight_bytes / 2**20:.3f} MiB{shared} + pool "
                 f"{t.pool_bytes / 2**20:.3f} MiB "
                 f"(kv_bits={t.spec.kv_bits}, slots={t.spec.max_slots}, "
                 f"pages={t.spec.n_pages}x{t.spec.page_size})")

@@ -53,7 +53,8 @@ class FleetRouter:
                 self.on_token(_tid, rid, token)
 
         def done(completion, _tid=tid):
-            self.telemetry.note_complete(_tid, completion.n_preemptions)
+            self.telemetry.note_complete(_tid, completion.n_preemptions,
+                                         completion.rejected_tokens)
             if self.on_complete:
                 self.on_complete(completion)
 

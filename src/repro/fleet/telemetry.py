@@ -21,6 +21,9 @@ class TenantStats:
     tokens: int = 0              # decode tokens emitted
     steps: int = 0               # decode steps this tenant was scheduled
     preemptions: int = 0
+    rejected_tokens: int = 0     # speculative drafts the verifier refused
+    #                              (cache rolled back in place — distinct
+    #                              from preemptions, which re-queue a slot)
     occupancy_sum: float = 0.0   # summed per-step pool occupancy
     occupancy_peak: float = 0.0
     first_step_t: float | None = None
@@ -39,6 +42,7 @@ class TenantStats:
         return {"submitted": self.submitted, "rejected": self.rejected,
                 "completed": self.completed, "tokens": self.tokens,
                 "steps": self.steps, "preemptions": self.preemptions,
+                "rejected_tokens": self.rejected_tokens,
                 "tok_per_s": round(self.tok_per_s(), 3),
                 "occupancy_mean": round(self.occupancy_mean(), 4),
                 "occupancy_peak": round(self.occupancy_peak, 4)}
@@ -72,10 +76,12 @@ class FleetTelemetry:
     def note_token(self, tenant_id: str):
         self._stats(tenant_id).tokens += 1
 
-    def note_complete(self, tenant_id: str, n_preemptions: int = 0):
+    def note_complete(self, tenant_id: str, n_preemptions: int = 0,
+                      rejected_tokens: int = 0):
         s = self._stats(tenant_id)
         s.completed += 1
         s.preemptions += n_preemptions
+        s.rejected_tokens += rejected_tokens
 
     def note_step(self, tenant_id: str, occupancy: float):
         s = self._stats(tenant_id)
@@ -107,6 +113,8 @@ class FleetTelemetry:
                     "steps": sum(s["steps"] for s in per.values()),
                     "preemptions": sum(s["preemptions"]
                                        for s in per.values()),
+                    "rejected_tokens": sum(s["rejected_tokens"]
+                                           for s in per.values()),
                     "tok_per_s": round(tokens / window, 3)
                     if window > 0 else 0.0}}
 

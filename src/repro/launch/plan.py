@@ -14,7 +14,10 @@ weight x KV-cache space: each layer's cache bitwidth is profiled
 (fake-quant of its K/V stream), priced at ``--kv-tokens`` of context in
 the exact wire format, and folded into the same byte budget, so the
 emitted plan carries a per-layer ``kv_bits`` map the paged serve pool
-deploys as heterogeneous page geometry.
+deploys as heterogeneous page geometry.  Pass the serve cell's geometry
+(``--n-pages``/``--page-size``) instead of ``--kv-tokens`` to price the
+cache at the pool's real capacity — the plan's kv bytes then equal
+``pool_nbytes`` exactly, one currency for plan and pool budgets.
 """
 from __future__ import annotations
 
@@ -137,10 +140,26 @@ def main(argv=None):
                          "search; the plan gains a per-layer kv_bits map")
     ap.add_argument("--kv-group", type=int, default=64,
                     help="cache local-region size (clamped to head_dim)")
-    ap.add_argument("--kv-tokens", type=int, default=256,
-                    help="context tokens the cache budget is priced at")
+    ap.add_argument("--kv-tokens", type=int, default=None,
+                    help="context tokens the cache budget is priced at "
+                         "(default: the serve cell's real capacity "
+                         "n_pages * page_size when --n-pages is given, "
+                         "else 256)")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="serve-cell page count (incl. scratch): prices "
+                         "the kv budget at the pool's exact geometry, so "
+                         "plan and pool budgets share one currency")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="serve-cell page size (with --n-pages)")
     ap.add_argument("--out", default="plan.json")
     args = ap.parse_args(argv)
+
+    kv_tokens = args.kv_tokens
+    if kv_tokens is None:
+        # context-aware kv budget: price the cache at the serve cell's
+        # real capacity so the plan's kv bytes equal pool_nbytes exactly
+        kv_tokens = (args.n_pages * args.page_size
+                     if args.n_pages is not None else 256)
 
     cfg = configs.smoke(args.arch)
     if cfg.n_enc_layers:
@@ -156,7 +175,7 @@ def main(argv=None):
         cfg, params, [s.strip() for s in args.schemes.split(",")],
         budget_mb=args.budget_mb, budget_ms=args.budget_ms,
         metric=args.metric, batches=stream,
-        kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=args.kv_tokens)
+        kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=kv_tokens)
     print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg))['mb']:.4f} MiB")
     plan.save(args.out)
     print(f"wrote {args.out}")

@@ -37,7 +37,17 @@ def _continuous(cfg, params, ecfg, args):
     ecfg = dataclasses.replace(ecfg, max_len=max(ecfg.max_len, mc))
     pcfg = PagedConfig(max_slots=args.max_slots, page_size=args.page_size,
                        n_pages=args.n_pages, max_context=mc)
-    server = Server(cfg, params, ecfg, pcfg)
+    engine = None
+    if args.spec_plan is not None:
+        from repro.plan import QuantPlan
+        from repro.spec import SpeculativeEngine
+        draft = QuantPlan.load(args.spec_plan)
+        engine = SpeculativeEngine(cfg, params, ecfg, pcfg,
+                                   draft_plan=draft, spec_k=args.spec_k)
+        print(f"speculative: k={args.spec_k} draft={args.spec_plan} "
+              f"shared {engine.shared_weight_bytes():,.0f} B of packed "
+              f"leaves with the verifier")
+    server = Server(cfg, params, ecfg, pcfg, engine=engine)
     rng = jax.random.key(2)
     warm = jax.random.randint(jax.random.fold_in(rng, args.continuous),
                               (args.prompt_len,), 0, cfg.vocab_size)
@@ -66,6 +76,12 @@ def _continuous(cfg, params, ecfg, args):
           f"{max(occ):.2f}, mean {sum(occ) / len(occ):.2f}")
     print(f"decode compilations: {s['decode_compilations']} "
           f"(1 == no per-step retrace)")
+    if args.spec_plan is not None:
+        sp = server.engine.spec_stats()
+        print(f"speculative: acceptance {sp['acceptance_rate']:.3f}, "
+              f"verifier steps/token {sp['verify_steps_per_token']:.3f} "
+              f"(< 1.0 == decode speedup), rejected "
+              f"{server.scheduler.stats()['rejected_tokens']} drafts")
     print("sample:", server.output(rids[0])[:16])
 
 
@@ -141,6 +157,12 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=128)
+    ap.add_argument("--spec-plan", default=None, metavar="DRAFT.json",
+                    help="speculative decoding (with --continuous): a "
+                         "low-bit draft QuantPlan of the same checkpoint "
+                         "proposes tokens the main engine verifies")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per verify cycle")
     ap.add_argument("--fleet", default=None, metavar="FLEET.json",
                     help="multi-tenant manifest (repro.fleet); per-plan "
                          "engines behind one host budget")
@@ -153,6 +175,11 @@ def main():
                     help="write the fleet stats snapshot to this JSON file")
     args = ap.parse_args()
 
+    if args.spec_plan is not None and (args.fleet is not None
+                                       or not args.continuous):
+        ap.error("--spec-plan needs --continuous (speculation runs on the "
+                 "paged serve layer; per-tenant speculative fleets are not "
+                 "wired yet)")
     if args.fleet is not None:
         _fleet(args)
         return

@@ -278,24 +278,29 @@ def local_attention(q, k, v, *, window: int, lookback: int = 1):
 
 def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None,
                      chunk: int | None = None, key_positions=None):
-    """q (B, 1, KV, G, D); caches (B, S, KV, D); pos int — scalar, or (B,)
+    """q (B, Lq, KV, G, D); caches (B, S, KV, D); pos int — scalar, or (B,)
     for continuous batching where every slot sits at its own position.
-    ``key_positions`` (S,) gives each cache slot's absolute position (ring
-    buffers); default slot s holds position s.  ``window`` restricts to a
-    sliding window; ``chunk`` to the current chunk (Llama-4).
+    ``Lq`` is usually 1 (plain decode); the speculative verify path sends
+    a length-Lq run whose query i sits at absolute position ``pos + i``
+    and attends causally over cache slots ``<= pos + i`` (the run's own
+    K/V having been written to the cache first).  ``key_positions`` (S,)
+    gives each cache slot's absolute position (ring buffers); default slot
+    s holds position s.  ``window`` restricts to a sliding window;
+    ``chunk`` to the current chunk (Llama-4).
     """
-    b, _, kvh, g, d = q.shape
+    b, lq, kvh, g, d = q.shape
     s_len = k_cache.shape[1]
     spos = jnp.arange(s_len) if key_positions is None else key_positions
     posb = jnp.broadcast_to(jnp.asarray(pos), (b,))
-    valid = (spos[None, :] <= posb[:, None]) & (spos[None, :] >= 0)
+    qpos = posb[:, None] + jnp.arange(lq)                       # (B, Lq)
+    valid = (spos[None, None, :] <= qpos[..., None]) & (spos >= 0)
     if window is not None:
-        valid &= spos[None, :] > (posb[:, None] - window)
+        valid &= spos[None, None, :] > (qpos[..., None] - window)
     if chunk is not None:
-        valid &= spos[None, :] >= (posb[:, None] // chunk) * chunk
+        valid &= spos[None, None, :] >= (qpos[..., None] // chunk) * chunk
     s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * (d ** -0.5)
-    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
     return out.astype(q.dtype)
@@ -394,25 +399,29 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
             cache["k"]["packed"].shape[-1], head_dim,
             cache["k"]["scale"].shape[-1])
     if cache is not None and kind != "cross" and page_table is not None:
-        if kind != "full" or l != 1:
-            raise ValueError("paged cache supports single-token decode of "
-                             "'full' attention only")
+        if kind != "full":
+            raise ValueError("paged cache supports decode of 'full' "
+                             "attention only")
         page_size = (cache["k"]["packed"] if quant else cache["k"]).shape[1]
+        wpos = cache_pos[:, None] + jnp.arange(l)           # (B, L) absolute
+        # positions beyond the slot's table (a speculative run tailing past
+        # max_context) write the scratch page instead of clamping onto the
+        # slot's own last page, where they would corrupt live rows
+        limit = page_table.shape[1] * page_size
         page_idx = jnp.take_along_axis(
-            page_table, (cache_pos // page_size)[:, None], axis=1)[:, 0]
-        row = cache_pos % page_size
+            page_table, jnp.minimum(wpos // page_size,
+                                    page_table.shape[1] - 1), axis=1)
+        page_idx = jnp.where(wpos < limit, page_idx, 0)
+        row = wpos % page_size
+        kw = dict(bits=qbits, group_size=qgroup) if quant else {}
+        qk = kvcache.scatter_tokens(cache["k"], k, page_idx, row, **kw)
+        qv = kvcache.scatter_tokens(cache["v"], v, page_idx, row, **kw)
         if quant:
-            qk = kvcache.scatter_token(cache["k"], k, page_idx, row,
-                                       bits=qbits, group_size=qgroup)
-            qv = kvcache.scatter_token(cache["v"], v, page_idx, row,
-                                       bits=qbits, group_size=qgroup)
             k_cache = kvcache.dequantize_kv(
                 kvcache.gather_pages(qk, page_table), head_dim, q.dtype)
             v_cache = kvcache.dequantize_kv(
                 kvcache.gather_pages(qv, page_table), head_dim, q.dtype)
         else:
-            qk = kvcache.scatter_token(cache["k"], k, page_idx, row)
-            qv = kvcache.scatter_token(cache["v"], v, page_idx, row)
             k_cache = kvcache.gather_pages(qk, page_table)
             v_cache = kvcache.gather_pages(qv, page_table)
         new_cache = {"k": qk, "v": qv}

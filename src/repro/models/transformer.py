@@ -731,6 +731,37 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
     return logits, new_pages
 
 
+def paged_decode_multi(params, cfg: ModelConfig, tokens, pages, page_table,
+                       pos, *, policy: QuantPolicy = NO_QUANT):
+    """Length-L batched decode over the paged pool — the speculative
+    verify step (one compiled forward scores all L candidate tokens).
+
+    tokens (B, L) int32 — slot b's candidate run, whose token i sits at
+    absolute position ``pos[b] + i``; pages / page_table / pos as in
+    :func:`paged_decode_step`.  Every layer scatters all L tokens' K/V
+    into the slot's pages, then attends causally (query i over cache
+    positions ``<= pos + i``, which includes candidates 0..i).  Returns
+    (logits (B, L, V), new pages) — logits at *every* position, so the
+    caller can greedy-score the whole run and accept the longest matching
+    prefix.  L == 1 reduces exactly to :func:`paged_decode_step`.
+    """
+    if cfg.pos_embed == "learned":
+        raise ValueError("paged decode needs per-slot positions; learned "
+                         "positional embeddings are not supported")
+    l = tokens.shape[1]
+    x = layers.embed_apply(params["embed"], tokens)
+    x = x.astype(cfg.activation_dtype)
+    positions = pos[:, None] + jnp.arange(l)[None]
+    x, new_pages, _ = _stack_apply(
+        params["decoder"], x, cfg, cfg.pattern, policy=policy,
+        caches=_layer_caches(pages),
+        cache_pos=pos, enc_out=None, positions=positions,
+        page_table=page_table)
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _logits(params, cfg, x, policy)
+    return logits, new_pages
+
+
 # ---------------------------------------------------------------------------
 # quantized serving params (the paper's technique as deployment format)
 # ---------------------------------------------------------------------------
@@ -783,7 +814,8 @@ def _quantize_tree(tree, qcfg: schemes.QuantConfig):
     return walk(tree)
 
 
-def quantize_params(params, cfg: ModelConfig, qcfg) -> dict:
+def quantize_params(params, cfg: ModelConfig, qcfg, *,
+                    leaf_cache: dict | None = None) -> dict:
     """Replace Dense weights with packed :class:`QWeight` (local quantization
     regions along the contraction axis).  Stacked (scan) and expert weights
     are quantized with vmap; norms / router / conv / scalar leaves stay fp.
@@ -794,18 +826,65 @@ def quantize_params(params, cfg: ModelConfig, qcfg) -> dict:
     consecutive identically-configured superblocks re-stacked into
     ``super_segments`` so the planned scan walker keeps one compiled body
     per segment; non-decoder leaves (embed / lm_head / encoder) stay fp.
+
+    ``leaf_cache`` dedups packed leaves across plans over ONE shared base
+    checkpoint: segment subtrees are keyed on ``(start, size, position,
+    QuantConfig)`` and re-used (same device buffers) when another plan
+    produced the identical segment — the mechanism behind draft/verifier
+    weight sharing in ``repro.spec`` and cross-tenant sharing in
+    ``repro.fleet``.  Callers must pass one cache per base checkpoint;
+    keys do not capture the fp params' identity.
     """
     if hasattr(qcfg, "resolve"):               # QuantPlan (duck-typed)
-        return _quantize_params_plan(params, cfg, qcfg)
+        return _quantize_params_plan(params, cfg, qcfg,
+                                     leaf_cache=leaf_cache)
     return _quantize_tree(params, qcfg)
 
 
-def _quantize_params_plan(params, cfg: ModelConfig, plan) -> dict:
+def is_quantized_params(params) -> bool:
+    """Whether ``params`` already carry plan-packed decoder segments."""
+    dec = params.get("decoder", {}) if isinstance(params, dict) else {}
+    return "super_segments" in dec
+
+
+def plan_leaf_keys(cfg: ModelConfig, plan) -> list:
+    """The ``leaf_cache`` keys ``quantize_params(plan)`` reads/writes.
+
+    One key per (segment, pattern position) stacked subtree plus one per
+    tail layer; two plans share a packed leaf exactly when they produce
+    the same key (same superblock range, position, and weight config) —
+    kv bitwidths shape the segment *boundaries* but not the packed
+    contents, so they appear only through the ranges.  This is how
+    ``repro.spec`` counts draft/verifier sharing and ``repro.fleet``
+    prices deduped tenants.
+    """
+    configs = plan.resolve(cfg)
+    kv = (plan.resolve_kv(cfg) if hasattr(plan, "resolve_kv")
+          else (None,) * cfg.n_layers)
+    p_len = len(cfg.pattern)
+    segs = plan_segments(list(zip(configs, kv)), p_len, cfg.n_super)
+    keys = [("super", start, size, j, seg_key[j][0])
+            for start, size, seg_key in segs for j in range(p_len)]
+    keys += [("tail", t, configs[cfg.n_super * p_len + t])
+             for t in range(cfg.n_tail)]
+    return keys
+
+
+def _quantize_params_plan(params, cfg: ModelConfig, plan, *,
+                          leaf_cache: dict | None = None) -> dict:
     configs = plan.resolve(cfg)
     kv = (plan.resolve_kv(cfg) if hasattr(plan, "resolve_kv")
           else (None,) * cfg.n_layers)
     p_len = len(cfg.pattern)
     dec = params["decoder"]
+
+    def cached(key, make):
+        if leaf_cache is None:
+            return make()
+        if key not in leaf_cache:
+            leaf_cache[key] = make()
+        return leaf_cache[key]
+
     # segment on the combined (weight, kv) key so param segments line up
     # with the planned walker's — a kv boundary splits the scan even when
     # the weight scheme is unchanged across it
@@ -814,11 +893,16 @@ def _quantize_params_plan(params, cfg: ModelConfig, plan) -> dict:
     for start, size, seg_key in segs:
         pos_trees = []
         for j in range(p_len):
-            sub = jax.tree.map(lambda a: a[start:start + size],
-                               dec["super"][j])
-            pos_trees.append(_quantize_tree(sub, seg_key[j][0]))
+            def make(start=start, size=size, j=j, qc=seg_key[j][0]):
+                sub = jax.tree.map(lambda a: a[start:start + size],
+                                   dec["super"][j])
+                return _quantize_tree(sub, qc)
+            pos_trees.append(cached(("super", start, size, j,
+                                     seg_key[j][0]), make))
         seg_trees.append(tuple(pos_trees))
-    tail = [_quantize_tree(blk, configs[cfg.n_super * p_len + t])
+    tail = [cached(("tail", t, configs[cfg.n_super * p_len + t]),
+                   lambda t=t, blk=blk, qc=configs[cfg.n_super * p_len + t]:
+                   _quantize_tree(blk, qc))
             for t, blk in enumerate(dec["tail"])]
     out = dict(params)
     out["decoder"] = {"super_segments": seg_trees, "tail": tail}

@@ -9,8 +9,8 @@ from .plan import QuantPlan, fit_kv_group, layer_name
 from .costmodel import (LayerCost, candidate_costs, kv_bits_of_label,
                         kv_candidate_costs, kv_label, kv_layer_options,
                         kv_searchable, layer_cost, layer_dense_params,
-                        layer_kv_bytes_per_token, plan_cost, plan_kv_cost,
-                        weight_bytes)
+                        layer_kv_bytes_per_token, leaf_key_bytes, plan_cost,
+                        plan_kv_cost, weight_bytes)
 from .sensitivity import (SensitivityProfile, layer_output_ranges,
                           profile_kv_sensitivity, profile_sensitivity)
 from .search import (SearchResult, greedy_search, joint_space,
@@ -23,7 +23,7 @@ __all__ = [
     "plan_cost", "weight_bytes",
     "kv_label", "kv_bits_of_label", "kv_candidate_costs",
     "kv_layer_options", "kv_searchable",
-    "layer_kv_bytes_per_token", "plan_kv_cost",
+    "layer_kv_bytes_per_token", "leaf_key_bytes", "plan_kv_cost",
     "SensitivityProfile", "layer_output_ranges", "profile_sensitivity",
     "profile_kv_sensitivity",
     "SearchResult", "greedy_search", "joint_space",

@@ -62,6 +62,24 @@ def weight_bytes(n_params: int, qcfg) -> float:
             + 2 * 4.0 * n_params / qcfg.group_size)
 
 
+def leaf_key_bytes(model_cfg, key) -> float:
+    """Wire bytes behind one ``transformer.plan_leaf_keys`` segment key.
+
+    Prices the packed subtree a leaf-cache entry holds in the planner's
+    byte currency (:func:`weight_bytes` per covered layer), so sharing a
+    leaf across plans/tenants discounts exactly those bytes.
+    """
+    sizes = layer_dense_params(model_cfg)
+    p_len = len(model_cfg.pattern)
+    if key[0] == "super":
+        _, start, size, j, qcfg = key
+        return sum(weight_bytes(sizes[s * p_len + j], qcfg)
+                   for s in range(start, start + size))
+    _, t, qcfg = key
+    n_super = model_cfg.n_layers // p_len
+    return weight_bytes(sizes[n_super * p_len + t], qcfg)
+
+
 def layer_cost(n_params: int, qcfg, hw: HW | None = None) -> LayerCost:
     hw = hw or HW()
     macs = n_params                       # decode: 1 MAC per live weight

@@ -1,7 +1,8 @@
 from .kvcache import (quantize_kv, dequantize_kv, make_quant_kv,
                       update_quant_kv, is_quant_kv, kv_bits_of,
                       make_paged_kv, gather_pages, scatter_token,
-                      scatter_prefill, permute_pages,
+                      scatter_tokens, scatter_prefill, permute_pages,
+                      reset_table_rows,
                       quantize_state, dequantize_state, is_quant_state,
                       cache_nbytes)
 from .engine import (Engine, EngineConfig, PagedConfig, PagedEngine,

@@ -71,7 +71,13 @@ class Engine:
             if ecfg.a_bits is not None:
                 raise ValueError("a_bits is per-layer under a plan — set it "
                                  "in the plan's QuantConfigs instead")
-            self.params = transformer.quantize_params(params, cfg, ecfg.plan)
+            if transformer.is_quantized_params(params):
+                # pre-packed by the caller (leaf-cache sharing across
+                # engines: repro.spec draft/verifier, repro.fleet tenants)
+                self.params = params
+            else:
+                self.params = transformer.quantize_params(params, cfg,
+                                                          ecfg.plan)
             self.policy = ecfg.plan.policy(cfg, mode="serve",
                                            backend=ecfg.backend)
         elif ecfg.weight_scheme is not None:
@@ -189,6 +195,7 @@ class PagedEngine(Engine):
         self._kvq = self._kv_quant()
         self._prefill_paged = jax.jit(self._prefill_paged_impl)
         self._step_paged = jax.jit(self._step_paged_impl)
+        self._multi_paged = jax.jit(self._multi_paged_impl)
 
     def new_pool(self) -> PagedKVPool:
         bits, group = self._kv_layout
@@ -229,6 +236,12 @@ class PagedEngine(Engine):
             policy=self.policy)
         return self._sample(logits[:, -1], key), pages
 
+    def _multi_paged_impl(self, params, pages, tokens, page_table, pos):
+        logits, pages = transformer.paged_decode_multi(
+            params, self.cfg, tokens, pages, page_table, pos,
+            policy=self.policy)
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), pages
+
     # --------------------------------------------------------------- host
     def prefill_request(self, pool: PagedKVPool, tokens, page_ids,
                         key) -> int:
@@ -255,6 +268,35 @@ class PagedEngine(Engine):
             jnp.asarray(page_table, jnp.int32), jnp.asarray(pos, jnp.int32),
             key)
         return np.asarray(toks)
+
+    def decode_multi_batch(self, pool: PagedKVPool, tokens, page_table,
+                           pos) -> np.ndarray:
+        """Greedy-score a length-L candidate run per slot in ONE compiled
+        batched forward (the speculative verify step).  tokens
+        (max_slots, L); returns the greedy next token at every position
+        (max_slots, L) — all L candidates' K/V are written to the pool, so
+        rejected suffixes must be un-written via ``pool.truncate``."""
+        toks, pool.pages = self._multi_paged(
+            self.params, pool.pages, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(page_table, jnp.int32), jnp.asarray(pos, jnp.int32))
+        return np.asarray(toks)
+
+    # ------------------------------------------------------- scheduler API
+    @property
+    def lookahead_tokens(self) -> int:
+        """Cache rows one scheduler step may write per slot at/past its
+        position (speculative engines write their whole candidate run)."""
+        return 1
+
+    def advance_slots(self, pool: PagedKVPool, tokens, page_table, pos,
+                      key, budget=None):
+        """Scheduler step contract: advance every slot, returning
+        ``(emitted, rejected)`` — per-slot lists of emitted tokens and
+        per-slot rejected-draft counts.  The plain engine emits exactly
+        one token per slot and never rejects; ``budget`` (per-slot max
+        tokens to emit) is honored trivially."""
+        toks = self.decode_step_batch(pool, tokens, page_table, pos, key)
+        return [[int(t)] for t in toks], [0] * len(toks)
 
     @property
     def decode_compilations(self) -> int:

@@ -11,7 +11,8 @@ views rather than one monolithic (B, T, ...) cache.
 from repro.core.kvwire import (quantize_kv, dequantize_kv, make_quant_kv,
                                update_quant_kv, is_quant_kv, kv_bits_of,
                                make_paged_kv, gather_pages, scatter_token,
-                               scatter_prefill, permute_pages,
+                               scatter_tokens, scatter_prefill,
+                               permute_pages, reset_table_rows,
                                quantize_state, dequantize_state,
                                is_quant_state, cache_nbytes, _infer,
                                KV_BITS, check_kv_bits, segment_runs,
@@ -20,7 +21,8 @@ from repro.core.kvwire import (quantize_kv, dequantize_kv, make_quant_kv,
 __all__ = ["quantize_kv", "dequantize_kv", "make_quant_kv",
            "update_quant_kv", "is_quant_kv", "kv_bits_of",
            "make_paged_kv", "gather_pages", "scatter_token",
-           "scatter_prefill", "permute_pages",
+           "scatter_tokens", "scatter_prefill", "permute_pages",
+           "reset_table_rows",
            "quantize_state", "dequantize_state", "is_quant_state",
            "cache_nbytes",
            "KV_BITS", "check_kv_bits", "segment_runs", "kv_token_nbytes"]

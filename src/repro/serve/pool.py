@@ -138,6 +138,10 @@ class PagedKVPool:
             sup_key: kvwire.permute_pages(pages[sup_key], perm,
                                           stacked=True),
             "tail": kvwire.permute_pages(pages["tail"], perm)})
+        self._reset_table = jax.jit(lambda pages, table, keep: {
+            sup_key: kvwire.reset_table_rows(pages[sup_key], table, keep,
+                                             stacked=True),
+            "tail": kvwire.reset_table_rows(pages["tail"], table, keep)})
 
         self._free = list(range(n_pages - 1, 0, -1))   # LIFO free list
         self.page_tables: dict[int, list[int]] = {}    # rid -> ordered pages
@@ -174,6 +178,39 @@ class PagedKVPool:
 
     def pages_of(self, rid: int) -> list[int]:
         return list(self.page_tables.get(rid, []))
+
+    # ------------------------------------------------------------- rewind
+    def truncate(self, rid: int, keep_tokens: int) -> int:
+        """Un-write rid's cache past ``keep_tokens`` tokens (speculative
+        rollback): trailing rows of the partially-kept page and every
+        wholly-unused trailing page are reset to the zero-initialized wire
+        state (across every layer, at that layer's own format), and the
+        trailing pages return to the free list.  No realloc — the kept
+        prefix stays in place, so after a rewind the pool is
+        byte-indistinguishable from one that never speculated.  Returns
+        the number of pages released.
+        """
+        if keep_tokens < 0:
+            raise ValueError(f"keep_tokens must be >= 0, got {keep_tokens}")
+        tbl = self.page_tables.get(rid, [])
+        keep_pages = -(-keep_tokens // self.page_size)
+        if keep_pages > len(tbl):
+            raise ValueError(
+                f"truncate({rid}, {keep_tokens}) needs {keep_pages} pages "
+                f"but the request owns {len(tbl)}")
+        drop = tbl[keep_pages:]
+        if keep_tokens < len(tbl) * self.page_size and tbl:
+            # one fused dispatch resets the partial page's tail AND every
+            # dropped page (fixed-length scratch-padded table -> one trace)
+            padded = np.zeros((self.n_pages,), np.int32)
+            padded[:len(tbl)] = tbl
+            self.pages = self._reset_table(
+                self.pages, jnp.asarray(padded),
+                jnp.asarray(keep_tokens, jnp.int32))
+        if drop:
+            del self.page_tables[rid][keep_pages:]
+            self._free.extend(reversed(drop))
+        return len(drop)
 
     def table_array(self, rid: int, max_pages: int) -> np.ndarray:
         """rid's page table as (max_pages,) int32, scratch-padded."""

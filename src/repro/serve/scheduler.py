@@ -39,6 +39,7 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     state: str = QUEUED
     n_preemptions: int = 0
+    rejected_tokens: int = 0  # draft tokens a speculative verify rejected
     arrival: int = 0          # submit order; FCFS tiebreak + victim choice
     tenant: str | None = None  # fleet routing tag (fleet/router.py)
 
@@ -49,6 +50,7 @@ class Completion:
     tokens: tuple[int, ...]
     n_preemptions: int
     tenant: str | None = None
+    rejected_tokens: int = 0
 
 
 class Scheduler:
@@ -120,7 +122,12 @@ class Scheduler:
                 "pool_occupancy": self.pool.occupancy(),
                 "steps": self._decode_steps,
                 "preemptions": sum(r.n_preemptions
-                                   for r in self._requests.values())}
+                                   for r in self._requests.values()),
+                # speculative-rejection rollbacks are NOT preemptions: the
+                # slot keeps running, only its cache tail is un-written —
+                # they get their own counter (fleet/telemetry.py)
+                "rejected_tokens": sum(r.rejected_tokens
+                                       for r in self._requests.values())}
 
     def request(self, rid: int) -> Request:
         return self._requests[rid]
@@ -144,7 +151,8 @@ class Scheduler:
         self.pool.free(req.rid)
         req.state = COMPLETE
         done = Completion(req.rid, tuple(req.generated), req.n_preemptions,
-                          tenant=req.tenant)
+                          tenant=req.tenant,
+                          rejected_tokens=req.rejected_tokens)
         events.append(done)
         if self.on_complete:
             self.on_complete(done)
@@ -212,15 +220,23 @@ class Scheduler:
         return True
 
     def _ensure_pages(self):
-        """Every active slot needs the page covering the position it is
-        about to write; preempt on exhaustion."""
+        """Every active slot needs the pages covering every position the
+        engine may write this step (``engine.lookahead_tokens`` rows for a
+        speculative engine's candidate run); preempt on exhaustion."""
+        look = getattr(self.engine, "lookahead_tokens", 1)
         for slot, req in enumerate(self._slots):
             if req is None:
                 continue
-            need_idx = int(self._pos[slot]) // self.pcfg.page_size
+            # lookahead rows past the request's own maximum length need no
+            # pages: the slot's scratch-padded table routes those writes
+            # to page 0, and tokens scored there are beyond the budget
+            total = len(req.prompt) + req.max_new_tokens
+            last = min(int(self._pos[slot]) + look - 1, total - 1,
+                       self.pcfg.max_context - 1)
+            need_idx = last // self.pcfg.page_size
             while need_idx >= len(self.pool.pages_of(req.rid)):
                 if self.pool.alloc(req.rid, 1):
-                    break
+                    continue      # may need more than one page (lookahead)
                 active = [r for r in self._slots if r is not None]
                 if len(active) <= 1:
                     raise RuntimeError(
@@ -232,7 +248,15 @@ class Scheduler:
 
     # ---------------------------------------------------------------- step
     def step(self) -> list[Completion]:
-        """Admit what fits, then advance every in-flight request one token."""
+        """Admit what fits, then advance every in-flight request.
+
+        A plain :class:`~repro.serve.engine.PagedEngine` emits exactly one
+        token per slot; a speculative engine may emit several accepted
+        tokens per slot per step (``engine.advance_slots`` returns
+        per-slot emission lists plus rejected-draft counts).  Emission is
+        capped at each request's remaining token budget — any cache rows
+        the engine wrote past the cap die with the request's pages.
+        """
         events: list[Completion] = []
         self._admit(events)
         self._ensure_pages()
@@ -242,23 +266,35 @@ class Scheduler:
 
         table = np.zeros((self.pcfg.max_slots, self.pcfg.pages_per_slot),
                          np.int32)
+        budget = [0] * self.pcfg.max_slots
         for i in active:
             table[i] = self.pool.table_array(self._slots[i].rid,
                                              self.pcfg.pages_per_slot)
+            budget[i] = (self._slots[i].max_new_tokens
+                         - len(self._slots[i].generated))
         pos = np.where([r is not None for r in self._slots], self._pos, 0)
-        toks = self.engine.decode_step_batch(
+        emitted, rejected = self.engine.advance_slots(
             self.pool, self._last_tok, table, pos.astype(np.int32),
-            self._fold_key())
+            self._fold_key(), budget=budget)
         self._decode_steps += 1
 
+        look = getattr(self.engine, "lookahead_tokens", 1)
         for i in active:
             req = self._slots[i]
-            tok = int(toks[i])
-            self._pos[i] += 1
-            self._last_tok[i] = tok
-            self._emit(req, tok)
+            req.rejected_tokens += int(rejected[i])
+            for tok in emitted[i]:
+                if len(req.generated) >= req.max_new_tokens:
+                    break
+                self._pos[i] += 1
+                self._last_tok[i] = int(tok)
+                self._emit(req, int(tok))
             if len(req.generated) >= req.max_new_tokens:
                 self._finish(req, i, events)
+            elif look > 1:
+                # speculative rollback: un-write cache rows past the
+                # accepted prefix and release surplus lookahead pages —
+                # the slot keeps running (NOT a preemption)
+                self.pool.truncate(req.rid, int(self._pos[i]))
         return events
 
     def drain(self, max_steps: int | None = None) -> dict[int, list[int]]:

@@ -31,9 +31,12 @@ class Server:
     """Owns the paged engine, the page pool, and the scheduler."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 pcfg: PagedConfig, *, on_token=None, on_complete=None,
-                 seed: int = 0):
-        self.engine = PagedEngine(cfg, params, ecfg, pcfg)
+                 pcfg: PagedConfig, *, engine=None, on_token=None,
+                 on_complete=None, seed: int = 0):
+        """``engine`` swaps in a prebuilt engine satisfying the paged-engine
+        step contract (e.g. :class:`repro.spec.SpeculativeEngine`); by
+        default a :class:`PagedEngine` is built from the configs."""
+        self.engine = engine or PagedEngine(cfg, params, ecfg, pcfg)
         self.pool = self.engine.new_pool()
         self.scheduler = Scheduler(self.engine, self.pool,
                                    on_token=on_token,

@@ -1,0 +1,20 @@
+"""Self-speculative decoding: a low-bit QuantPlan of the model drafts,
+a high-bit plan of the SAME checkpoint verifies.
+
+The paper's result — aggressive local-quantization-region schemes keep
+most of the model's quality at a fraction of the compute — makes the
+2-bit plan a *free* draft model: no second checkpoint, no distillation.
+``SpeculativeEngine`` wraps the paged serving stack so greedy outputs
+stay token-for-token identical to the verifier-only engine while the
+verifier runs one batched multi-token step per accepted run.
+
+    draft.py    k greedy proposals per slot on the draft's shadow pages
+    verify.py   batched length-(k+1) verify + longest-prefix acceptance
+    engine.py   SpeculativeEngine / PairedKVPool (drop-in for PagedEngine)
+"""
+from .draft import draft_proposals
+from .verify import accept_lengths, emitted_tokens
+from .engine import PairedKVPool, SpeculativeEngine, shared_segment_keys
+
+__all__ = ["draft_proposals", "accept_lengths", "emitted_tokens",
+           "PairedKVPool", "SpeculativeEngine", "shared_segment_keys"]

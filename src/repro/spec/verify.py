@@ -1,0 +1,57 @@
+"""Verification: batched multi-token scoring + longest-prefix acceptance.
+
+One verify cycle feeds the run ``[d_0, d_1, .., d_k]`` (the slot's
+pending token plus its k draft proposals) through the verifier's single
+compiled length-(k+1) paged forward
+(``PagedEngine.decode_multi_batch`` -> ``transformer.paged_decode_multi``)
+and greedy-scores every position: ``g_i`` is the token the verifier
+would emit after seeing up to ``d_i``.  Proposal ``d_{i+1}`` is accepted
+iff it equals ``g_i``; the cycle emits the accepted prefix plus the
+verifier's correction token at the first mismatch.
+
+Greedy speculative decoding is *exact*: every emitted token is a
+verifier greedy token, so the output stream is byte-identical to the
+verifier-only engine's — speedup without accuracy loss.  (The bonus
+token ``g_k`` of an all-accepted run is deliberately NOT emitted: the
+draft cache never saw ``d_k`` as an input, and skipping the bonus keeps
+the draft's shadow cache gap-free without a catch-up forward.)
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def accept_lengths(proposals: np.ndarray, greedy: np.ndarray) -> np.ndarray:
+    """Per-slot longest accepted prefix length m in [0, k].
+
+    ``proposals`` (B, k) — draft tokens d_1..d_k; ``greedy`` (B, k+1) —
+    verifier greedy tokens g_0..g_k.  d_{i+1} is accepted iff it matches
+    g_i AND every earlier proposal was accepted.
+    """
+    proposals = np.asarray(proposals)
+    greedy = np.asarray(greedy)
+    k = proposals.shape[1]
+    matches = (proposals == greedy[:, :k]).astype(np.int64)
+    return matches.cumprod(axis=1).sum(axis=1)
+
+
+def emitted_tokens(proposals: np.ndarray, greedy: np.ndarray,
+                   m: np.ndarray) -> list:
+    """Per-slot emission lists for accepted lengths ``m``.
+
+    A slot with m < k emits its m accepted proposals plus the verifier's
+    correction ``g_m`` (m+1 tokens); a fully-accepted slot emits its k
+    proposals (the bonus token is skipped — see module docstring).
+    Every emitted token is a verifier greedy token.
+    """
+    k = proposals.shape[1]
+    out = []
+    for b in range(proposals.shape[0]):
+        mb = int(m[b])
+        if mb < k:
+            toks = [int(t) for t in proposals[b, :mb]]
+            toks.append(int(greedy[b, mb]))
+        else:
+            toks = [int(t) for t in proposals[b]]
+        out.append(toks)
+    return out

@@ -96,10 +96,14 @@ def test_registry_enforces_shared_budget(params):
     assert len(reg) == 0                       # nothing half-registered
 
     # two tenants fit one budget only together under a roomier cap
+    # (share_weights off: this test is about the budget gate itself —
+    # identical-plan tenants WOULD dedup and admit, see
+    # test_identical_plan_tenants_share_packed_leaves)
     one = FleetRegistry(TINY, params, backend="ref").price(
         _spec(scheme="lq2w", kv_bits=2))
     budget_mb = 1.5 * one["total"] / 2**20     # fits one, not two
-    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref",
+                        share_weights=False)
     reg.register(_spec("a", scheme="lq2w", kv_bits=2))
     with pytest.raises(FleetBudgetError):
         reg.register(_spec("b", scheme="lq2w", kv_bits=2))
@@ -173,12 +177,17 @@ def test_mixed_kv_tenants_fit_where_uniform8_do_not(params):
     assert 2 * cost_mixed["total"] <= budget_mb * 2**20
     assert 2 * cost_uni["total"] > budget_mb * 2**20
 
-    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    # share_weights off: this test isolates the POOL pricing win — with
+    # dedup on, the identical weight plans would be priced once and both
+    # pairs would fit
+    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref",
+                        share_weights=False)
     reg.register(dataclasses.replace(uni8, tenant_id="u1"))
     with pytest.raises(FleetBudgetError):           # second uniform-8: no
         reg.register(dataclasses.replace(uni8, tenant_id="u2"))
 
-    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    reg = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref",
+                        share_weights=False)
     t1 = reg.register(dataclasses.replace(mixed, tenant_id="m1"))
     t2 = reg.register(dataclasses.replace(mixed, tenant_id="m2"))
     assert reg.total_bytes() == t1.total_bytes + t2.total_bytes
@@ -188,6 +197,81 @@ def test_mixed_kv_tenants_fit_where_uniform8_do_not(params):
     rid = sched.submit(_prompts()[0], max_new_tokens=3)
     outs = sched.drain(max_steps=200)
     assert len(outs[rid]) == 3
+
+
+# ---------------------------------------------------------------------------
+# cross-tenant weight sharing: identical packed leaves priced once
+# ---------------------------------------------------------------------------
+
+def test_identical_plan_tenants_share_packed_leaves(params):
+    """The dedup regression bar: two identical-plan tenants admit under a
+    budget that would reject private weight copies — the second tenant's
+    packed leaves come from the registry cache and are priced once."""
+    one = FleetRegistry(TINY, params, backend="ref").price(
+        _spec(plan=GOLD_PLAN, kv_bits=8))
+    # fits one full copy + one extra pool, NOT two full copies
+    budget_mb = (one["total"] + one["pool_bytes"]
+                 + 0.5 * one["weight_bytes"]) / 2**20
+
+    private = FleetRegistry(TINY, params, budget_mb=budget_mb,
+                            backend="ref", share_weights=False)
+    private.register(_spec("a", plan=GOLD_PLAN, kv_bits=8))
+    with pytest.raises(FleetBudgetError):
+        private.register(_spec("b", plan=GOLD_PLAN, kv_bits=8))
+
+    shared = FleetRegistry(TINY, params, budget_mb=budget_mb, backend="ref")
+    ta = shared.register(_spec("a", plan=GOLD_PLAN, kv_bits=8))
+    tb = shared.register(_spec("b", plan=GOLD_PLAN, kv_bits=8))
+    assert ta.shared_bytes == 0
+    assert tb.shared_bytes == one["weight_bytes"]   # every leaf re-used
+    assert tb.weight_bytes == 0                     # incremental cost: pool
+    assert shared.total_bytes() == \
+        one["total"] + one["pool_bytes"]
+    # the share is real, not just an accounting fiction: the engines hold
+    # the SAME packed arrays (same buffers, not equal copies)
+    a_leaves = jax.tree.leaves(ta.engine.params["decoder"])
+    b_leaves = jax.tree.leaves(tb.engine.params["decoder"])
+    assert all(x is y for x, y in zip(a_leaves, b_leaves))
+    # and both still serve, token-for-token alike (same plan, same seed
+    # stream is irrelevant under greedy)
+    pa = _prompts()[0]
+    ra = ta.scheduler.submit(pa, max_new_tokens=4)
+    rb = tb.scheduler.submit(pa, max_new_tokens=4)
+    outs_a = ta.scheduler.drain(max_steps=200)
+    outs_b = tb.scheduler.drain(max_steps=200)
+    assert outs_a[ra] == outs_b[rb]
+
+
+def test_partial_plan_overlap_shares_aligned_segments(params):
+    """Tenants whose plans agree on some layers share those segments only
+    — the discount equals the overlapping layers' wire bytes."""
+    from repro.plan import leaf_key_bytes
+    from repro.models.transformer import plan_leaf_keys
+    reg = FleetRegistry(TINY, params, backend="ref")
+    a = _spec("a", plan=GOLD_PLAN, kv_bits=8)              # 8w / 4w / 4w
+    b_plan = QuantPlan.from_assignment({"layer.0": "lq8w"}, default="lq2w")
+    b = _spec("b", plan=b_plan, kv_bits=8)                 # 8w / 2w / 2w
+    reg.register(a)
+    tb = reg.register(b)
+    keys_a = set(plan_leaf_keys(TINY, a.resolved_plan(TINY)))
+    keys_b = set(plan_leaf_keys(TINY, b.resolved_plan(TINY)))
+    overlap = keys_a & keys_b
+    assert overlap                                         # layer.0 aligns
+    assert tb.shared_bytes == sum(leaf_key_bytes(TINY, k) for k in overlap)
+    assert 0 < tb.shared_bytes < reg.price(b)["weight_bytes"]
+
+
+def test_price_without_sharing_is_pure(params):
+    """``price()`` stays a pure full-cost quote; only registration (and
+    ``with_sharing=True``) applies the dedup discount."""
+    reg = FleetRegistry(TINY, params, backend="ref")
+    spec = _spec(plan=GOLD_PLAN, kv_bits=8)
+    before = reg.price(spec)
+    reg.register(dataclasses.replace(spec, tenant_id="a"))
+    assert reg.price(spec) == before
+    discounted = reg.price(spec, with_sharing=True)
+    assert discounted["weight_bytes"] == 0
+    assert discounted["shared_bytes"] == before["weight_bytes"]
 
 
 # ---------------------------------------------------------------------------
@@ -346,6 +430,19 @@ def test_telemetry_counts_and_snapshot(params):
     assert g["tok_per_s"] > 0                  # deterministic fake clock
     assert snap["aggregate"]["tokens"] == 5
     json.loads(router.telemetry.to_json())     # JSON-able
+
+
+def test_telemetry_rejected_tokens_distinct_from_preemptions():
+    """Speculative rollbacks ride Completion.rejected_tokens into their
+    own counter — preemptions are not inflated by them."""
+    t = FleetTelemetry()
+    t.note_complete("a", 1, 7)
+    t.note_complete("a", 0, 5)
+    snap = t.snapshot()
+    assert snap["tenants"]["a"]["preemptions"] == 1
+    assert snap["tenants"]["a"]["rejected_tokens"] == 12
+    assert snap["aggregate"]["rejected_tokens"] == 12
+    assert snap["aggregate"]["preemptions"] == 1
 
 
 def test_telemetry_aggregate_uses_union_window():

@@ -312,6 +312,38 @@ def test_kv_bytes_per_token_matches_pool_pages():
         assert per_tok * page_size * n_pages == total
 
 
+def test_context_aware_kv_tokens_price_equals_pool_nbytes():
+    """The satellite bar: pricing the cache at the serve cell's real
+    capacity (n_pages * page_size tokens) makes the plan's kv bytes match
+    ``pool_nbytes`` EXACTLY — plan and pool budgets share one currency,
+    including heterogeneous per-layer maps."""
+    from repro.plan import plan_kv_cost
+    from repro.serve import pool_nbytes
+    page_size, n_pages = 4, 6
+    for kv_map in [(8, 8, 8, 8), (8, None, 2, 2), (2, 1, 4, 8),
+                   (None,) * 4]:
+        priced = plan_kv_cost(TINY, kv_map, kv_group=16,
+                              tokens=n_pages * page_size)["bytes"]
+        exact = pool_nbytes(TINY, n_pages=n_pages, page_size=page_size,
+                            kv_bits=kv_map, kv_group=16)
+        assert priced == exact
+
+
+def test_launch_plan_defaults_kv_tokens_to_cell_geometry(tmp_path):
+    """``launch.plan --n-pages/--page-size`` without --kv-tokens prices
+    the joint search at the cell capacity; the emitted plan records it."""
+    from repro.launch import plan as launch_plan
+    out = str(tmp_path / "plan.json")
+    launch_plan.main([
+        "--arch", "llama3.2-1b", "--schemes", "lq8w,lq4w",
+        "--budget-mb", "0.2", "--kv", "8,2", "--kv-group", "16",
+        "--n-pages", "6", "--page-size", "4",
+        "--batches", "1", "--batch-size", "2", "--seq-len", "16",
+        "--out", out])
+    plan = QuantPlan.load(out)
+    assert dict(plan.meta)["kv_tokens"] == 24      # 6 pages x 4 tokens
+
+
 def test_kv_costs_monotone_and_labels():
     from repro.plan import (kv_bits_of_label, kv_candidate_costs, kv_label,
                             plan_kv_cost)

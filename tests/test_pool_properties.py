@@ -84,7 +84,7 @@ def _run_ops(pool, ops):
         elif kind == 1:                     # free
             freed = pool.free(rid)
             assert freed == len(shadow.pop(rid, []))
-        else:                               # defrag
+        elif kind == 2:                     # defrag
             mapping = pool.defrag()
             assert set(mapping) == {p for t in shadow.values() for p in t}
             shadow = {rid: [mapping[p] for p in t]
@@ -93,6 +93,14 @@ def _run_ops(pool, ops):
             # preserving each request's page order
             owned = sorted(p for t in shadow.values() for p in t)
             assert owned == list(range(1, pool.n_allocated + 1))
+        else:                               # truncate (speculative rewind)
+            owned = shadow.get(rid, [])
+            keep = min(n, len(owned) * pool.page_size)
+            keep_pages = -(-keep // pool.page_size)
+            freed = pool.truncate(rid, keep)
+            assert freed == len(owned) - keep_pages
+            if owned:
+                shadow[rid] = owned[:keep_pages]
         for rid2, t in shadow.items():
             assert pool.pages_of(rid2) == t
         _check_invariants(pool)
@@ -101,9 +109,9 @@ def _run_ops(pool, ops):
 
 def test_example_sequence_all_maps():
     """Deterministic walk of every kv map (always runs, no hypothesis)."""
-    ops = [(0, 1, 2), (0, 2, 3), (1, 1, 0), (2, 0, 0), (0, 3, 4),
-           (0, 4, 9), (1, 2, 0), (2, 0, 0), (0, 5, 1), (1, 3, 0),
-           (2, 0, 0)]
+    ops = [(0, 1, 2), (0, 2, 3), (3, 2, 7), (1, 1, 0), (2, 0, 0),
+           (0, 3, 4), (3, 3, 9), (3, 3, 2), (0, 4, 9), (1, 2, 0),
+           (2, 0, 0), (0, 5, 1), (3, 5, 0), (1, 3, 0), (2, 0, 0)]
     for kv_map in KV_MAPS:
         pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
                            kv_bits=kv_map, kv_group=KV_GROUP)
@@ -117,9 +125,9 @@ if HAVE_HYPOTHESIS:
     @given(
         kv_map=st.sampled_from(KV_MAPS),
         ops=st.lists(
-            st.tuples(st.integers(0, 2),    # 0=alloc, 1=free, 2=defrag
+            st.tuples(st.integers(0, 3),    # alloc/free/defrag/truncate
                       st.integers(1, 5),    # rid
-                      st.integers(1, 4)),   # pages requested
+                      st.integers(0, 12)),  # pages requested / keep tokens
             min_size=1, max_size=24),
     )
     def test_random_alloc_free_defrag_never_aliases(kv_map, ops):
@@ -198,3 +206,105 @@ else:
         """Hypothesis-free fallback: fixed draws of the same property."""
         _defrag_data_check((8, None, 2), (2, 1, 2), 2)
         _defrag_data_check((2, 1, 8), (1, 2, 1), 1)
+
+
+def _truncate_data_check(kv_map, keep_tokens):
+    """Speculative-rewind property on mixed geometry: truncating one rid
+    (1) leaves every other rid's wire data byte-identical at every
+    layer's own format, (2) leaves the kept prefix rows intact, and
+    (3) resets the dropped rows to the exact zero wire state — the byte
+    sums of a rewound pool match a pool that never wrote them."""
+    import jax.numpy as jnp
+    pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                       kv_bits=kv_map, kv_group=KV_GROUP)
+    fresh = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                        kv_bits=kv_map, kv_group=KV_GROUP)
+    rids, n_pages_each = [1, 2], 3
+    for r in rids:
+        assert pool.alloc(r, n_pages_each)
+    total = n_pages_each * PAGE_SIZE
+    x = jax.random.normal(jax.random.key(7),
+                          (1, total, TINY.n_kv_heads, TINY.head_dim))
+    for s, seg in enumerate(pool.pages["super_segments"]):
+        bits = kv_map[s]
+        kw = {} if bits is None else dict(bits=bits, group_size=KV_GROUP)
+        leaf = jax.tree.map(lambda a: a[0], seg[0]["self"]["k"])
+        for r in rids:
+            ids = pool.pages_of(r)
+            page_idx = jnp.asarray([[ids[t // PAGE_SIZE]
+                                     for t in range(total)]])
+            row = jnp.asarray([[t % PAGE_SIZE for t in range(total)]])
+            leaf = kvwire.scatter_tokens(leaf, x, page_idx, row, **kw)
+        seg[0]["self"]["k"] = jax.tree.map(lambda a: a[None], leaf)
+
+    def rows_of(r):
+        tbl = jnp.asarray([pool.pages_of(r)], jnp.int32)
+        return [jax.tree.map(
+            lambda a: np.asarray(kvwire.gather_pages(a[0], tbl)),
+            seg[0]["self"]["k"])
+            for seg in pool.pages["super_segments"]]
+
+    before = {r: rows_of(r) for r in rids}
+    old_pages_1 = pool.pages_of(1)
+    freed = pool.truncate(1, keep_tokens)
+    assert freed == n_pages_each - -(-keep_tokens // PAGE_SIZE)
+    _check_invariants(pool)
+    # (1) the untouched rid reads back byte-identical wire data
+    for want, got in zip(before[2], rows_of(2)):
+        jax.tree.map(np.testing.assert_array_equal, want, got)
+    kept_pages = pool.pages_of(1)
+    assert kept_pages == old_pages_1[:len(kept_pages)]   # no realloc
+    dropped = [p for p in old_pages_1 if p not in kept_pages]
+    for s, seg in enumerate(pool.pages["super_segments"]):
+        leaf = jax.tree.map(lambda a: np.asarray(a[0]),
+                            seg[0]["self"]["k"])
+        fresh_leaf = jax.tree.map(
+            lambda a: np.asarray(a[0]),
+            fresh.pages["super_segments"][s][0]["self"]["k"])
+        view = before[1][s]          # gathered (1, total, ...) pre-rewind
+        for t in range(len(kept_pages) * PAGE_SIZE):
+            got = jax.tree.map(
+                lambda a: a[kept_pages[t // PAGE_SIZE], t % PAGE_SIZE],
+                leaf)
+            if t < keep_tokens:      # (2) kept prefix intact
+                jax.tree.map(
+                    lambda a, w: np.testing.assert_array_equal(a, w[0, t]),
+                    got, view)
+            else:                    # (3) rewound rows: zero wire state
+                jax.tree.map(
+                    lambda a, f: np.testing.assert_array_equal(
+                        a, f[0, t % PAGE_SIZE]),
+                    got, fresh_leaf)
+        # (3) released pages read as never-written pool bytes
+        for p in dropped:
+            jax.tree.map(
+                lambda a, b: np.testing.assert_array_equal(a[p], b[p]),
+                leaf, fresh_leaf)
+
+
+@pytest.mark.parametrize("keep_tokens", [0, 3, 4, 7, 12])
+def test_truncate_preserves_other_slots_and_zeroes_suffix(keep_tokens):
+    _truncate_data_check((8, None, 2), keep_tokens)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(kv_map=st.sampled_from([(8, None, 2), (2, 2, 8), (2, 1, 8)]),
+           keep_tokens=st.integers(0, 12))
+    def test_truncate_property_mixed_geometry(kv_map, keep_tokens):
+        _truncate_data_check(kv_map, keep_tokens)
+
+
+def test_random_write_rewind_defrag_sequences():
+    """Interleaved write/rewind/defrag on mixed geometry: rewinds never
+    alias pages (invariants hold at every step) and the allocator's view
+    stays consistent with the shadow bookkeeping."""
+    rng = np.random.default_rng(11)
+    for kv_map in KV_MAPS[:3]:
+        pool = PagedKVPool(TINY, n_pages=N_PAGES, page_size=PAGE_SIZE,
+                           kv_bits=kv_map, kv_group=KV_GROUP)
+        ops = [(int(rng.integers(0, 4)), int(rng.integers(1, 5)),
+                int(rng.integers(0, 12))) for _ in range(40)]
+        _run_ops(pool, ops)
+        assert pool.nbytes() == _expected_nbytes(
+            TINY, kv_map, N_PAGES, PAGE_SIZE, KV_GROUP)
