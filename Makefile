@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke spec-smoke
+	fleet-smoke spec-smoke obs-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -44,6 +44,15 @@ spec-smoke:  ## search a 2-bit draft plan -> speculative serve parity bench
 	    --max-slots 2 --page-size 8 --n-pages 32 \
 	    --prompt-len 12 --steps 6
 	$(PY) -m benchmarks.run spec
+
+obs-smoke:   ## serve with tracing + metrics on, then validate the artifacts
+	$(PY) -m repro.launch.serve --arch llama3.2-1b --continuous 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6 \
+	    --trace-out /tmp/obs_smoke_trace.json \
+	    --metrics-out /tmp/obs_smoke_metrics.json
+	$(PY) -m repro.obs.check /tmp/obs_smoke_trace.json \
+	    /tmp/obs_smoke_metrics.json
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

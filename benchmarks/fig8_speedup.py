@@ -10,21 +10,15 @@ b):
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.obs import time_fn
 
 
 def _time(fn, *args, reps=5):
-    fn(*args).block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn(*args)
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps
+    return time_fn(fn, *args, reps=reps)
 
 
 def run(verbose: bool = True, n: int = 1024) -> dict:

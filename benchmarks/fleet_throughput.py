@@ -22,7 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import json
-import time
 
 import jax
 import numpy as np
@@ -31,6 +30,7 @@ from repro.fleet import (FleetBudgetError, FleetRegistry, FleetRouter,
                          TenantSpec)
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs import Stopwatch
 from repro.plan import QuantPlan
 from repro.serve import PagedEngine, Scheduler
 
@@ -123,14 +123,14 @@ def run(verbose: bool = True) -> dict:
     # 3. throughput vs arrival rate (jits are warm from the parity pass).
     for arrival in ARRIVALS:
         router.reset_telemetry()                 # fresh stats per cell
-        t0 = time.perf_counter()
+        sw = Stopwatch()
         for i in range(N_REQ):
             for tid in prompts:
                 router.submit(tid, prompts[tid][i], max_new_tokens=MAX_NEW)
             for _ in range(arrival):
                 router.step()
         router.drain(max_steps=10_000)
-        dt = time.perf_counter() - t0
+        dt = sw.elapsed()
         snap = router.telemetry.snapshot()
         rows[f"arr{arrival}_tok_per_s"] = snap["aggregate"]["tokens"] / dt
         for tid, s in snap["tenants"].items():

@@ -7,21 +7,15 @@ bytes-moved model that determines TPU performance.
 """
 from __future__ import annotations
 
-import time
-
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops
+from repro.obs import time_fn
 
 
 def _time(fn, reps=3):
-    fn().block_until_ready()
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        out = fn()
-    out.block_until_ready()
-    return (time.perf_counter() - t0) / reps
+    return time_fn(fn, reps=reps)
 
 
 def run(verbose: bool = True) -> dict:

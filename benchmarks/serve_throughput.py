@@ -1,7 +1,9 @@
-"""Continuous-batching serve microbenchmark: throughput + pool occupancy.
+"""Continuous-batching serve microbenchmark: throughput + latency.
 
 Sweeps request arrival rate (one new request every `arrival` decode steps)
-across 8/4/2-bit quantized KV pools, reporting decode tokens/sec, mean and
+across 8/4/2-bit quantized KV pools, reporting decode tokens/sec, TTFT
+and inter-token-latency p50/p95 (from a per-cell
+:class:`repro.obs.Observability` attached after jit warmup), mean and
 peak pool occupancy, and pool bytes — the serving-side counterpart of the
 paper's memory-pressure analysis.  Wall times on the CPU host are
 indicative only (the kernels target TPU); occupancy and bytes are exact.
@@ -11,13 +13,13 @@ Run:  PYTHONPATH=src python -m benchmarks.serve_throughput
 from __future__ import annotations
 
 import json
-import time
 
 import jax
 import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs import Observability, Stopwatch
 from repro.serve import EngineConfig, PagedConfig, RequestParams, Server
 
 CFG = ModelConfig(name="serve-bench", family="dense", n_layers=4,
@@ -37,13 +39,16 @@ def _run_cell(params, kv_bits: int, arrival: int) -> dict:
     prompts = [list(map(int, rng.integers(0, CFG.vocab_size, size=int(n))))
                for n in rng.integers(6, 20, size=N_REQ)]
 
-    # warm the two jits (prefill bucket + decode step) outside the clock
+    # warm the two jits (prefill bucket + decode step) outside the clock,
+    # then attach fresh observability so compile time stays out of the
+    # latency histograms
     warm = server.submit(prompts[0], RequestParams(max_new_tokens=2))
     server.drain()
     assert len(server.output(warm)) == 2
+    obs = Observability()
+    server.set_obs(obs)
 
-    occ = []
-    t0 = time.perf_counter()
+    occ, sw = [], Stopwatch()
     for p in prompts:
         server.submit(p, RequestParams(max_new_tokens=MAX_NEW))
         for _ in range(arrival):
@@ -52,11 +57,17 @@ def _run_cell(params, kv_bits: int, arrival: int) -> dict:
     while server.has_work:
         server.step()
         occ.append(server.pool.occupancy())
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
 
+    ttft = obs.metrics.find("serve_ttft_ms", tenant="default")
+    itl = obs.metrics.find("serve_itl_ms", tenant="default")
     toks = N_REQ * MAX_NEW
     return {"tok_per_s": toks / dt,
             "steps": len(occ),
+            "ttft_p50_ms": ttft.percentile(50),
+            "ttft_p95_ms": ttft.percentile(95),
+            "itl_p50_ms": itl.percentile(50),
+            "itl_p95_ms": itl.percentile(95),
             "occupancy_mean": float(np.mean(occ)),
             "occupancy_peak": float(np.max(occ)),
             "pool_bytes": server.pool.nbytes(),
@@ -75,12 +86,18 @@ def run(verbose: bool = True) -> dict:
     if verbose:
         print("\n== continuous-batching serve throughput "
               f"({N_REQ} reqs x {MAX_NEW} toks, CPU host) ==")
-        print(f"{'kv_bits':>8} {'arrival':>8} {'tok/s':>8} {'occ-mean':>9} "
-              f"{'occ-peak':>9} {'pool-bytes':>11}")
+        print(f"{'kv_bits':>8} {'arrival':>8} {'tok/s':>8} "
+              f"{'ttft-p50':>9} {'ttft-p95':>9} {'itl-p50':>8} "
+              f"{'itl-p95':>8} {'occ-mean':>9} {'occ-peak':>9} "
+              f"{'pool-bytes':>11}")
         for bits in KV_BITS:
             for arrival in ARRIVALS:
                 p = f"kv{bits}_arr{arrival}_"
                 print(f"{bits:>8} {arrival:>8} {rows[p + 'tok_per_s']:>8.1f} "
+                      f"{rows[p + 'ttft_p50_ms']:>9.2f} "
+                      f"{rows[p + 'ttft_p95_ms']:>9.2f} "
+                      f"{rows[p + 'itl_p50_ms']:>8.2f} "
+                      f"{rows[p + 'itl_p95_ms']:>8.2f} "
                       f"{rows[p + 'occupancy_mean']:>9.2f} "
                       f"{rows[p + 'occupancy_peak']:>9.2f} "
                       f"{rows[p + 'pool_bytes']:>11,}")

@@ -12,13 +12,12 @@ continuous-batching layer (serve/server.py); per scheme we report
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
 """
-import time
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
+from repro.obs import Stopwatch
 from repro.models.config import ModelConfig
 from repro.serve import (Engine, EngineConfig, PagedConfig, RequestParams,
                          Server)
@@ -67,13 +66,13 @@ for name, scheme, kv_bits in schemes:
     server = Server(cfg, params, ecfg, pcfg)
     server.submit(prompts[0], RequestParams(max_new_tokens=2))
     server.drain()                          # warm both jits off the clock
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     rids = []
     for p in prompts:
         rids.append(server.submit(p, RequestParams(max_new_tokens=MAX_NEW)))
         server.step()                       # arrivals interleave with decode
     outs = server.drain()
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
 
     got = [outs[r] for r in rids]
     exact = all(a == b for a, b in zip(got, solo_outs))

@@ -34,10 +34,16 @@ class FleetRouter:
     """Routes plan-tagged requests across the registry's engines."""
 
     def __init__(self, registry: FleetRegistry, *,
-                 telemetry: FleetTelemetry | None = None,
+                 telemetry: FleetTelemetry | None = None, obs=None,
                  on_token=None, on_complete=None):
+        from repro.obs import NOOP
         self.registry = registry
-        self.telemetry = telemetry or FleetTelemetry()
+        # one Observability spans every tenant: request lanes carry the
+        # tenant tag, engine-lane spans interleave in submission order
+        # (the router steps one tenant at a time), and FleetTelemetry
+        # reads per-tenant TTFT/ITL percentiles from the shared registry
+        self.obs = obs or NOOP
+        self.telemetry = telemetry or FleetTelemetry(obs=self.obs)
         self.on_token, self.on_complete = on_token, on_complete
         self._credit = {t.tenant_id: 0 for t in registry}
         for tenant in registry:
@@ -46,6 +52,11 @@ class FleetRouter:
     def _wire(self, tenant):
         tid = tenant.tenant_id
         self.telemetry.register(tid)   # uniform snapshot schema when idle
+        tenant.scheduler.obs = self.obs
+        tenant.engine.obs = self.obs
+        tenant.pool.obs = self.obs
+        if self.obs.enabled:
+            self.obs.tracer.name_thread(0, "engine")
 
         def tok(rid, token, _tid=tid):
             self.telemetry.note_token(_tid)
@@ -135,7 +146,7 @@ class FleetRouter:
                         ) -> FleetTelemetry:
         """Swap in fresh telemetry (e.g. per benchmark cell) and re-wire
         every tenant's callbacks onto it."""
-        self.telemetry = telemetry or FleetTelemetry()
+        self.telemetry = telemetry or FleetTelemetry(obs=self.obs)
         for tenant in self.registry:
             self._wire(tenant)
         return self.telemetry
@@ -164,12 +175,14 @@ class FleetRouter:
 def build_fleet(manifest: FleetManifest | str, model_cfg, params, *,
                 budget_mb: float | None = None, backend: str = "auto",
                 seed: int = 0, telemetry: FleetTelemetry | None = None,
-                on_token=None, on_complete=None) -> FleetRouter:
+                obs=None, on_token=None, on_complete=None) -> FleetRouter:
     """Build registry + router from a manifest (path or parsed).
 
     ``budget_mb`` overrides the manifest's budget when given.  Raises
     :class:`~repro.fleet.registry.FleetBudgetError` if the tenants do
-    not fit the shared host budget.
+    not fit the shared host budget.  ``obs`` threads one
+    :class:`repro.obs.Observability` through every tenant's serving
+    stack.
     """
     if isinstance(manifest, str):
         manifest = load_manifest(manifest)
@@ -178,5 +191,5 @@ def build_fleet(manifest: FleetManifest | str, model_cfg, params, *,
                              backend=backend, seed=seed)
     for spec in manifest.tenants:
         registry.register(spec)
-    return FleetRouter(registry, telemetry=telemetry, on_token=on_token,
-                       on_complete=on_complete)
+    return FleetRouter(registry, telemetry=telemetry, obs=obs,
+                       on_token=on_token, on_complete=on_complete)

@@ -1,9 +1,18 @@
-"""Per-tenant serving telemetry: tok/s, occupancy, preemptions, rejects.
+"""Per-tenant serving telemetry: tok/s, latency percentiles, occupancy.
 
 The router feeds events in (`note_*`); consumers pull JSON-able
 snapshots out.  Rates are computed over the wall-clock window between
 the first and the most recent observed decode step, so warmup before
-traffic starts does not dilute tok/s.
+traffic starts does not dilute tok/s; a degenerate window (single decode
+step, or a frozen injected clock) falls back to a minimum window
+(``min_window_s``) instead of reporting 0 tok/s for a tenant that
+demonstrably emitted tokens.
+
+When constructed with a :class:`repro.obs.Observability` whose metrics
+the serving schedulers also record into, ``snapshot()`` additionally
+reports per-tenant TTFT and inter-token-latency p50/p95 pulled from the
+``serve_ttft_ms{tenant=...}`` / ``serve_itl_ms{tenant=...}`` histograms
+— the latency targets the ROADMAP's SLO scheduling direction routes on.
 """
 from __future__ import annotations
 
@@ -29,21 +38,25 @@ class TenantStats:
     first_step_t: float | None = None
     last_step_t: float | None = None
 
-    def tok_per_s(self) -> float:
+    def tok_per_s(self, min_window_s: float = 0.0) -> float:
+        """Tokens over the observed step window.  A tenant whose first
+        and last step coincide (one decode step, or a frozen injected
+        clock) still emitted its tokens — count them over the
+        ``min_window_s`` floor rather than reporting a rate of zero."""
         if self.first_step_t is None or self.last_step_t is None:
             return 0.0
-        dt = self.last_step_t - self.first_step_t
+        dt = max(self.last_step_t - self.first_step_t, min_window_s)
         return self.tokens / dt if dt > 0 else 0.0
 
     def occupancy_mean(self) -> float:
         return self.occupancy_sum / self.steps if self.steps else 0.0
 
-    def snapshot(self) -> dict:
+    def snapshot(self, min_window_s: float = 0.0) -> dict:
         return {"submitted": self.submitted, "rejected": self.rejected,
                 "completed": self.completed, "tokens": self.tokens,
                 "steps": self.steps, "preemptions": self.preemptions,
                 "rejected_tokens": self.rejected_tokens,
-                "tok_per_s": round(self.tok_per_s(), 3),
+                "tok_per_s": round(self.tok_per_s(min_window_s), 3),
                 "occupancy_mean": round(self.occupancy_mean(), 4),
                 "occupancy_peak": round(self.occupancy_peak, 4)}
 
@@ -51,11 +64,17 @@ class TenantStats:
 class FleetTelemetry:
     """Aggregates :class:`TenantStats` across the fleet.
 
-    ``clock`` is injectable for deterministic tests.
+    ``clock`` is injectable for deterministic tests.  ``obs`` (a
+    :class:`repro.obs.Observability` shared with the schedulers) lets
+    snapshots report per-tenant TTFT/ITL percentiles.  ``min_window_s``
+    floors the tok/s rate window (degenerate single-step windows).
     """
 
-    def __init__(self, clock=time.perf_counter):
+    def __init__(self, clock=time.perf_counter, *, obs=None,
+                 min_window_s: float = 1e-6):
         self._clock = clock
+        self.obs = obs
+        self.min_window_s = min_window_s
         self.per_tenant: dict[str, TenantStats] = {}
 
     def _stats(self, tenant_id: str) -> TenantStats:
@@ -93,9 +112,26 @@ class FleetTelemetry:
         s.occupancy_sum += occupancy
         s.occupancy_peak = max(s.occupancy_peak, occupancy)
 
+    def _latency_percentiles(self, tenant_id: str) -> dict:
+        """Per-tenant TTFT/ITL p50/p95 from the shared obs histograms;
+        empty when no obs is wired or nothing was recorded."""
+        if self.obs is None or not getattr(self.obs, "enabled", False):
+            return {}
+        out = {}
+        for key, name in (("ttft_ms", "serve_ttft_ms"),
+                          ("itl_ms", "serve_itl_ms")):
+            h = self.obs.metrics.find(name, tenant=tenant_id)
+            if h is not None and h.count:
+                out[key] = {"p50": round(h.percentile(50), 3),
+                            "p95": round(h.percentile(95), 3)}
+        return out
+
     # ----------------------------------------------------------- snapshots
     def snapshot(self) -> dict:
-        per = {tid: s.snapshot() for tid, s in self.per_tenant.items()}
+        per = {}
+        for tid, s in self.per_tenant.items():
+            per[tid] = s.snapshot(self.min_window_s)
+            per[tid].update(self._latency_percentiles(tid))
         # aggregate tok/s is host tokens over the union step window —
         # NOT the sum of per-tenant rates, whose windows overlap
         firsts = [s.first_step_t for s in self.per_tenant.values()
@@ -104,6 +140,8 @@ class FleetTelemetry:
                  if s.last_step_t is not None]
         tokens = sum(s["tokens"] for s in per.values())
         window = (max(lasts) - min(firsts)) if firsts else 0.0
+        if firsts and tokens:
+            window = max(window, self.min_window_s)
         return {"tenants": per,
                 "aggregate": {
                     "submitted": sum(s["submitted"] for s in per.values()),

@@ -14,19 +14,53 @@ manifest tenant gets its own per-plan engine + pool behind one router and
 one ``--budget-mb`` host budget; a staggered workload is routed across
 tenants and per-tenant telemetry (tok/s, occupancy, rejections) is
 reported.  The manifest carries the arch, so ``--arch`` is optional.
+
+``--trace-out trace.json`` / ``--metrics-out metrics.json`` attach a
+:class:`repro.obs.Observability` *after* jit warmup and write a
+Chrome/Perfetto trace (open at ``ui.perfetto.dev``) and a metrics
+snapshot (TTFT/ITL/queue-wait p50/p95, counters).  A ``.prom`` metrics
+path emits Prometheus text format instead of JSON.
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
 import jax.numpy as jnp
 
 from repro import configs
 from repro.models import transformer
+from repro.obs import Observability, Stopwatch
 from repro.serve import (Engine, EngineConfig, PagedConfig, RequestParams,
                          Server)
+
+
+def _make_obs(args) -> Observability | None:
+    """One Observability per run when either artifact was requested."""
+    if args.trace_out or args.metrics_out:
+        return Observability()
+    return None
+
+
+def _save_obs(obs, args):
+    """Write the requested trace/metrics artifacts + a latency summary."""
+    if obs is None:
+        return
+    for name in ("serve_ttft_ms", "serve_itl_ms"):
+        parts = []
+        for key, h in sorted(obs.metrics.histograms.items()):
+            if h.count and (key == name or key.startswith(name + "{")):
+                parts.append(f"{key} p50={h.percentile(50):.1f} "
+                             f"p95={h.percentile(95):.1f} (n={h.count})")
+        if parts:
+            print("latency:", "; ".join(parts))
+    if args.trace_out:
+        obs.save_trace(args.trace_out)
+        print(f"wrote {args.trace_out} ({len(obs.tracer.events)} events; "
+              f"open at ui.perfetto.dev)")
+    if args.metrics_out:
+        obs.save_metrics(args.metrics_out)
+        print(f"wrote {args.metrics_out}")
 
 
 def _continuous(cfg, params, ecfg, args):
@@ -53,7 +87,10 @@ def _continuous(cfg, params, ecfg, args):
                               (args.prompt_len,), 0, cfg.vocab_size)
     server.submit(warm.tolist(), RequestParams(max_new_tokens=2))
     server.drain()                          # warm both jits off the clock
-    occ, t0 = [], time.perf_counter()
+    obs = _make_obs(args)
+    if obs is not None:
+        server.set_obs(obs)                 # compile time stays off the books
+    occ, sw = [], Stopwatch()
     rids = []
     for i in range(args.continuous):
         prompt = jax.random.randint(jax.random.fold_in(rng, i),
@@ -66,7 +103,7 @@ def _continuous(cfg, params, ecfg, args):
     while server.has_work:
         server.step()
         occ.append(server.pool.occupancy())
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
     toks = sum(len(server.output(r)) for r in rids)
     s = server.stats()
     print(f"continuous: {len(rids)} requests, {toks} tokens in {dt:.2f}s "
@@ -82,6 +119,7 @@ def _continuous(cfg, params, ecfg, args):
               f"verifier steps/token {sp['verify_steps_per_token']:.3f} "
               f"(< 1.0 == decode speedup), rejected "
               f"{server.scheduler.stats()['rejected_tokens']} drafts")
+    _save_obs(obs, args)
     print("sample:", server.output(rids[0])[:16])
 
 
@@ -105,9 +143,12 @@ def _fleet(args):
                                   (args.prompt_len,), 0, cfg.vocab_size)
         router.submit(tid, warm.tolist(), max_new_tokens=2)
     router.drain(max_steps=10_000)
-    router.reset_telemetry()                   # drop warmup counters
+    obs = _make_obs(args)
+    if obs is not None:                        # attach after warmup so jit
+        router.obs = obs                       # compiles stay off the books
+    router.reset_telemetry()                   # drop warmup counters; re-wire
 
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     for i in range(args.fleet_requests):
         for j, tid in enumerate(tenants):
             prompt = jax.random.randint(jax.random.fold_in(rng, i * 64 + j),
@@ -121,7 +162,7 @@ def _fleet(args):
             for _ in range(args.arrival_every):  # staggered arrivals
                 router.step()
     router.drain(max_steps=100_000)
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
 
     stats = router.stats()
     toks = stats["aggregate"]["tokens"]
@@ -132,6 +173,7 @@ def _fleet(args):
         with open(args.stats_out, "w") as f:
             json.dump(stats, f, indent=1)
         print(f"wrote {args.stats_out}")
+    _save_obs(obs, args)
 
 
 def main():
@@ -173,7 +215,19 @@ def main():
                     help="requests submitted per tenant in --fleet mode")
     ap.add_argument("--stats-out", default=None,
                     help="write the fleet stats snapshot to this JSON file")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="write a Chrome/Perfetto trace of the run "
+                         "(--continuous / --fleet); view at ui.perfetto.dev")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.json",
+                    help="write the metrics snapshot (TTFT/ITL/queue-wait "
+                         "histograms, counters); a .prom suffix selects "
+                         "Prometheus text format")
     args = ap.parse_args()
+
+    if (args.trace_out or args.metrics_out) and not (args.continuous
+                                                     or args.fleet):
+        ap.error("--trace-out/--metrics-out instrument the serve layer; "
+                 "use them with --continuous or --fleet")
 
     if args.spec_plan is not None and (args.fleet is not None
                                        or not args.continuous):
@@ -217,10 +271,10 @@ def main():
 
     out, _ = engine.generate(batch, steps=args.steps)          # warm up
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    sw = Stopwatch()
     out, _ = engine.generate(batch, steps=args.steps)
     jax.block_until_ready(out)
-    dt = time.perf_counter() - t0
+    dt = sw.elapsed()
     toks = args.batch * (args.steps + 1)
     print(f"arch={args.arch} scheme={args.scheme} a_bits={args.a_bits} "
           f"kv_bits={args.kv_bits}")

@@ -1,0 +1,25 @@
+"""Request-lifecycle tracing + latency metrics for the serving stack.
+
+    obs = Observability()                     # or the global NOOP default
+    server = Server(cfg, params, ecfg, pcfg, obs=obs)
+    ...serve...
+    obs.save_trace("trace.json")              # chrome://tracing / Perfetto
+    obs.save_metrics("metrics.json")          # p50/p95/p99 snapshots
+
+See README.md in this directory for the span model, metric names, and
+export formats; ``repro.launch.serve --trace-out/--metrics-out`` is the
+CLI entry point and ``python -m repro.obs.check`` validates artifacts.
+"""
+from .metrics import (DEFAULT_CLOCK, DEFAULT_MS_BUCKETS, Counter, Gauge,
+                      Histogram, MetricsRegistry, NoopMetrics, NOOP_METRICS,
+                      Stopwatch, time_fn)
+from .obs import NOOP, Observability
+from .trace import NOOP_TRACER, NULL_CONTEXT, NoopTracer, Tracer
+
+__all__ = [
+    "DEFAULT_CLOCK", "DEFAULT_MS_BUCKETS", "Counter", "Gauge", "Histogram",
+    "MetricsRegistry", "NoopMetrics", "NOOP_METRICS", "Stopwatch",
+    "time_fn",
+    "NOOP", "Observability",
+    "NOOP_TRACER", "NULL_CONTEXT", "NoopTracer", "Tracer",
+]

@@ -1,0 +1,104 @@
+"""Validate ``--trace-out`` / ``--metrics-out`` artifacts.
+
+    python -m repro.obs.check trace.json metrics.json [--spec]
+
+Asserts the trace is Chrome-trace-valid (``traceEvents`` list; every
+event carries ``name``/``ph``/``ts``/``pid``/``tid``; complete events
+carry a non-negative ``dur``; per-lane spans nest properly) and contains
+the serving lifecycle spans, and that the metrics snapshot carries the
+standard serving histograms with non-zero counts.  ``--spec`` also
+requires the speculative ``draft``/``verify`` spans.  Exit code 0 on
+success; raises with a diagnostic otherwise.  This is the ``make
+obs-smoke`` gate, and a quick sanity check for any saved run.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED_SPANS = ("prefill", "decode", "queued", "request")
+SPEC_SPANS = ("draft", "verify")
+REQUIRED_HISTOGRAMS = ("serve_ttft_ms", "serve_itl_ms",
+                       "serve_queue_wait_ms", "serve_prefill_ms",
+                       "serve_decode_step_ms")
+
+
+def check_trace(trace: dict, *, spec: bool = False) -> dict:
+    """Validate a Chrome trace object; returns {span name: count}."""
+    events = trace.get("traceEvents")
+    assert isinstance(events, list) and events, "traceEvents missing/empty"
+    names: dict[str, int] = {}
+    lanes: dict[int, list] = {}
+    for ev in events:
+        for field in ("name", "ph", "pid", "tid"):
+            assert field in ev, f"event missing {field!r}: {ev}"
+        if ev["ph"] == "M":
+            continue
+        assert "ts" in ev, f"event missing ts: {ev}"
+        if ev["ph"] == "X":
+            assert "dur" in ev and ev["dur"] >= 0, f"bad dur: {ev}"
+            lanes.setdefault(ev["tid"], []).append(ev)
+        names[ev["name"]] = names.get(ev["name"], 0) + 1
+    for tid, evs in lanes.items():
+        # spans on one lane must nest: sorted by ts, each span either
+        # starts after the previous open span ends or sits inside it
+        open_spans: list = []
+        for ev in sorted(evs, key=lambda e: (e["ts"], -e["dur"])):
+            while open_spans and \
+                    ev["ts"] >= open_spans[-1]["ts"] + open_spans[-1]["dur"]:
+                open_spans.pop()
+            if open_spans:
+                parent = open_spans[-1]
+                assert (ev["ts"] + ev["dur"]
+                        <= parent["ts"] + parent["dur"] + 1e-6), \
+                    f"span {ev['name']!r} overlaps {parent['name']!r} " \
+                    f"without nesting (tid {tid})"
+            open_spans.append(ev)
+    want = REQUIRED_SPANS + (SPEC_SPANS if spec else ())
+    missing = [n for n in want if not names.get(n)]
+    assert not missing, f"trace lacks spans {missing}; has {sorted(names)}"
+    return names
+
+
+def check_metrics(snap: dict, *, spec: bool = False) -> list[str]:
+    """Validate a metrics snapshot; returns the histogram keys found."""
+    hists = snap.get("histograms")
+    assert isinstance(hists, dict) and hists, "histograms missing/empty"
+    found = []
+    want = REQUIRED_HISTOGRAMS + (("serve_draft_ms", "serve_verify_ms")
+                                  if spec else ())
+    for name in want:
+        keys = [k for k in hists if k == name or k.startswith(name + "{")]
+        assert keys, f"metrics lack histogram {name!r}; " \
+                     f"has {sorted(hists)}"
+        for k in keys:
+            assert hists[k].get("count", 0) > 0, f"{k} recorded nothing"
+            assert "p50" in hists[k] and "p95" in hists[k], \
+                f"{k} lacks percentiles"
+        found.extend(keys)
+    return found
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    spec = "--spec" in argv
+    argv = [a for a in argv if a != "--spec"]
+    if len(argv) != 2:
+        print("usage: python -m repro.obs.check trace.json metrics.json "
+              "[--spec]", file=sys.stderr)
+        return 2
+    trace_path, metrics_path = argv
+    with open(trace_path) as f:
+        trace = json.load(f)
+    with open(metrics_path) as f:
+        snap = json.load(f)
+    names = check_trace(trace, spec=spec)
+    hists = check_metrics(snap, spec=spec)
+    print(f"{trace_path}: {sum(names.values())} events, spans "
+          f"{ {n: names[n] for n in sorted(names)} }")
+    print(f"{metrics_path}: {len(hists)} serving histograms ok")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

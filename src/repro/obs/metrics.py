@@ -1,0 +1,328 @@
+"""Counters, gauges, fixed-bucket histograms, and THE wall-clock helpers.
+
+Every wall-clock measurement in the repo goes through this module —
+:class:`Stopwatch` for elapsed-time blocks, :func:`time_fn` for
+per-call microbenchmarks (``jax.block_until_ready``-bounded) — so
+"how we time things" is defined in exactly one place.
+
+:class:`MetricsRegistry` keys metrics by name + label set (Prometheus
+style, e.g. ``serve_ttft_ms{tenant="gold"}``) and snapshots to JSON or
+Prometheus text exposition format.  Histograms are fixed-bucket:
+``record`` is O(log buckets) and percentiles (p50/p95/p99) are read by
+cumulative-count walk with linear interpolation inside the straddling
+bucket, clamped to the observed [min, max] (the overflow bucket reports
+the observed max).
+"""
+from __future__ import annotations
+
+import bisect
+import json
+import math
+import time
+
+DEFAULT_CLOCK = time.perf_counter
+
+# 1-2-5 series, 1 µs .. 50 s, in milliseconds: wide enough for TTFT on a
+# cold CPU host and fine enough for sub-ms compiled decode steps.
+DEFAULT_MS_BUCKETS = tuple(c * 10.0 ** e
+                           for e in range(-3, 5) for c in (1, 2, 5))
+
+
+class Stopwatch:
+    """The shared elapsed-wall-clock primitive.
+
+        sw = Stopwatch()
+        ...work...
+        dt = sw.elapsed()        # seconds; sw.elapsed_ms() for ms
+
+    ``clock`` is injectable (seconds, monotonic) for deterministic tests.
+    """
+
+    def __init__(self, clock=DEFAULT_CLOCK):
+        self._clock = clock
+        self._t0 = clock()
+
+    def reset(self) -> "Stopwatch":
+        self._t0 = self._clock()
+        return self
+
+    @property
+    def start(self) -> float:
+        """The raw clock reading at (re)start."""
+        return self._t0
+
+    def elapsed(self) -> float:
+        return self._clock() - self._t0
+
+    def elapsed_ms(self) -> float:
+        return self.elapsed() * 1e3
+
+
+def time_fn(fn, *args, reps: int = 1, warmup: int = 1,
+            clock=DEFAULT_CLOCK) -> float:
+    """Seconds per call of ``fn(*args)``, device-synchronized.
+
+    Runs ``warmup`` untimed calls (compile/jit warm), then ``reps`` timed
+    calls bounded by ``jax.block_until_ready`` on the last result — the
+    one microbenchmark loop every ``benchmarks/`` table shares.
+    """
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    sw = Stopwatch(clock)
+    out = None
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return sw.elapsed() / max(reps, 1)
+
+
+# ---------------------------------------------------------------------------
+# metric primitives
+# ---------------------------------------------------------------------------
+
+class Counter:
+    """Monotonic event count."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0
+
+    def inc(self, n: int = 1):
+        self.value += n
+
+
+class Gauge:
+    """Last-write-wins instantaneous value."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, v: float):
+        self.value = float(v)
+
+
+class Histogram:
+    """Fixed-bucket histogram with interpolated percentiles.
+
+    ``buckets`` are ascending upper bounds; values above the last bound
+    land in an implicit overflow bucket.  ``percentile(p)`` finds the
+    bucket holding rank ``p/100 * count`` in the cumulative counts and
+    interpolates linearly between the bucket's bounds (lower bound 0 for
+    the first bucket), clamped to the observed [min, max]; the overflow
+    bucket reports the observed max.
+    """
+    __slots__ = ("buckets", "counts", "count", "sum", "min", "max")
+
+    def __init__(self, buckets=DEFAULT_MS_BUCKETS):
+        self.buckets = tuple(sorted(float(b) for b in buckets))
+        if not self.buckets:
+            raise ValueError("histogram needs at least one bucket bound")
+        self.counts = [0] * (len(self.buckets) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+
+    def record(self, v: float):
+        v = float(v)
+        self.counts[bisect.bisect_left(self.buckets, v)] += 1
+        self.count += 1
+        self.sum += v
+        self.min = min(self.min, v)
+        self.max = max(self.max, v)
+
+    def percentile(self, p: float) -> float:
+        if not self.count:
+            return 0.0
+        rank = (p / 100.0) * self.count
+        if rank <= 0:
+            return self.min
+        cum = 0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            prev, cum = cum, cum + c
+            if cum >= rank:
+                if i == len(self.buckets):          # overflow bucket
+                    return self.max
+                lo = self.buckets[i - 1] if i else 0.0
+                hi = self.buckets[i]
+                est = lo + (hi - lo) * (rank - prev) / c
+                return min(max(est, self.min), self.max)
+        return self.max
+
+    def snapshot(self) -> dict:
+        if not self.count:
+            return {"count": 0, "sum": 0.0}
+        return {"count": self.count, "sum": self.sum,
+                "min": self.min, "max": self.max,
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99)}
+
+
+class _NoopMetric:
+    """Counter/gauge/histogram stand-in when metrics are disabled."""
+    __slots__ = ()
+    value = 0
+    count = 0
+    sum = 0.0
+
+    def inc(self, n: int = 1):
+        pass
+
+    def set(self, v: float):
+        pass
+
+    def record(self, v: float):
+        pass
+
+    def percentile(self, p: float) -> float:
+        return 0.0
+
+    def snapshot(self) -> dict:
+        return {}
+
+
+NOOP_METRIC = _NoopMetric()
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def _key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f'{k}="{labels[k]}"' for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class MetricsRegistry:
+    """Name+labels keyed metric store with JSON / Prometheus export."""
+    enabled = True
+
+    def __init__(self):
+        self._metrics: dict[str, tuple[str, object]] = {}
+
+    def _get(self, kind: str, name: str, labels: dict, factory):
+        key = _key(name, labels)
+        hit = self._metrics.get(key)
+        if hit is None:
+            hit = (kind, factory())
+            self._metrics[key] = hit
+        elif hit[0] != kind:
+            raise TypeError(f"metric {key!r} already registered as "
+                            f"{hit[0]}, requested {kind}")
+        return hit[1]
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get("counter", name, labels, Counter)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get("gauge", name, labels, Gauge)
+
+    def histogram(self, name: str, buckets=DEFAULT_MS_BUCKETS,
+                  **labels) -> Histogram:
+        return self._get("histogram", name, labels,
+                         lambda: Histogram(buckets))
+
+    def find(self, name: str, **labels):
+        """The metric at this key, or None — without creating it."""
+        hit = self._metrics.get(_key(name, labels))
+        return hit[1] if hit else None
+
+    @property
+    def histograms(self) -> dict:
+        """All histograms by full key (``name{labels}``), insertion-safe
+        read-only view for reporting loops."""
+        return {k: m for k, (kind, m) in self._metrics.items()
+                if kind == "histogram"}
+
+    # ------------------------------------------------------------ export
+    def snapshot(self) -> dict:
+        out: dict = {"counters": {}, "gauges": {}, "histograms": {}}
+        for key, (kind, m) in sorted(self._metrics.items()):
+            if kind == "histogram":
+                out["histograms"][key] = m.snapshot()
+            else:
+                out[kind + "s"][key] = m.value
+        return out
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.snapshot(), indent=indent)
+
+    def to_prometheus(self) -> str:
+        """Prometheus text exposition format (0.0.4)."""
+        by_name: dict[str, list] = {}
+        types: dict[str, str] = {}
+        for key, (kind, m) in sorted(self._metrics.items()):
+            name = key.split("{", 1)[0]
+            labels = key[len(name):].strip("{}")
+            by_name.setdefault(name, []).append((labels, kind, m))
+            types[name] = kind
+        lines = []
+        for name, rows in by_name.items():
+            lines.append(f"# TYPE {name} {types[name]}")
+            for labels, kind, m in rows:
+                if kind != "histogram":
+                    lines.append(f"{name}{{{labels}}} {m.value}"
+                                 if labels else f"{name} {m.value}")
+                    continue
+                cum = 0
+                for bound, c in zip(m.buckets, m.counts):
+                    cum += c
+                    le = f'le="{bound:g}"'
+                    lb = f"{labels},{le}" if labels else le
+                    lines.append(f"{name}_bucket{{{lb}}} {cum}")
+                lb = f'{labels},le="+Inf"' if labels else 'le="+Inf"'
+                lines.append(f"{name}_bucket{{{lb}}} {m.count}")
+                suffix = f"{{{labels}}}" if labels else ""
+                lines.append(f"{name}_sum{suffix} {m.sum}")
+                lines.append(f"{name}_count{suffix} {m.count}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+    def save(self, path: str):
+        """Write the JSON snapshot (``.prom`` suffix: Prometheus text)."""
+        text = (self.to_prometheus() if path.endswith(".prom")
+                else self.to_json())
+        with open(path, "w") as f:
+            f.write(text)
+
+
+class NoopMetrics:
+    """Metrics disabled: every lookup returns the shared no-op metric."""
+    enabled = False
+
+    def counter(self, name: str, **labels):
+        return NOOP_METRIC
+
+    def gauge(self, name: str, **labels):
+        return NOOP_METRIC
+
+    def histogram(self, name: str, buckets=DEFAULT_MS_BUCKETS, **labels):
+        return NOOP_METRIC
+
+    def find(self, name: str, **labels):
+        return None
+
+    @property
+    def histograms(self) -> dict:
+        return {}
+
+    def snapshot(self) -> dict:
+        return {}
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return "{}"
+
+    def to_prometheus(self) -> str:
+        return ""
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+
+
+NOOP_METRICS = NoopMetrics()

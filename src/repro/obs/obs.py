@@ -1,0 +1,48 @@
+"""The Observability bundle: one switch, one clock, tracer + metrics.
+
+Every serving-layer component (``Scheduler``, ``Server``, ``PagedEngine``,
+``SpeculativeEngine``, ``PagedKVPool``, ``FleetRouter``,
+``FleetTelemetry``) accepts an optional :class:`Observability`; the
+default is the module-level :data:`NOOP` singleton, whose tracer and
+metrics discard everything — instrumented hot paths pay one
+``obs.enabled`` attribute check when observability is off, and never
+touch the clock.
+
+When enabled, all timing flows from the single injectable ``clock``
+(seconds; default ``time.perf_counter``), shared by the tracer's span
+timestamps and the metric histograms, so traces and metrics line up and
+tests can drive both deterministically.
+"""
+from __future__ import annotations
+
+from repro.obs.metrics import (DEFAULT_CLOCK, NOOP_METRICS, MetricsRegistry)
+from repro.obs.trace import NOOP_TRACER, Tracer
+
+
+class Observability:
+    """Tracer + metrics registry behind one enable switch."""
+
+    def __init__(self, *, clock=DEFAULT_CLOCK, enabled: bool = True):
+        self.enabled = enabled
+        self.clock = clock
+        self.tracer = Tracer(clock) if enabled else NOOP_TRACER
+        self.metrics = MetricsRegistry() if enabled else NOOP_METRICS
+
+    # thin sugar so call sites read ``obs.span(...)`` / ``obs.event(...)``
+    def span(self, name: str, *, tid: int = 0, **args):
+        return self.tracer.span(name, tid=tid, **args)
+
+    def event(self, name: str, *, tid: int = 0, **args):
+        self.tracer.event(name, tid=tid, **args)
+
+    def now(self) -> float:
+        return self.clock()
+
+    def save_trace(self, path: str):
+        self.tracer.save(path)
+
+    def save_metrics(self, path: str):
+        self.metrics.save(path)
+
+
+NOOP = Observability(enabled=False)

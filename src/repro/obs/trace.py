@@ -1,0 +1,192 @@
+"""Span-based request-lifecycle tracing with Chrome ``trace_event`` export.
+
+A :class:`Tracer` records three kinds of events against an injectable
+clock:
+
+* **spans** — ``with tracer.span("decode", n_slots=3): ...`` records a
+  Chrome *complete* event (``ph: "X"``) whose ``ts``/``dur`` bound the
+  body.  Spans nest per thread lane (``tid``); nesting depth is tracked
+  explicitly so span trees reconstruct deterministically even under a
+  frozen fake clock (where ts/dur containment is ambiguous).
+* **retro spans** — ``tracer.complete(name, t0, dur)`` records a span
+  whose bounds the caller timed itself (e.g. a request's submit ->
+  complete lifetime, only known at completion).
+* **instant events** — ``tracer.event("preempt", rid=3)`` records a
+  Chrome *instant* event (``ph: "i"``).
+
+``to_chrome()`` renders the whole timeline as a ``chrome://tracing`` /
+Perfetto-loadable JSON object; ``save(path)`` writes it.
+
+The serving convention for lanes: ``tid 0`` is the engine lane (prefill /
+decode / draft / verify spans, serialized host-side), and every request
+gets its own lane from :meth:`Tracer.new_tid` carrying its lifecycle
+spans (``queued``, ``request``) and events (``first_token``, ``preempt``,
+``rewind``).
+
+:class:`NoopTracer` is the disabled counterpart: every method is a
+constant-time no-op and ``span()`` returns a shared null context
+manager, so instrumented hot paths pay one attribute lookup when
+tracing is off.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+PID = 0   # one serving cell == one trace process
+
+
+class _NullContext:
+    """Reusable do-nothing context manager (the disabled span)."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *exc):
+        return False
+
+
+NULL_CONTEXT = _NullContext()
+
+
+class NoopTracer:
+    """Tracing disabled: records nothing, costs (almost) nothing."""
+    enabled = False
+    events: tuple = ()
+
+    def span(self, name, *, tid=0, **args):
+        return NULL_CONTEXT
+
+    def complete(self, name, start, duration, *, tid=0, **args):
+        pass
+
+    def event(self, name, *, tid=0, **args):
+        pass
+
+    def new_tid(self, name=None) -> int:
+        return 0
+
+    def name_thread(self, tid, name):
+        pass
+
+
+NOOP_TRACER = NoopTracer()
+
+
+class _Span:
+    """Context manager backing :meth:`Tracer.span`; fills ``dur`` on exit."""
+    __slots__ = ("_tracer", "_ev")
+
+    def __init__(self, tracer, ev):
+        self._tracer, self._ev = tracer, ev
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        ev = self._ev
+        ev["dur"] = self._tracer._ts_now() - ev["ts"]
+        self._tracer._depth[ev["tid"]] -= 1
+        return False
+
+
+class Tracer:
+    """Event recorder.  Timestamps are microseconds relative to the
+    tracer's construction instant (Chrome's ``ts`` unit), taken from the
+    injectable ``clock`` (seconds, default ``time.perf_counter``)."""
+    enabled = True
+
+    def __init__(self, clock=time.perf_counter):
+        self._clock = clock
+        self._epoch = clock()
+        self.events: list[dict] = []     # in span-ENTER order
+        self._depth: dict[int, int] = {}
+        self._threads: dict[int, str] = {}
+        self._next_tid = 0
+
+    # ------------------------------------------------------------- clock
+    def _ts_now(self) -> float:
+        return (self._clock() - self._epoch) * 1e6
+
+    def _ts_of(self, t: float) -> float:
+        """Absolute clock reading (seconds) -> trace microseconds."""
+        return (t - self._epoch) * 1e6
+
+    # ------------------------------------------------------------- lanes
+    def new_tid(self, name: str | None = None) -> int:
+        """Allocate a fresh thread lane (e.g. one per request)."""
+        self._next_tid += 1
+        if name is not None:
+            self._threads[self._next_tid] = name
+        return self._next_tid
+
+    def name_thread(self, tid: int, name: str):
+        self._threads[tid] = name
+
+    # ------------------------------------------------------------ record
+    def span(self, name: str, *, tid: int = 0, **args):
+        d = self._depth.get(tid, 0)
+        ev = {"name": name, "ph": "X", "ts": self._ts_now(), "dur": 0.0,
+              "pid": PID, "tid": tid, "depth": d}
+        if args:
+            ev["args"] = args
+        self._depth[tid] = d + 1
+        self.events.append(ev)
+        return _Span(self, ev)
+
+    def complete(self, name: str, start: float, duration: float, *,
+                 tid: int = 0, **args):
+        """Record a caller-timed span: ``start`` is an absolute clock
+        reading (seconds), ``duration`` is seconds."""
+        ev = {"name": name, "ph": "X", "ts": self._ts_of(start),
+              "dur": duration * 1e6, "pid": PID, "tid": tid,
+              "depth": self._depth.get(tid, 0)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    def event(self, name: str, *, tid: int = 0, **args):
+        ev = {"name": name, "ph": "i", "ts": self._ts_now(), "pid": PID,
+              "tid": tid, "s": "t", "depth": self._depth.get(tid, 0)}
+        if args:
+            ev["args"] = args
+        self.events.append(ev)
+
+    # ----------------------------------------------------------- inspect
+    def span_tree(self, tid: int = 0) -> list[dict]:
+        """The lane's spans as a nested forest (children inside parents),
+        reconstructed from recorded depths — deterministic under any
+        clock.  Each node: ``{name, ts, dur, args, children}``."""
+        roots: list[dict] = []
+        stack: list[dict] = []
+        for ev in self.events:
+            if ev["tid"] != tid or ev["ph"] != "X":
+                continue
+            node = {"name": ev["name"], "ts": ev["ts"], "dur": ev["dur"],
+                    "args": ev.get("args", {}), "children": []}
+            del stack[ev["depth"]:]
+            (stack[-1]["children"] if stack else roots).append(node)
+            stack.append(node)
+        return roots
+
+    # ------------------------------------------------------------ export
+    def to_chrome(self) -> dict:
+        """The Chrome/Perfetto ``trace_event`` JSON object."""
+        meta = [{"name": "process_name", "ph": "M", "pid": PID, "tid": 0,
+                 "args": {"name": "repro.serve"}}]
+        for tid, name in sorted(self._threads.items()):
+            meta.append({"name": "thread_name", "ph": "M", "pid": PID,
+                         "tid": tid, "args": {"name": name}})
+        evs = []
+        for ev in self.events:
+            out = {k: v for k, v in ev.items() if k != "depth"}
+            evs.append(out)
+        return {"traceEvents": meta + evs, "displayTimeUnit": "ms"}
+
+    def to_json(self, indent: int | None = None) -> str:
+        return json.dumps(self.to_chrome(), indent=indent)
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())

@@ -31,6 +31,7 @@ from repro.core import kvwire, schemes
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import QuantPolicy, NO_QUANT
+from repro.obs import NOOP, Stopwatch
 from repro.serve.pool import PagedKVPool
 
 
@@ -62,8 +63,14 @@ class EngineConfig:
 
 
 class Engine:
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig):
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig, *,
+                 obs=None):
         self.cfg, self.ecfg = cfg, ecfg
+        # repro.obs.Observability; NOOP records nothing at ~zero cost.
+        # Host-side only: instrumentation never enters a jitted function,
+        # so enabling it cannot add a retrace.
+        self.obs = obs or NOOP
+        self.obs_metric_labels: dict = {}  # e.g. {"engine": "draft"}
         if ecfg.plan is not None:
             if ecfg.weight_scheme is not None:
                 raise ValueError("pass either a uniform weight_scheme or a "
@@ -187,8 +194,8 @@ class PagedEngine(Engine):
     """
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 pcfg: PagedConfig):
-        super().__init__(cfg, params, ecfg)
+                 pcfg: PagedConfig, *, obs=None):
+        super().__init__(cfg, params, ecfg, obs=obs)
         if pcfg.max_context > ecfg.max_len:
             raise ValueError("pcfg.max_context exceeds ecfg.max_len")
         self.pcfg = pcfg
@@ -201,7 +208,7 @@ class PagedEngine(Engine):
         bits, group = self._kv_layout
         return PagedKVPool(self.cfg, n_pages=self.pcfg.n_pages,
                            page_size=self.pcfg.page_size,
-                           kv_bits=bits, kv_group=group)
+                           kv_bits=bits, kv_group=group, obs=self.obs)
 
     # ------------------------------------------------------------- jitted
     def _scatter_bucket(self, pages, cache, page_ids):
@@ -250,7 +257,24 @@ class PagedEngine(Engine):
         bucket = self.pcfg.max_context
         if len(tokens) > bucket:
             raise ValueError(f"prompt len {len(tokens)} > bucket {bucket}")
-        padded = np.zeros((1, bucket), np.int32)
+        obs = self.obs
+        if not obs.enabled:
+            return self._prefill_host(pool, tokens, page_ids, key)
+        # measured wall clock brackets the compiled step end to end:
+        # block_until_ready on the scattered pages, not just the token
+        sw = Stopwatch(obs.clock)
+        with obs.tracer.span("prefill", n_tokens=len(tokens),
+                             **self.obs_metric_labels):
+            tok = self._prefill_host(pool, tokens, page_ids, key)
+            jax.block_until_ready(pool.pages)
+        obs.metrics.histogram("serve_prefill_ms",
+                              **self.obs_metric_labels).record(
+            sw.elapsed_ms())
+        return tok
+
+    def _prefill_host(self, pool: PagedKVPool, tokens, page_ids,
+                      key) -> int:
+        padded = np.zeros((1, self.pcfg.max_context), np.int32)
         padded[0, :len(tokens)] = tokens
         ids = np.zeros((self.pcfg.pages_per_slot,), np.int32)
         ids[:len(page_ids)] = page_ids
@@ -263,11 +287,19 @@ class PagedEngine(Engine):
                           key) -> np.ndarray:
         """Advance every slot one token.  tokens/pos (max_slots,),
         page_table (max_slots, pages_per_slot).  Returns sampled tokens."""
+        obs = self.obs
+        sw = Stopwatch(obs.clock) if obs.enabled else None
         toks, pool.pages = self._step_paged(
             self.params, pool.pages, jnp.asarray(tokens, jnp.int32),
             jnp.asarray(page_table, jnp.int32), jnp.asarray(pos, jnp.int32),
             key)
-        return np.asarray(toks)
+        out = np.asarray(toks)
+        if sw is not None:
+            jax.block_until_ready(pool.pages)
+            obs.metrics.histogram("serve_decode_step_ms",
+                                  **self.obs_metric_labels).record(
+                sw.elapsed_ms())
+        return out
 
     def decode_multi_batch(self, pool: PagedKVPool, tokens, page_table,
                            pos) -> np.ndarray:

@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.core import kvwire
 from repro.models.config import ModelConfig
+from repro.obs import NOOP
 
 
 def _check_paged_support(cfg: ModelConfig):
@@ -125,10 +126,11 @@ class PagedKVPool:
     """
 
     def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
-                 kv_bits=None, kv_group: int = 64, dtype=None):
+                 kv_bits=None, kv_group: int = 64, dtype=None, obs=None):
         self.cfg = cfg
         self.n_pages, self.page_size = n_pages, page_size
         self.kv_bits, self.kv_group = kv_bits, kv_group
+        self.obs = obs or NOOP     # allocator events + occupancy gauge
         self.pages = make_pool_pages(cfg, n_pages=n_pages,
                                      page_size=page_size, kv_bits=kv_bits,
                                      kv_group=kv_group, dtype=dtype)
@@ -168,12 +170,19 @@ class PagedKVPool:
             return False
         got = [self._free.pop() for _ in range(n)]
         self.page_tables.setdefault(rid, []).extend(got)
+        if self.obs.enabled:
+            self.obs.event("alloc", rid=int(rid), n_pages=n)
+            self.obs.metrics.counter("pool_alloc_total").inc(n)
+            self.obs.metrics.gauge("pool_occupancy").set(self.occupancy())
         return True
 
     def free(self, rid: int) -> int:
         """Release every page owned by rid; returns how many."""
         pages = self.page_tables.pop(rid, [])
         self._free.extend(reversed(pages))
+        if pages and self.obs.enabled:
+            self.obs.event("free", rid=int(rid), n_pages=len(pages))
+            self.obs.metrics.gauge("pool_occupancy").set(self.occupancy())
         return len(pages)
 
     def pages_of(self, rid: int) -> list[int]:
@@ -210,6 +219,12 @@ class PagedKVPool:
         if drop:
             del self.page_tables[rid][keep_pages:]
             self._free.extend(reversed(drop))
+        if self.obs.enabled:
+            self.obs.event("rewind", rid=int(rid),
+                           keep_tokens=int(keep_tokens),
+                           released_pages=len(drop))
+            self.obs.metrics.counter("pool_rewind_total").inc()
+            self.obs.metrics.gauge("pool_occupancy").set(self.occupancy())
         return len(drop)
 
     def table_array(self, rid: int, max_pages: int) -> np.ndarray:
@@ -239,6 +254,10 @@ class PagedKVPool:
         self.page_tables = {rid: [mapping[p] for p in tbl]
                             for rid, tbl in self.page_tables.items()}
         self._free = list(range(self.n_pages - 1, nxt - 1, -1))
+        if self.obs.enabled:
+            self.obs.event("defrag", moved=sum(
+                1 for old, new in mapping.items() if old != new))
+            self.obs.metrics.counter("pool_defrag_total").inc()
         return mapping
 
     # --------------------------------------------------------- accounting

@@ -23,6 +23,7 @@ from typing import Callable
 import jax
 import numpy as np
 
+from repro.obs import NOOP
 from repro.serve.engine import PagedEngine
 from repro.serve.pool import PagedKVPool
 
@@ -42,6 +43,13 @@ class Request:
     rejected_tokens: int = 0  # draft tokens a speculative verify rejected
     arrival: int = 0          # submit order; FCFS tiebreak + victim choice
     tenant: str | None = None  # fleet routing tag (fleet/router.py)
+    # observability state (populated only when the scheduler's obs is
+    # enabled; None otherwise — absolute clock readings in seconds)
+    t_submit: float | None = None   # submit() instant
+    t_queued: float | None = None   # last (re-)enqueue instant
+    t_first: float | None = None    # first emitted token (TTFT anchor)
+    t_last: float | None = None     # latest emitted token (ITL anchor)
+    trace_tid: int = 0              # the request's trace lane
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,10 +65,15 @@ class Scheduler:
     """Admits a stream of requests and interleaves their decode steps."""
 
     def __init__(self, engine: PagedEngine, pool: PagedKVPool, *,
-                 on_token=None, on_complete=None, seed: int = 0):
+                 on_token=None, on_complete=None, seed: int = 0, obs=None):
         self.engine, self.pool = engine, pool
         self.pcfg = engine.pcfg
         self.on_token, self.on_complete = on_token, on_complete
+        # repro.obs.Observability: request-lifecycle spans + the serving
+        # latency histograms (TTFT / ITL / queue wait).  NOOP by default.
+        self.obs = obs or NOOP
+        if self.obs.enabled:
+            self.obs.tracer.name_thread(0, "engine")
         self._lanes: dict[int, deque[Request]] = {}
         self._requests: dict[int, Request] = {}
         self._slots: list[Request | None] = [None] * self.pcfg.max_slots
@@ -100,6 +113,12 @@ class Scheduler:
         self._next_rid += 1
         req = Request(rid, prompt, max_new_tokens, priority=priority,
                       on_token=on_token, arrival=rid, tenant=tenant)
+        if self.obs.enabled:
+            req.t_submit = req.t_queued = self.obs.clock()
+            label = f"{tenant}/r{rid}" if tenant else f"req-{rid}"
+            req.trace_tid = self.obs.tracer.new_tid(label)
+            self.obs.event("submit", tid=req.trace_tid, rid=rid,
+                           prompt_len=len(prompt))
         self._requests[rid] = req
         self._lanes.setdefault(priority, deque()).append(req)
         return rid
@@ -137,8 +156,29 @@ class Scheduler:
         return {rid: list(r.generated) for rid, r in self._requests.items()}
 
     # ------------------------------------------------------------ helpers
+    def _tenant_label(self, req: Request) -> str:
+        return req.tenant if req.tenant is not None else "default"
+
     def _emit(self, req: Request, tok: int):
         req.generated.append(tok)
+        if self.obs.enabled:
+            now = self.obs.clock()
+            tenant = self._tenant_label(req)
+            if req.t_first is None:
+                req.t_first = now
+                if req.t_submit is not None:
+                    self.obs.metrics.histogram(
+                        "serve_ttft_ms", tenant=tenant).record(
+                        (now - req.t_submit) * 1e3)
+                self.obs.event("first_token", tid=req.trace_tid,
+                               rid=req.rid)
+            elif req.t_last is not None:
+                self.obs.metrics.histogram(
+                    "serve_itl_ms", tenant=tenant).record(
+                    (now - req.t_last) * 1e3)
+            req.t_last = now
+            self.obs.metrics.counter("serve_tokens_total",
+                                     tenant=tenant).inc()
         if req.on_token:
             req.on_token(req.rid, tok)
         if self.on_token:
@@ -150,6 +190,17 @@ class Scheduler:
             self._slots[slot] = None
         self.pool.free(req.rid)
         req.state = COMPLETE
+        if self.obs.enabled:
+            now = self.obs.clock()
+            tenant = self._tenant_label(req)
+            if req.t_submit is not None:
+                self.obs.tracer.complete(
+                    "request", req.t_submit, now - req.t_submit,
+                    tid=req.trace_tid, rid=req.rid, tenant=tenant,
+                    n_tokens=len(req.generated),
+                    preemptions=req.n_preemptions)
+            self.obs.metrics.counter("serve_completions_total",
+                                     tenant=tenant).inc()
         done = Completion(req.rid, tuple(req.generated), req.n_preemptions,
                           tenant=req.tenant,
                           rejected_tokens=req.rejected_tokens)
@@ -186,6 +237,14 @@ class Scheduler:
             if not self.pool.alloc(req.rid, need):
                 self._requeue_front(req)
                 return
+            if self.obs.enabled and req.t_queued is not None:
+                now = self.obs.clock()
+                wait = now - req.t_queued
+                self.obs.metrics.histogram(
+                    "serve_queue_wait_ms",
+                    tenant=self._tenant_label(req)).record(wait * 1e3)
+                self.obs.tracer.complete("queued", req.t_queued, wait,
+                                         tid=req.trace_tid, rid=req.rid)
             first = self.engine.prefill_request(
                 self.pool, tokens, self.pool.pages_of(req.rid),
                 self._fold_key())
@@ -216,6 +275,13 @@ class Scheduler:
         self.pool.free(req.rid)
         req.state = QUEUED
         req.n_preemptions += 1
+        if self.obs.enabled:
+            req.t_queued = self.obs.clock()
+            self.obs.event("preempt", tid=req.trace_tid, rid=req.rid,
+                           priority=req.priority)
+            self.obs.metrics.counter(
+                "serve_preemptions_total",
+                tenant=self._tenant_label(req)).inc()
         self._requeue_front(req)
         return True
 
@@ -273,9 +339,14 @@ class Scheduler:
             budget[i] = (self._slots[i].max_new_tokens
                          - len(self._slots[i].generated))
         pos = np.where([r is not None for r in self._slots], self._pos, 0)
-        emitted, rejected = self.engine.advance_slots(
-            self.pool, self._last_tok, table, pos.astype(np.int32),
-            self._fold_key(), budget=budget)
+        # the engine-lane decode span; a speculative engine opens its
+        # draft/verify child spans inside it (noop tracer: a shared null
+        # context, no recording)
+        with self.obs.tracer.span("decode", step=self._decode_steps,
+                                  n_slots=len(active)):
+            emitted, rejected = self.engine.advance_slots(
+                self.pool, self._last_tok, table, pos.astype(np.int32),
+                self._fold_key(), budget=budget)
         self._decode_steps += 1
 
         look = getattr(self.engine, "lookahead_tokens", 1)

@@ -32,15 +32,32 @@ class Server:
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
                  pcfg: PagedConfig, *, engine=None, on_token=None,
-                 on_complete=None, seed: int = 0):
+                 on_complete=None, seed: int = 0, obs=None):
         """``engine`` swaps in a prebuilt engine satisfying the paged-engine
         step contract (e.g. :class:`repro.spec.SpeculativeEngine`); by
-        default a :class:`PagedEngine` is built from the configs."""
-        self.engine = engine or PagedEngine(cfg, params, ecfg, pcfg)
+        default a :class:`PagedEngine` is built from the configs.
+        ``obs`` (a :class:`repro.obs.Observability`) threads tracing +
+        latency metrics through the engine, pool, and scheduler."""
+        from repro.obs import NOOP
+        self.obs = obs or NOOP
+        self.engine = engine or PagedEngine(cfg, params, ecfg, pcfg,
+                                            obs=self.obs)
+        if engine is not None and obs is not None:
+            self.engine.obs = obs       # prebuilt engine: adopt our obs
         self.pool = self.engine.new_pool()
         self.scheduler = Scheduler(self.engine, self.pool,
                                    on_token=on_token,
-                                   on_complete=on_complete, seed=seed)
+                                   on_complete=on_complete, seed=seed,
+                                   obs=self.obs)
+
+    def set_obs(self, obs):
+        """Swap the observability sink on a live server (e.g. attach a
+        fresh tracer after jit warmup, keeping compile time out of the
+        latency histograms)."""
+        self.obs = self.engine.obs = self.pool.obs = obs
+        self.scheduler.obs = obs
+        if obs.enabled:
+            obs.tracer.name_thread(0, "engine")
 
     # ------------------------------------------------------------- public
     def submit(self, prompt, params: RequestParams = RequestParams(), *,

@@ -23,11 +23,13 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer
 from repro.models.config import ModelConfig
+from repro.obs import NOOP, Stopwatch
 from repro.serve.engine import EngineConfig, PagedConfig, PagedEngine
 from repro.serve.pool import PagedKVPool
 from repro.spec.draft import draft_proposals
@@ -56,9 +58,12 @@ class PairedKVPool(PagedKVPool):
 
     def __init__(self, cfg: ModelConfig, *, n_pages: int, page_size: int,
                  kv_bits=None, kv_group: int = 64, draft_kv_bits=None,
-                 draft_kv_group: int = 64, dtype=None):
+                 draft_kv_group: int = 64, dtype=None, obs=None):
         super().__init__(cfg, n_pages=n_pages, page_size=page_size,
-                         kv_bits=kv_bits, kv_group=kv_group, dtype=dtype)
+                         kv_bits=kv_bits, kv_group=kv_group, dtype=dtype,
+                         obs=obs)
+        # the draft pool's own allocator is unused (page ids are shared),
+        # so it stays un-instrumented: no double-counted alloc events
         self.draft = PagedKVPool(cfg, n_pages=n_pages, page_size=page_size,
                                  kv_bits=draft_kv_bits,
                                  kv_group=draft_kv_group, dtype=dtype)
@@ -85,7 +90,8 @@ class SpeculativeEngine:
     """Draft/verify wrapper satisfying the paged-engine step contract."""
 
     def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig,
-                 pcfg: PagedConfig, *, draft_plan, spec_k: int = 4):
+                 pcfg: PagedConfig, *, draft_plan, spec_k: int = 4,
+                 obs=None):
         if ecfg.temperature != 0.0:
             raise ValueError(
                 "speculative decoding is greedy-only: acceptance compares "
@@ -104,13 +110,15 @@ class SpeculativeEngine:
                 "pre-packed params cannot provide")
         self.cfg, self.pcfg, self.spec_k = cfg, pcfg, spec_k
         self.ecfg = ecfg
+        self._obs = obs or NOOP
 
         leaf_cache: dict = {}
         vparams = params
         if ecfg.plan is not None:
             vparams = transformer.quantize_params(params, cfg, ecfg.plan,
                                                   leaf_cache=leaf_cache)
-        self.verifier = PagedEngine(cfg, vparams, ecfg, pcfg)
+        self.verifier = PagedEngine(cfg, vparams, ecfg, pcfg,
+                                    obs=self._obs)
         verifier_keys = set(leaf_cache)
 
         # the draft inherits the cell geometry and gets its own plan; its
@@ -135,7 +143,11 @@ class SpeculativeEngine:
             kv_bits=d_kv_bits, kv_group=d_kv_group)
         dparams = transformer.quantize_params(params, cfg, draft_plan,
                                               leaf_cache=leaf_cache)
-        self.draft = PagedEngine(cfg, dparams, d_ecfg, pcfg)
+        self.draft = PagedEngine(cfg, dparams, d_ecfg, pcfg,
+                                 obs=self._obs)
+        # the draft's per-micro-step timings stay distinguishable from
+        # the verifier's in the shared registry
+        self.draft.obs_metric_labels = {"engine": "draft"}
         self.shared_keys = [
             k for k in transformer.plan_leaf_keys(cfg, draft_plan)
             if k in verifier_keys]
@@ -149,6 +161,19 @@ class SpeculativeEngine:
         self.accepted = 0         # draft tokens the verifier accepted
         self.emitted = 0          # tokens actually delivered
 
+    # ------------------------------------------------------ observability
+    @property
+    def obs(self):
+        return self._obs
+
+    @obs.setter
+    def obs(self, obs):
+        """Adopting a new sink propagates to both wrapped engines (the
+        Server/FleetRouter re-wire path)."""
+        self._obs = obs
+        self.verifier.obs = obs
+        self.draft.obs = obs
+
     # ------------------------------------------------------ pool plumbing
     def new_pool(self) -> PairedKVPool:
         vb, vg = self.verifier._kv_layout
@@ -156,7 +181,7 @@ class SpeculativeEngine:
         return PairedKVPool(self.cfg, n_pages=self.pcfg.n_pages,
                             page_size=self.pcfg.page_size, kv_bits=vb,
                             kv_group=vg, draft_kv_bits=db,
-                            draft_kv_group=dg)
+                            draft_kv_group=dg, obs=self._obs)
 
     def prefill_request(self, pool: PairedKVPool, tokens, page_ids,
                         key) -> int:
@@ -179,25 +204,46 @@ class SpeculativeEngine:
         draft counts.  The caller rewinds the pool past what it consumes
         (``Scheduler.step`` -> ``pool.truncate``)."""
         k = self.spec_k
-        props = draft_proposals(self.draft, pool.draft, tokens, page_table,
-                                pos, k, key)
+        obs = self._obs
+        sw = Stopwatch(obs.clock) if obs.enabled else None
+        with obs.tracer.span("draft", k=k):
+            props = draft_proposals(self.draft, pool.draft, tokens,
+                                    page_table, pos, k, key)
+            if sw is not None:
+                jax.block_until_ready(pool.draft.pages)
+        if sw is not None:
+            obs.metrics.histogram("serve_draft_ms").record(sw.elapsed_ms())
+            sw.reset()
         run = np.concatenate(
             [np.asarray(tokens, np.int32)[:, None], props], axis=1)
-        greedy = self.verifier.decode_multi_batch(pool, run, page_table,
-                                                  pos)
+        with obs.tracer.span("verify", k=k):
+            greedy = self.verifier.decode_multi_batch(pool, run, page_table,
+                                                      pos)
+            if sw is not None:
+                jax.block_until_ready(pool.pages)
+        if sw is not None:
+            obs.metrics.histogram("serve_verify_ms").record(sw.elapsed_ms())
         m = accept_lengths(props, greedy)
         emitted = emitted_tokens(props, greedy, m)
         rejected = [k - int(mb) for mb in m]
 
         self.cycles += 1
+        cycle_drafted = cycle_accepted = 0
         for b, toks in enumerate(emitted):
             live = budget[b] if budget is not None else len(toks)
             if live <= 0:
                 continue
             self.slot_cycles += 1
-            self.drafted += k
-            self.accepted += int(m[b])
+            cycle_drafted += k
+            cycle_accepted += int(m[b])
             self.emitted += min(len(toks), live)
+        self.drafted += cycle_drafted
+        self.accepted += cycle_accepted
+        if obs.enabled:
+            obs.metrics.counter("spec_drafted_total").inc(cycle_drafted)
+            obs.metrics.counter("spec_accepted_total").inc(cycle_accepted)
+            obs.metrics.gauge("spec_acceptance_rate").set(
+                self.acceptance_rate())
         return emitted, rejected
 
     # ------------------------------------------------------------- stats
