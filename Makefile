@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke spec-smoke obs-smoke
+	fleet-smoke spec-smoke obs-smoke numerics-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -45,14 +45,33 @@ spec-smoke:  ## search a 2-bit draft plan -> speculative serve parity bench
 	    --prompt-len 12 --steps 6
 	$(PY) -m benchmarks.run spec
 
-obs-smoke:   ## serve with tracing + metrics on, then validate the artifacts
+obs-smoke:   ## serve with tracing + metrics + quality probes, validate all
 	$(PY) -m repro.launch.serve --arch llama3.2-1b --continuous 3 \
 	    --max-slots 2 --page-size 8 --n-pages 32 \
 	    --prompt-len 12 --steps 6 \
+	    --kv-bits 8 --kv-group 16 \
+	    --numerics --numerics-every 2 \
+	    --flight-out /tmp/obs_smoke_flight.json \
 	    --trace-out /tmp/obs_smoke_trace.json \
 	    --metrics-out /tmp/obs_smoke_metrics.json
 	$(PY) -m repro.obs.check /tmp/obs_smoke_trace.json \
-	    /tmp/obs_smoke_metrics.json
+	    /tmp/obs_smoke_metrics.json --numerics
+
+numerics-smoke: ## close the calibration loop: measure -> calibrate -> replan
+	$(PY) -m repro.launch.serve --arch llama3.2-1b --continuous 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6 \
+	    --kv-bits 8 --kv-group 16 \
+	    --numerics --numerics-every 2 --serve-metrics 0 \
+	    --calibration-out /tmp/numerics_calib.json \
+	    --trace-out /tmp/numerics_trace.json \
+	    --metrics-out /tmp/numerics_metrics.json
+	$(PY) -m repro.obs.check /tmp/numerics_trace.json \
+	    /tmp/numerics_metrics.json --numerics
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq8w,lq4w,lq2w --budget-ms 1000 \
+	    --calibration /tmp/numerics_calib.json \
+	    --out /tmp/numerics_plan.json
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

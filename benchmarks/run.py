@@ -13,10 +13,48 @@ One benchmark per paper table/figure:
   roofline dry-run roofline table (reads experiments/dryrun/)
   plan     mixed-precision plan Pareto sweep (accuracy proxy vs cost)
   kvplan   per-layer KV-bitwidth sweep (cache bytes/token vs kv loss)
+
+Whenever the ``serve`` and/or ``spec`` benchmarks run, their headline
+serving numbers (tok/s, TTFT/ITL p50/p95, acceptance rate) are
+consolidated into ``BENCH_serve.json`` at the repo root — the tracked
+baseline that makes serving regressions visible in review diffs.
 """
 from __future__ import annotations
 
+import json
+import pathlib
 import sys
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+# the headline serving metrics consolidated into BENCH_serve.json
+_SERVE_KEYS = ("tok_per_s", "ttft_p50_ms", "ttft_p95_ms",
+               "itl_p50_ms", "itl_p95_ms")
+_SPEC_KEYS = ("acceptance_rate", "verify_steps_per_token")
+
+
+def write_bench_serve(results: dict, path=None) -> dict | None:
+    """Consolidate serve/spec results into BENCH_serve.json (repo root).
+
+    Returns the consolidated dict, or None when neither benchmark ran.
+    """
+    out = {}
+    if "serve" in results:
+        out["serve_throughput"] = {
+            k: v for k, v in results["serve"].items()
+            if k.endswith(_SERVE_KEYS)}
+    if "spec" in results:
+        out["spec_decode"] = {
+            k: v for k, v in results["spec"].items()
+            if k.endswith(_SPEC_KEYS)}
+    if not out:
+        return None
+    path = path or REPO_ROOT / "BENCH_serve.json"
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {path}")
+    return out
 
 
 def main(argv=None):
@@ -54,6 +92,7 @@ def main(argv=None):
         else:
             raise SystemExit(f"unknown benchmark {name!r}")
         results[name] = m.run()
+    write_bench_serve(results)
     print("\nall benchmarks complete:", ", ".join(results))
     return results
 

@@ -9,11 +9,16 @@ fires the configured policy hook.
 
 Policies are injected callables — ``log`` (default), or e.g. a drop-slowest
 hook that triggers the elastic re-mesh (distributed/elastic.py).
+
+Timing goes through the shared :class:`repro.obs.Stopwatch` primitive:
+``clock`` is injectable (seconds, monotonic), so tests drive the monitor
+with a fake clock instead of sleeping.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
+
+from repro.obs.metrics import DEFAULT_CLOCK, Stopwatch
 
 
 @dataclasses.dataclass
@@ -23,21 +28,22 @@ class StragglerMonitor:
     patience: int = 3             # consecutive flags before firing
     warmup: int = 5               # observations before flagging starts
     on_straggler: object = None   # callable(name, duration, zscore)
+    clock: object = DEFAULT_CLOCK  # injectable monotonic seconds source
 
     def __post_init__(self):
         self._mean = {}
         self._var = {}
         self._count = {}
         self._strikes = {}
-        self._t0 = None
+        self._sw = None
         self.events = []
 
     # -- timing convenience ------------------------------------------------
     def start(self):
-        self._t0 = time.perf_counter()
+        self._sw = Stopwatch(self.clock)
 
     def stop(self, name: str = "step") -> float:
-        dt = time.perf_counter() - self._t0
+        dt = self._sw.elapsed()
         self.observe(name, dt)
         return dt
 

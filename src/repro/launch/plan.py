@@ -45,7 +45,8 @@ def make_calib_stream(cfg, *, n_batches: int, batch: int, seq_len: int,
 
 def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
                metric: str = "kl", batches=None, verbose: bool = True,
-               kv_bits=None, kv_group: int = 64, kv_tokens: int = 256):
+               kv_bits=None, kv_group: int = 64, kv_tokens: int = 256,
+               hw=None):
     """profile -> price -> search.  Returns (plan, search_result, profile).
 
     ``kv_bits`` (e.g. ``[8, 4, 2]``, ``None`` entries meaning fp) switches
@@ -54,13 +55,18 @@ def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
     and the plan comes back with a per-layer kv map.  Joint search prices
     the cache at ``kv_tokens`` tokens of context, and needs the byte
     budget (``budget_mb``).
+
+    ``hw`` overrides the roofline constants every candidate is priced
+    with — pass ``repro.obs.calibrated_hw(load_calibration(path))`` to
+    search against *measured* host speed (``--budget-ms`` then constrains
+    calibrated milliseconds, not the stock roofline's).
     """
     if (budget_mb is None) == (budget_ms is None):
         raise ValueError("pass exactly one of budget_mb / budget_ms")
     cands = candidates_for(cfg, scheme_names)
     prof = profile_sensitivity(params, cfg, batches, cands)
     costs = {l: {s: c.to_dict() for s, c in row.items()}
-             for l, row in candidate_costs(cfg, cands).items()}
+             for l, row in candidate_costs(cfg, cands, hw).items()}
     cost_key = "bytes" if budget_ms is None else "ms"
     budget = budget_mb * 2**20 if budget_ms is None else budget_ms
     if kv_bits is not None:
@@ -151,8 +157,20 @@ def main(argv=None):
                          "plan and pool budgets share one currency")
     ap.add_argument("--page-size", type=int, default=16,
                     help="serve-cell page size (with --n-pages)")
+    ap.add_argument("--calibration", default=None, metavar="CALIB.json",
+                    help="cost-model correction from a measured run "
+                         "(repro.launch.serve --calibration-out): prices "
+                         "every candidate with the calibrated roofline")
     ap.add_argument("--out", default="plan.json")
     args = ap.parse_args(argv)
+
+    hw = None
+    if args.calibration is not None:
+        from repro.obs import calibrated_hw, load_calibration
+        calib = load_calibration(args.calibration)
+        hw = calibrated_hw(calib)
+        print(f"calibrated roofline: ms_factor={calib['ms_factor']:.3f} "
+              f"({args.calibration})")
 
     kv_tokens = args.kv_tokens
     if kv_tokens is None:
@@ -175,8 +193,10 @@ def main(argv=None):
         cfg, params, [s.strip() for s in args.schemes.split(",")],
         budget_mb=args.budget_mb, budget_ms=args.budget_ms,
         metric=args.metric, batches=stream,
-        kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=kv_tokens)
-    print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg))['mb']:.4f} MiB")
+        kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=kv_tokens,
+        hw=hw)
+    print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg), hw)['mb']:.4f} "
+          f"MiB")
     plan.save(args.out)
     print(f"wrote {args.out}")
 

@@ -20,6 +20,17 @@ reported.  The manifest carries the arch, so ``--arch`` is optional.
 Chrome/Perfetto trace (open at ``ui.perfetto.dev``) and a metrics
 snapshot (TTFT/ITL/queue-wait p50/p95, counters).  A ``.prom`` metrics
 path emits Prometheus text format instead of JSON.
+
+The quality plane (``repro.obs`` numerics/residuals/flight/export) rides
+the same switch: ``--numerics`` samples shadow-divergence + KV
+dequant-error probes every ``--numerics-every`` decode steps and prints
+cost-model residuals at the end (``--calibration-out`` persists the
+fitted roofline correction ``repro.launch.plan --calibration`` consumes);
+``--serve-metrics PORT`` serves live ``/metrics`` (Prometheus text),
+``/healthz`` and ``/snapshot.json`` over stdlib HTTP (port 0 picks an
+ephemeral port); ``--flight-out`` arms a flight recorder that dumps the
+recent span/event ring on anomalies (preemption storm, pool alloc
+failure, drift alarm) and saves it at exit.
 """
 from __future__ import annotations
 
@@ -36,10 +47,60 @@ from repro.serve import (Engine, EngineConfig, PagedConfig, RequestParams,
 
 
 def _make_obs(args) -> Observability | None:
-    """One Observability per run when either artifact was requested."""
-    if args.trace_out or args.metrics_out:
+    """One Observability per run when any instrumentation was requested."""
+    if (args.trace_out or args.metrics_out or args.numerics
+            or args.flight_out or args.calibration_out
+            or args.serve_metrics is not None):
         return Observability()
     return None
+
+
+def _attach_extras(obs, args):
+    """Flight recorder + live /metrics endpoint (both obs-taps; neither
+    touches the engines).  Returns (flight, metrics_server)."""
+    flight = msrv = None
+    if args.flight_out:
+        from repro.obs import FlightRecorder
+        flight = obs.attach_flight(FlightRecorder(out=args.flight_out))
+    if args.serve_metrics is not None:
+        from repro.obs import MetricsServer
+        msrv = MetricsServer(obs, port=args.serve_metrics)
+        print(f"metrics endpoint: {msrv.url}/metrics (+ /healthz, "
+              f"/snapshot.json)")
+    return flight, msrv
+
+
+def _finish_extras(flight, msrv, args):
+    """Scrape the live endpoint once (proves it serves during the run),
+    then save the flight ring."""
+    if msrv is not None:
+        import urllib.request
+        with urllib.request.urlopen(f"{msrv.url}/metrics") as r:
+            text = r.read().decode()
+        print(f"/metrics live scrape: {len(text.splitlines())} lines of "
+              f"Prometheus text")
+        msrv.close()
+    if flight is not None:
+        flight.save(args.flight_out)
+        print(f"wrote {args.flight_out} ({len(flight.ring)} ring events, "
+              f"{len(flight.dumps)} anomaly dumps)")
+
+
+def _report_residuals(obs, cfg, engine, pool, args, *, labels=None):
+    """Cost-model residuals (+ optional persisted calibration factor)."""
+    from repro.obs.residuals import (fit_calibration, record_residuals,
+                                     save_calibration)
+    res = record_residuals(obs, cfg, engine, pool, labels=labels)
+    tag = f" [{labels}]" if labels else ""
+    for q, row in res.items():
+        print(f"costmodel residual{tag} {q}: predicted "
+              f"{row['predicted']:.5g} measured {row['measured']:.5g} "
+              f"ratio {row['ratio']:.3f}")
+    if args.calibration_out:
+        save_calibration(args.calibration_out,
+                         fit_calibration(res, model=cfg.name))
+        print(f"wrote {args.calibration_out}")
+    return res
 
 
 def _save_obs(obs, args):
@@ -88,8 +149,21 @@ def _continuous(cfg, params, ecfg, args):
     server.submit(warm.tolist(), RequestParams(max_new_tokens=2))
     server.drain()                          # warm both jits off the clock
     obs = _make_obs(args)
+    flight = msrv = quality = None
     if obs is not None:
         server.set_obs(obs)                 # compile time stays off the books
+        flight, msrv = _attach_extras(obs, args)
+        if args.numerics:
+            from repro.core import schemes
+            from repro.obs.numerics import (NumericsConfig, QualityMonitor,
+                                            record_weight_wire_error)
+            record_weight_wire_error(
+                obs, cfg, params,
+                ecfg.plan if ecfg.plan is not None
+                else schemes.get(args.scheme))
+            quality = server.attach_quality(QualityMonitor(
+                obs, cfg, params, server.engine,
+                ncfg=NumericsConfig(every_n_steps=args.numerics_every)))
     occ, sw = [], Stopwatch()
     rids = []
     for i in range(args.continuous):
@@ -119,7 +193,15 @@ def _continuous(cfg, params, ecfg, args):
               f"verifier steps/token {sp['verify_steps_per_token']:.3f} "
               f"(< 1.0 == decode speedup), rejected "
               f"{server.scheduler.stats()['rejected_tokens']} drafts")
+    if obs is not None and (args.numerics or args.calibration_out):
+        _report_residuals(obs, cfg, server.engine, server.pool, args)
+    if quality is not None:
+        probes = obs.metrics.counter("quality_shadow_probes_total").value
+        agree = obs.metrics.gauge("quality_shadow_top1_agree").value
+        print(f"quality: {probes} shadow probes, top-1 agreement "
+              f"{agree:.3f}")
     _save_obs(obs, args)
+    _finish_extras(flight, msrv, args)
     print("sample:", server.output(rids[0])[:16])
 
 
@@ -144,9 +226,17 @@ def _fleet(args):
         router.submit(tid, warm.tolist(), max_new_tokens=2)
     router.drain(max_steps=10_000)
     obs = _make_obs(args)
+    flight = msrv = None
     if obs is not None:                        # attach after warmup so jit
         router.obs = obs                       # compiles stay off the books
     router.reset_telemetry()                   # drop warmup counters; re-wire
+    if obs is not None:
+        flight, msrv = _attach_extras(obs, args)
+        if args.numerics:
+            from repro.obs.numerics import (NumericsConfig,
+                                            attach_fleet_quality)
+            attach_fleet_quality(router, params, ncfg=NumericsConfig(
+                every_n_steps=args.numerics_every))
 
     sw = Stopwatch()
     for i in range(args.fleet_requests):
@@ -173,7 +263,16 @@ def _fleet(args):
         with open(args.stats_out, "w") as f:
             json.dump(stats, f, indent=1)
         print(f"wrote {args.stats_out}")
+    if obs is not None and args.numerics:
+        from repro.obs.residuals import record_residuals
+        for t in router.registry:              # per-tenant residual gauges
+            res = record_residuals(obs, cfg, t.engine, t.pool,
+                                   labels={"tenant": t.tenant_id})
+            row = res["weight_bytes"]
+            print(f"costmodel residual [{t.tenant_id}] weight_bytes: "
+                  f"ratio {row['ratio']:.3f}")
     _save_obs(obs, args)
+    _finish_extras(flight, msrv, args)
 
 
 def main():
@@ -222,12 +321,40 @@ def main():
                     help="write the metrics snapshot (TTFT/ITL/queue-wait "
                          "histograms, counters); a .prom suffix selects "
                          "Prometheus text format")
+    ap.add_argument("--numerics", action="store_true",
+                    help="online quality probes: shadow-divergence KL / "
+                         "top-1 agreement, per-layer KV dequant error, "
+                         "weight wire error, spec-acceptance drift, plus "
+                         "cost-model residuals at exit")
+    ap.add_argument("--numerics-every", type=int, default=4, metavar="N",
+                    help="decode steps between shadow probes (--numerics)")
+    ap.add_argument("--serve-metrics", type=int, default=None,
+                    metavar="PORT",
+                    help="serve live /metrics (Prometheus text), /healthz "
+                         "and /snapshot.json on 127.0.0.1:PORT during the "
+                         "run (0 = ephemeral port)")
+    ap.add_argument("--flight-out", default=None, metavar="FLIGHT.json",
+                    help="arm the flight recorder: ring of recent "
+                         "spans/events, auto-dumped on anomalies "
+                         "(preemption storm / pool alloc failure / drift "
+                         "alarm) and saved here at exit")
+    ap.add_argument("--calibration-out", default=None, metavar="CALIB.json",
+                    help="persist the measured/predicted decode-ms "
+                         "correction factor for repro.launch.plan "
+                         "--calibration")
     args = ap.parse_args()
 
-    if (args.trace_out or args.metrics_out) and not (args.continuous
-                                                     or args.fleet):
-        ap.error("--trace-out/--metrics-out instrument the serve layer; "
-                 "use them with --continuous or --fleet")
+    obs_flags = (args.trace_out or args.metrics_out or args.numerics
+                 or args.flight_out or args.calibration_out
+                 or args.serve_metrics is not None)
+    if obs_flags and not (args.continuous or args.fleet):
+        ap.error("--trace-out/--metrics-out/--numerics/--serve-metrics/"
+                 "--flight-out/--calibration-out instrument the serve "
+                 "layer; use them with --continuous or --fleet")
+    if args.calibration_out and args.fleet:
+        ap.error("--calibration-out fits one engine's roofline correction; "
+                 "use it with --continuous (fleet runs report per-tenant "
+                 "residual gauges instead)")
 
     if args.spec_plan is not None and (args.fleet is not None
                                        or not args.continuous):

@@ -1,15 +1,19 @@
 """Validate ``--trace-out`` / ``--metrics-out`` artifacts.
 
-    python -m repro.obs.check trace.json metrics.json [--spec]
+    python -m repro.obs.check trace.json metrics.json [--spec] [--numerics]
 
 Asserts the trace is Chrome-trace-valid (``traceEvents`` list; every
 event carries ``name``/``ph``/``ts``/``pid``/``tid``; complete events
 carry a non-negative ``dur``; per-lane spans nest properly) and contains
 the serving lifecycle spans, and that the metrics snapshot carries the
 standard serving histograms with non-zero counts.  ``--spec`` also
-requires the speculative ``draft``/``verify`` spans.  Exit code 0 on
-success; raises with a diagnostic otherwise.  This is the ``make
-obs-smoke`` gate, and a quick sanity check for any saved run.
+requires the speculative ``draft``/``verify`` spans; ``--numerics``
+requires the quality-plane metrics (shadow-divergence KL histogram +
+agreement gauge, per-layer KV dequant-error gauges, cost-model residual
+gauges — obs/numerics.py, obs/residuals.py).  Exit code 0 on success, 1
+with a diagnostic on invalid/malformed artifacts, 2 on usage errors.
+This is the ``make obs-smoke`` / ``make numerics-smoke`` gate, and a
+quick sanity check for any saved run.
 """
 from __future__ import annotations
 
@@ -21,6 +25,9 @@ SPEC_SPANS = ("draft", "verify")
 REQUIRED_HISTOGRAMS = ("serve_ttft_ms", "serve_itl_ms",
                        "serve_queue_wait_ms", "serve_prefill_ms",
                        "serve_decode_step_ms")
+NUMERICS_HISTOGRAMS = ("quality_shadow_kl",)
+NUMERICS_GAUGE_PREFIXES = ("quality_shadow_top1_agree", "kv_dequant_mse",
+                           "kv_dequant_maxabs", "costmodel_residual")
 
 
 def check_trace(trace: dict, *, spec: bool = False) -> dict:
@@ -79,24 +86,51 @@ def check_metrics(snap: dict, *, spec: bool = False) -> list[str]:
     return found
 
 
+def check_numerics(snap: dict) -> list[str]:
+    """Validate the quality-plane metrics (``--numerics``); returns the
+    metric keys found."""
+    hists = snap.get("histograms", {})
+    gauges = snap.get("gauges", {})
+    found = []
+    for name in NUMERICS_HISTOGRAMS:
+        keys = [k for k in hists if k == name or k.startswith(name + "{")]
+        assert keys, f"metrics lack histogram {name!r}; has {sorted(hists)}"
+        for k in keys:
+            assert hists[k].get("count", 0) > 0, f"{k} recorded nothing"
+        found.extend(keys)
+    for name in NUMERICS_GAUGE_PREFIXES:
+        keys = [k for k in gauges if k == name or k.startswith(name + "{")]
+        assert keys, f"metrics lack gauge {name!r}*; has {sorted(gauges)}"
+        found.extend(keys)
+    return found
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     spec = "--spec" in argv
-    argv = [a for a in argv if a != "--spec"]
+    numerics = "--numerics" in argv
+    argv = [a for a in argv if a not in ("--spec", "--numerics")]
     if len(argv) != 2:
         print("usage: python -m repro.obs.check trace.json metrics.json "
-              "[--spec]", file=sys.stderr)
+              "[--spec] [--numerics]", file=sys.stderr)
         return 2
     trace_path, metrics_path = argv
-    with open(trace_path) as f:
-        trace = json.load(f)
-    with open(metrics_path) as f:
-        snap = json.load(f)
-    names = check_trace(trace, spec=spec)
-    hists = check_metrics(snap, spec=spec)
+    try:
+        with open(trace_path) as f:
+            trace = json.load(f)
+        with open(metrics_path) as f:
+            snap = json.load(f)
+        names = check_trace(trace, spec=spec)
+        hists = check_metrics(snap, spec=spec)
+        quality = check_numerics(snap) if numerics else []
+    except (AssertionError, json.JSONDecodeError, OSError) as e:
+        print(f"check failed: {e}", file=sys.stderr)
+        return 1
     print(f"{trace_path}: {sum(names.values())} events, spans "
           f"{ {n: names[n] for n in sorted(names)} }")
     print(f"{metrics_path}: {len(hists)} serving histograms ok")
+    if numerics:
+        print(f"{metrics_path}: {len(quality)} quality-plane metrics ok")
     return 0
 
 

@@ -1,0 +1,81 @@
+"""Live metrics endpoint: stdlib HTTP server over an Observability.
+
+:class:`MetricsServer` runs a ``ThreadingHTTPServer`` on a daemon thread
+and serves three read-only routes straight from the live registry:
+
+* ``GET /metrics``        — Prometheus text format (``to_prometheus()``),
+  ``Content-Type: text/plain; version=0.0.4``;
+* ``GET /healthz``        — ``ok`` (liveness probe);
+* ``GET /snapshot.json``  — the full counters/gauges/histograms snapshot
+  as JSON (includes percentiles — richer than the Prometheus view).
+
+Handlers only *read* registry state (plain Python dicts mutated by the
+single serving thread between requests); nothing here touches the engine
+or its compiled functions.  Pass ``port=0`` to bind an ephemeral port —
+``server.port`` reports the real one.  Wired by ``repro.launch.serve
+--serve-metrics PORT``.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+
+
+class _Handler(BaseHTTPRequestHandler):
+    # the Observability to serve; set by MetricsServer on the handler class
+    obs = None
+
+    def _send(self, code: int, body: bytes, ctype: str):
+        self.send_response(code)
+        self.send_header("Content-Type", ctype)
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def do_GET(self):  # noqa: N802 (http.server API)
+        path = self.path.split("?", 1)[0]
+        if path == "/metrics":
+            body = self.obs.metrics.to_prometheus().encode()
+            self._send(200, body, "text/plain; version=0.0.4")
+        elif path == "/healthz":
+            self._send(200, b"ok\n", "text/plain")
+        elif path == "/snapshot.json":
+            body = json.dumps(self.obs.metrics.snapshot()).encode()
+            self._send(200, body, "application/json")
+        else:
+            self._send(404, b"not found\n", "text/plain")
+
+    def log_message(self, fmt, *args):
+        pass                       # keep scrape noise out of serve stdout
+
+
+class MetricsServer:
+    """Serve ``/metrics``, ``/healthz``, ``/snapshot.json`` for ``obs``."""
+
+    def __init__(self, obs, *, port: int = 0, host: str = "127.0.0.1"):
+        handler = type("BoundHandler", (_Handler,), {"obs": obs})
+        self._httpd = ThreadingHTTPServer((host, port), handler)
+        self._httpd.daemon_threads = True
+        self.host = host
+        self.port = self._httpd.server_address[1]   # real port when port=0
+        self._thread = threading.Thread(
+            target=self._httpd.serve_forever, name="repro-metrics",
+            daemon=True)
+        self._thread.start()
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.host}:{self.port}"
+
+    def close(self):
+        self._httpd.shutdown()
+        self._thread.join(timeout=5.0)
+        self._httpd.server_close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

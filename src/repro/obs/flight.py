@@ -1,0 +1,112 @@
+"""Flight recorder: a bounded ring of recent spans/events, dumped on
+anomaly.
+
+A :class:`FlightRecorder` taps the tracer's ``listener`` hook (wired by
+``Observability.attach_flight``) and keeps the last ``capacity`` finished
+events in a ring.  Three anomaly triggers watch the stream:
+
+* **preempt storm** — ``storm_n`` or more ``preempt`` events inside a
+  ``storm_window_s`` sliding window (the thrash signature of an
+  under-provisioned pool);
+* **pool alloc failure** — any ``alloc_fail`` event (the pool turned a
+  request away; ``serve/pool.py`` emits it on exhaustion);
+* **drift alarm** — any ``drift_alarm`` event (the spec-acceptance drift
+  detector in ``obs/numerics.py`` fired).
+
+Each trigger snapshots the ring plus the live metrics registry into an
+in-memory dump (and a JSON file next to ``out`` when set), rate-limited
+by a per-reason ``cooldown_s`` and a global ``max_dumps`` cap so a storm
+cannot flood the disk.  ``save(path)`` writes the final ring + every dump
+— the ``--flight-out`` artifact of ``repro.launch.serve``.
+
+All of this is host-side bookkeeping on already-recorded events: it never
+touches the engine's compiled functions.
+"""
+from __future__ import annotations
+
+import json
+from collections import deque
+
+from repro.obs.metrics import DEFAULT_CLOCK
+
+TRIGGER_EVENTS = ("alloc_fail", "drift_alarm")   # fire on first sight
+STORM_EVENT = "preempt"
+
+
+class FlightRecorder:
+    """Ring buffer over the obs event stream + anomaly-triggered dumps."""
+
+    def __init__(self, capacity: int = 256, *, storm_n: int = 5,
+                 storm_window_s: float = 1.0, cooldown_s: float = 5.0,
+                 max_dumps: int = 8, out: str | None = None,
+                 clock=DEFAULT_CLOCK):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.ring: deque = deque(maxlen=capacity)
+        self.dumps: list[dict] = []
+        self.storm_n = storm_n
+        self.storm_window_s = storm_window_s
+        self.cooldown_s = cooldown_s
+        self.max_dumps = max_dumps
+        self.out = out
+        self._clock = clock
+        self._obs = None
+        self._preempts: deque = deque()      # recent preempt clock readings
+        self._last_dump: dict[str, float] = {}   # reason -> clock reading
+        self.dropped_dumps = 0               # triggers suppressed by limits
+
+    def bind(self, obs):
+        """Adopt the Observability whose stream feeds this recorder (its
+        clock times the trigger windows, its metrics enter the dumps)."""
+        self._obs = obs
+        self._clock = obs.clock
+
+    # ------------------------------------------------------------- record
+    def on_record(self, ev: dict):
+        """Tracer listener: called with every finished event dict."""
+        self.ring.append(dict(ev))           # the tracer mutates its dicts
+        name = ev.get("name")
+        if name == STORM_EVENT:
+            now = self._clock()
+            self._preempts.append(now)
+            while self._preempts and \
+                    now - self._preempts[0] > self.storm_window_s:
+                self._preempts.popleft()
+            if len(self._preempts) >= self.storm_n:
+                self.trigger("preempt_storm",
+                             preempts=len(self._preempts),
+                             window_s=self.storm_window_s)
+        elif name in TRIGGER_EVENTS:
+            self.trigger(name, **ev.get("args", {}))
+
+    # ------------------------------------------------------------ trigger
+    def trigger(self, reason: str, **info) -> bool:
+        """Snapshot the ring + metrics under ``reason``.  Returns whether
+        a dump was actually taken (cooldown / max_dumps may suppress)."""
+        now = self._clock()
+        last = self._last_dump.get(reason)
+        if len(self.dumps) >= self.max_dumps or \
+                (last is not None and now - last < self.cooldown_s):
+            self.dropped_dumps += 1
+            return False
+        self._last_dump[reason] = now
+        metrics = (self._obs.metrics.snapshot()
+                   if self._obs is not None else {})
+        dump = {"reason": reason, "info": info, "clock": now,
+                "events": list(self.ring), "metrics": metrics}
+        self.dumps.append(dump)
+        if self.out:
+            path = f"{self.out}.{len(self.dumps)}.{reason}.json"
+            with open(path, "w") as f:
+                json.dump(dump, f, indent=1)
+        return True
+
+    # ------------------------------------------------------------- export
+    def snapshot(self) -> dict:
+        return {"ring": list(self.ring), "dumps": self.dumps,
+                "dropped_dumps": self.dropped_dumps}
+
+    def save(self, path: str):
+        """Write the final ring + every anomaly dump (``--flight-out``)."""
+        with open(path, "w") as f:
+            json.dump(self.snapshot(), f, indent=1)

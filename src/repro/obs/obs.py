@@ -27,6 +27,18 @@ class Observability:
         self.clock = clock
         self.tracer = Tracer(clock) if enabled else NOOP_TRACER
         self.metrics = MetricsRegistry() if enabled else NOOP_METRICS
+        self.flight = None        # FlightRecorder once attach_flight() ran
+
+    def attach_flight(self, recorder):
+        """Feed every finished span/event into ``recorder`` (an
+        :class:`repro.obs.flight.FlightRecorder`) so anomaly triggers can
+        dump the recent timeline + a metrics snapshot.  No-op when
+        disabled; returns the recorder either way."""
+        self.flight = recorder
+        if self.enabled:
+            recorder.bind(self)
+            self.tracer.listener = recorder.on_record
+        return recorder
 
     # thin sugar so call sites read ``obs.span(...)`` / ``obs.event(...)``
     def span(self, name: str, *, tid: int = 0, **args):

@@ -1,0 +1,175 @@
+"""Cost-model calibration: roofline predictions vs measured serving.
+
+``plan/costmodel.py`` prices every candidate plan with an analytic
+roofline (weight wire bytes / HBM bandwidth vs MACs / peak FLOPs).
+Predictions drift from real hardware unless continuously calibrated —
+this module closes the loop against the live serving metrics:
+
+* **predicted** — ``plan_cost`` decode-ms + weight bytes for exactly the
+  per-layer configs the engine deployed, and ``plan_kv_cost`` cache
+  bytes at the pool's real token capacity;
+* **measured** — the wire bytes actually resident (``QWeight.nbytes``
+  walked over the engine's packed params; ``pool.nbytes()``) and the p50
+  of the ``serve_decode_step_ms`` histogram the engine recorded;
+* **residual** — ``costmodel_residual{quantity=...,stat=...}`` gauges
+  (stat in predicted / measured / ratio), where ratio = measured /
+  predicted.
+
+Byte quantities are exact by construction (both sides count the same
+wire format), so their ratios are ~1.0 and act as self-checks; the
+decode-ms ratio is the genuine hardware-calibration signal.
+:func:`fit_calibration` persists it as a correction factor and
+:func:`calibrated_hw` folds it back into the roofline constants, which
+``python -m repro.launch.plan --calibration`` feeds into the next
+search — predicted ms then track the measured host.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+from repro.core import schemes
+from repro.kernels.ops import QWeight
+from repro.plan.costmodel import plan_cost, plan_kv_cost
+from repro.roofline import HW
+
+
+def engine_weight_configs(cfg, ecfg) -> tuple:
+    """The per-layer :class:`QuantConfig` tuple an engine deployed —
+    the exact configs ``plan_cost`` must price to match its params."""
+    if ecfg.plan is not None:
+        return tuple(ecfg.plan.resolve(cfg))
+    if ecfg.weight_scheme is not None:
+        qcfg = schemes.get(ecfg.weight_scheme)
+        if ecfg.a_bits is not None:
+            qcfg = dataclasses.replace(qcfg, a_bits=ecfg.a_bits)
+        return (qcfg,) * cfg.n_layers
+    return (schemes.FP32,) * cfg.n_layers
+
+
+def engine_kv_list(cfg, engine) -> tuple:
+    """Per-layer cache bits tuple of the engine's kv wire layout."""
+    bits, _ = engine._kv_layout
+    if isinstance(bits, (tuple, list)):
+        return tuple(bits)
+    return (bits,) * cfg.n_layers
+
+
+def measured_weight_bytes(params) -> int:
+    """Resident decoder weight bytes of a (possibly packed) param tree:
+    ``QWeight.nbytes`` for packed leaves, fp itemsize for the dense
+    leaves ``transformer.quantize_params`` would have packed (norms /
+    router / conv leaves are excluded on both sides)."""
+    from repro.models.transformer import _EXCLUDE_KEYS
+    total = 0
+
+    def visit(t):
+        nonlocal total
+        if isinstance(t, QWeight):
+            total += t.nbytes()
+        elif isinstance(t, dict):
+            for k, v in t.items():
+                if k in _EXCLUDE_KEYS:
+                    continue
+                if k in ("w", "wi_gate", "wi_up", "wo") \
+                        and hasattr(v, "ndim") and not isinstance(v, dict) \
+                        and v.ndim >= 2:
+                    total += v.size * v.dtype.itemsize
+                else:
+                    visit(v)
+        elif isinstance(t, (list, tuple)):
+            for v in t:
+                visit(v)
+
+    visit(params["decoder"])
+    return total
+
+
+def record_residuals(obs, cfg, engine, pool, *, hw: HW | None = None,
+                     labels: dict | None = None) -> dict:
+    """Compare roofline predictions against this serving cell's measured
+    bytes/latency; export ``costmodel_residual{quantity,stat}`` gauges
+    (plus ``labels``, e.g. ``{"tenant": ...}`` in fleet mode).
+
+    Returns ``{quantity: {"predicted", "measured", "ratio"}}`` for
+    quantities ``decode_ms`` (per decode step, p50 measured),
+    ``weight_bytes`` and ``kv_bytes``.  ``decode_ms`` is present only
+    once the engine has recorded ``serve_decode_step_ms``.
+    """
+    labels = labels or {}
+    core = getattr(engine, "verifier", engine)    # spec: price the verifier
+    configs = engine_weight_configs(cfg, core.ecfg)
+    predicted = plan_cost(cfg, configs, hw)
+    kv_tokens = pool.n_pages * pool.page_size
+    kv_pred = plan_kv_cost(cfg, engine_kv_list(cfg, core),
+                           kv_group=core._kv_layout[1], tokens=kv_tokens)
+
+    out = {
+        "weight_bytes": {"predicted": float(predicted["bytes"]),
+                         "measured": float(measured_weight_bytes(
+                             core.params))},
+        "kv_bytes": {"predicted": float(kv_pred["bytes"]),
+                     "measured": float(pool.nbytes())},
+    }
+    hist = obs.metrics.find("serve_decode_step_ms",
+                            **core.obs_metric_labels)
+    if hist is not None and hist.count:
+        out["decode_ms"] = {"predicted": float(predicted["ms"]),
+                            "measured": float(hist.percentile(50))}
+    for quantity, row in out.items():
+        row["ratio"] = (row["measured"] / row["predicted"]
+                        if row["predicted"] else 0.0)
+        for stat, v in row.items():
+            obs.metrics.gauge("costmodel_residual", quantity=quantity,
+                              stat=stat, **labels).set(v)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# persisted correction factor -> calibrated roofline constants
+# ---------------------------------------------------------------------------
+
+def fit_calibration(residuals: dict, *, model: str | None = None) -> dict:
+    """Collapse a residual report into a persisted correction record.
+
+    ``ms_factor`` is the measured/predicted decode-ms ratio (1.0 when the
+    run recorded no decode steps): the single scalar the roofline is off
+    by on this host, which :func:`calibrated_hw` folds back in.
+    """
+    ms = residuals.get("decode_ms", {})
+    return {"ms_factor": float(ms.get("ratio", 1.0)) or 1.0,
+            "predicted_ms": ms.get("predicted"),
+            "measured_ms": ms.get("measured"),
+            "weight_bytes_ratio": residuals.get(
+                "weight_bytes", {}).get("ratio"),
+            "kv_bytes_ratio": residuals.get("kv_bytes", {}).get("ratio"),
+            "model": model}
+
+
+def save_calibration(path: str, calib: dict):
+    with open(path, "w") as f:
+        json.dump(calib, f, indent=1)
+
+
+def load_calibration(path: str) -> dict:
+    with open(path) as f:
+        calib = json.load(f)
+    if "ms_factor" not in calib:
+        raise ValueError(f"{path}: not a calibration file (no ms_factor)")
+    return calib
+
+
+def calibrated_hw(calib, base: HW | None = None) -> HW:
+    """Roofline constants corrected by a fitted ``ms_factor``.
+
+    Scaling both peak FLOPs and HBM bandwidth by ``1/f`` scales every
+    predicted ms by exactly ``f`` whichever side of the roofline a layer
+    sits on, so re-planning under ``--budget-ms`` constrains against the
+    *measured* host speed.
+    """
+    f = calib["ms_factor"] if isinstance(calib, dict) else float(calib)
+    if f <= 0:
+        raise ValueError(f"ms_factor must be positive, got {f}")
+    base = base or HW()
+    return dataclasses.replace(base, peak_flops=base.peak_flops / f,
+                               hbm_bw=base.hbm_bw / f)

@@ -86,8 +86,11 @@ class _Span:
 
     def __exit__(self, *exc):
         ev = self._ev
-        ev["dur"] = self._tracer._ts_now() - ev["ts"]
-        self._tracer._depth[ev["tid"]] -= 1
+        tr = self._tracer
+        ev["dur"] = tr._ts_now() - ev["ts"]
+        tr._depth[ev["tid"]] -= 1
+        if tr.listener is not None:
+            tr.listener(ev)
         return False
 
 
@@ -104,6 +107,10 @@ class Tracer:
         self._depth: dict[int, int] = {}
         self._threads: dict[int, str] = {}
         self._next_tid = 0
+        # optional tap: called with each finished event dict (span on exit,
+        # retro span, instant event) — the flight recorder's feed
+        # (obs/flight.py).  None costs one attribute check per record.
+        self.listener = None
 
     # ------------------------------------------------------------- clock
     def _ts_now(self) -> float:
@@ -145,6 +152,8 @@ class Tracer:
         if args:
             ev["args"] = args
         self.events.append(ev)
+        if self.listener is not None:
+            self.listener(ev)
 
     def event(self, name: str, *, tid: int = 0, **args):
         ev = {"name": name, "ph": "i", "ts": self._ts_now(), "pid": PID,
@@ -152,6 +161,8 @@ class Tracer:
         if args:
             ev["args"] = args
         self.events.append(ev)
+        if self.listener is not None:
+            self.listener(ev)
 
     # ----------------------------------------------------------- inspect
     def span_tree(self, tid: int = 0) -> list[dict]:

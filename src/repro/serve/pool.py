@@ -167,6 +167,11 @@ class PagedKVPool:
     def alloc(self, rid: int, n: int = 1) -> bool:
         """Append n pages to rid's table; all-or-nothing on exhaustion."""
         if n > len(self._free):
+            if self.obs.enabled:
+                # flight-recorder anomaly trigger (obs/flight.py)
+                self.obs.event("alloc_fail", rid=int(rid), n_pages=n,
+                               free=len(self._free))
+                self.obs.metrics.counter("pool_alloc_fail_total").inc()
             return False
         got = [self._free.pop() for _ in range(n)]
         self.page_tables.setdefault(rid, []).extend(got)

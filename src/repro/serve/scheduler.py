@@ -74,6 +74,10 @@ class Scheduler:
         self.obs = obs or NOOP
         if self.obs.enabled:
             self.obs.tracer.name_thread(0, "engine")
+        # optional repro.obs.numerics.QualityMonitor: its on_step tap runs
+        # the sampled shadow-divergence / KV dequant probes after each
+        # decode step (host-side; never touches the compiled step)
+        self.quality = None
         self._lanes: dict[int, deque[Request]] = {}
         self._requests: dict[int, Request] = {}
         self._slots: list[Request | None] = [None] * self.pcfg.max_slots
@@ -366,6 +370,8 @@ class Scheduler:
                 # accepted prefix and release surplus lookahead pages —
                 # the slot keeps running (NOT a preemption)
                 self.pool.truncate(req.rid, int(self._pos[i]))
+        if self.quality is not None:
+            self.quality.on_step(self)
         return events
 
     def drain(self, max_steps: int | None = None) -> dict[int, list[int]]:

@@ -59,6 +59,13 @@ class Server:
         if obs.enabled:
             obs.tracer.name_thread(0, "engine")
 
+    def attach_quality(self, monitor):
+        """Attach a :class:`repro.obs.numerics.QualityMonitor`: the
+        scheduler calls its ``on_step`` tap after every decode step.
+        Pass ``None`` to detach.  Returns the monitor."""
+        self.scheduler.quality = monitor
+        return monitor
+
     # ------------------------------------------------------------- public
     def submit(self, prompt, params: RequestParams = RequestParams(), *,
                on_token=None) -> int:

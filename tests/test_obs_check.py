@@ -1,0 +1,123 @@
+"""Tests for the ``python -m repro.obs.check`` artifact gate: exit codes
+(0 valid, 1 malformed/invalid, 2 usage) and the ``--spec`` /
+``--numerics`` extensions, driven through ``main(argv)`` directly."""
+import json
+
+import pytest
+
+from repro.obs.check import check_numerics, main
+
+
+def _trace(extra_spans=()):
+    """A minimal Chrome-trace dict carrying the required serving spans."""
+    names = ["prefill", "decode", "queued", "request", *extra_spans]
+    return {"traceEvents": [
+        {"name": n, "ph": "X", "ts": i * 10.0, "dur": 5.0,
+         "pid": 0, "tid": i}
+        for i, n in enumerate(names)]}
+
+
+def _hist(count=3):
+    return {"count": count, "p50": 1.0, "p95": 2.0}
+
+
+def _metrics(extra_hists=(), quality=False):
+    names = ["serve_ttft_ms", "serve_itl_ms", "serve_queue_wait_ms",
+             "serve_prefill_ms", "serve_decode_step_ms", *extra_hists]
+    snap = {"counters": {}, "gauges": {},
+            "histograms": {n: _hist() for n in names}}
+    if quality:
+        snap["histograms"]["quality_shadow_kl"] = _hist()
+        snap["gauges"] = {
+            "quality_shadow_top1_agree": 1.0,
+            'kv_dequant_mse{layer="layer0"}': 1e-6,
+            'kv_dequant_maxabs{layer="layer0"}': 1e-3,
+            'costmodel_residual{quantity="weight_bytes",stat="ratio"}': 1.0}
+    return snap
+
+
+@pytest.fixture
+def artifacts(tmp_path):
+    def write(trace, metrics):
+        tp, mp = tmp_path / "trace.json", tmp_path / "metrics.json"
+        tp.write_text(trace if isinstance(trace, str) else json.dumps(trace))
+        mp.write_text(metrics if isinstance(metrics, str)
+                      else json.dumps(metrics))
+        return str(tp), str(mp)
+    return write
+
+
+class TestExitCodes:
+    def test_valid_returns_0(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics())
+        assert main([tp, mp]) == 0
+        out = capsys.readouterr().out
+        assert "serving histograms ok" in out
+
+    def test_malformed_json_returns_1(self, artifacts, capsys):
+        tp, mp = artifacts("{not json", _metrics())
+        assert main([tp, mp]) == 1
+        assert "check failed" in capsys.readouterr().err
+
+    def test_missing_span_returns_1(self, artifacts, capsys):
+        trace = _trace()
+        trace["traceEvents"] = [e for e in trace["traceEvents"]
+                                if e["name"] != "decode"]
+        tp, mp = artifacts(trace, _metrics())
+        assert main([tp, mp]) == 1
+        assert "decode" in capsys.readouterr().err
+
+    def test_empty_histogram_returns_1(self, artifacts, capsys):
+        metrics = _metrics()
+        metrics["histograms"]["serve_ttft_ms"] = _hist(count=0)
+        tp, mp = artifacts(_trace(), metrics)
+        assert main([tp, mp]) == 1
+        assert "recorded nothing" in capsys.readouterr().err
+
+    def test_missing_file_returns_1(self, tmp_path, capsys):
+        assert main([str(tmp_path / "no.json"),
+                     str(tmp_path / "nope.json")]) == 1
+        assert "check failed" in capsys.readouterr().err
+
+    def test_usage_error_returns_2(self, capsys):
+        assert main([]) == 2
+        assert main(["only_one.json"]) == 2
+        assert main(["a.json", "b.json", "c.json"]) == 2
+        assert "usage:" in capsys.readouterr().err
+
+
+class TestSpecFlag:
+    def test_spec_requires_draft_verify(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics())
+        assert main([tp, mp, "--spec"]) == 1
+        err = capsys.readouterr().err
+        assert "draft" in err or "verify" in err
+
+    def test_spec_valid(self, artifacts):
+        tp, mp = artifacts(
+            _trace(extra_spans=("draft", "verify")),
+            _metrics(extra_hists=("serve_draft_ms", "serve_verify_ms")))
+        assert main([tp, mp, "--spec"]) == 0
+
+
+class TestNumericsFlag:
+    def test_numerics_requires_quality_metrics(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics())
+        assert main([tp, mp, "--numerics"]) == 1
+        assert "quality_shadow_kl" in capsys.readouterr().err
+
+    def test_numerics_valid(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics(quality=True))
+        assert main([tp, mp, "--numerics"]) == 0
+        assert "quality-plane metrics ok" in capsys.readouterr().out
+
+    def test_check_numerics_returns_found_keys(self):
+        found = check_numerics(_metrics(quality=True))
+        assert "quality_shadow_kl" in found
+        assert any(k.startswith("costmodel_residual") for k in found)
+
+    def test_check_numerics_rejects_empty_kl(self):
+        snap = _metrics(quality=True)
+        snap["histograms"]["quality_shadow_kl"] = _hist(count=0)
+        with pytest.raises(AssertionError, match="recorded nothing"):
+            check_numerics(snap)
