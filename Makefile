@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke spec-smoke obs-smoke numerics-smoke
+	fleet-smoke spec-smoke obs-smoke numerics-smoke perf-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -72,6 +72,19 @@ numerics-smoke: ## close the calibration loop: measure -> calibrate -> replan
 	    --schemes lq8w,lq4w,lq2w --budget-ms 1000 \
 	    --calibration /tmp/numerics_calib.json \
 	    --out /tmp/numerics_plan.json
+
+perf-smoke:  ## perf plane: phase breakdown + MFU gauges + regress gate
+	$(PY) -m repro.launch.serve --arch llama3.2-1b --continuous 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6 \
+	    --kv-bits 8 --kv-group 16 \
+	    --profile --profile-every 2 \
+	    --trace-out /tmp/perf_smoke_trace.json \
+	    --metrics-out /tmp/perf_smoke_metrics.json
+	$(PY) -m repro.obs.check /tmp/perf_smoke_trace.json \
+	    /tmp/perf_smoke_metrics.json --profile
+	$(PY) -m repro.obs.regress BENCH_serve.json \
+	    --history benchmarks/history.jsonl
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

@@ -1,0 +1,88 @@
+"""Append-only benchmark history: ``benchmarks/history.jsonl``.
+
+Every consolidated benchmark run (``python -m benchmarks.run serve
+spec``) appends one JSON line here: the flattened headline metrics plus
+run metadata (git sha, backend, device kind, jax version, timestamp).
+``python -m repro.obs.regress`` compares a fresh ``BENCH_serve.json``
+against the rolling baseline of this file and exits non-zero on
+regression — the CI gate that keeps serving performance from drifting
+silently.
+
+The file is committed: history accumulates across PRs, and the regress
+gate always has a baseline to compare against on a fresh clone.
+"""
+from __future__ import annotations
+
+import datetime
+import json
+import pathlib
+import subprocess
+
+REPO_ROOT = pathlib.Path(__file__).resolve().parent.parent
+HISTORY_PATH = REPO_ROOT / "benchmarks" / "history.jsonl"
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            capture_output=True, text=True, timeout=10,
+        ).stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def run_metadata() -> dict:
+    """Provenance for one benchmark run: enough to tell whether two
+    entries are comparable (same backend) and to trace a regression back
+    to the commit that introduced it."""
+    meta = {
+        "git_sha": _git_sha(),
+        "timestamp": datetime.datetime.now(
+            datetime.timezone.utc).isoformat(timespec="seconds"),
+    }
+    try:
+        import jax
+        meta["backend"] = jax.default_backend()
+        meta["device"] = jax.devices()[0].device_kind
+        meta["jax_version"] = jax.__version__
+    except Exception:                                      # pragma: no cover
+        meta.update(backend="unknown", device="unknown",
+                    jax_version="unknown")
+    return meta
+
+
+def append_entry(metrics: dict, path=None, meta: dict | None = None) -> dict:
+    """Append one ``{"meta": ..., "metrics": ...}`` line to the history.
+
+    ``metrics`` is a flat ``{name: float}`` dict (nested BENCH dicts are
+    flattened by the caller).  Returns the appended entry.
+    """
+    path = pathlib.Path(path or HISTORY_PATH)
+    entry = {"meta": meta or run_metadata(), "metrics": metrics}
+    path.parent.mkdir(parents=True, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(entry, sort_keys=True) + "\n")
+    return entry
+
+
+def load_history(path=None) -> list[dict]:
+    """All history entries, oldest first.  Missing file -> ``[]``;
+    corrupt lines are skipped (an interrupted append must not take the
+    regress gate down)."""
+    path = pathlib.Path(path or HISTORY_PATH)
+    if not path.exists():
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                entry = json.loads(line)
+            except json.JSONDecodeError:
+                continue
+            if isinstance(entry, dict) and "metrics" in entry:
+                out.append(entry)
+    return out

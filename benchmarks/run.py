@@ -33,11 +33,19 @@ _SERVE_KEYS = ("tok_per_s", "ttft_p50_ms", "ttft_p95_ms",
 _SPEC_KEYS = ("acceptance_rate", "verify_steps_per_token")
 
 
-def write_bench_serve(results: dict, path=None) -> dict | None:
+def write_bench_serve(results: dict, path=None, history_path=None
+                      ) -> dict | None:
     """Consolidate serve/spec results into BENCH_serve.json (repo root).
+
+    Each consolidated run carries its provenance under ``"meta"`` (git
+    sha, backend, device, timestamp — see ``benchmarks.history``) and is
+    appended to the rolling history ``benchmarks/history.jsonl`` that
+    ``python -m repro.obs.regress`` gates against.
 
     Returns the consolidated dict, or None when neither benchmark ran.
     """
+    from . import history
+
     out = {}
     if "serve" in results:
         out["serve_throughput"] = {
@@ -49,11 +57,19 @@ def write_bench_serve(results: dict, path=None) -> dict | None:
             if k.endswith(_SPEC_KEYS)}
     if not out:
         return None
+    meta = history.run_metadata()
+    out["meta"] = meta
     path = path or REPO_ROOT / "BENCH_serve.json"
     with open(path, "w") as f:
         json.dump(out, f, indent=1, sort_keys=True)
         f.write("\n")
     print(f"wrote {path}")
+    from repro.obs.regress import flatten_metrics
+    hpath = history_path or history.HISTORY_PATH
+    history.append_entry(
+        flatten_metrics({k: v for k, v in out.items() if k != "meta"}),
+        hpath, meta=meta)
+    print(f"appended to {hpath}")
     return out
 
 

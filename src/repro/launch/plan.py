@@ -43,10 +43,74 @@ def make_calib_stream(cfg, *, n_batches: int, batch: int, seq_len: int,
     return [{"tokens": data.batch(i)["tokens"]} for i in range(n_batches)]
 
 
+def load_kv_measurements(path: str) -> dict:
+    """``{layer_index: (measured_mse, deployed_bits)}`` from a metrics
+    snapshot (``repro.launch.serve --numerics --metrics-out``).
+
+    Reads the ``kv_dequant_mse{layer="layerN"}`` gauges the quality
+    plane's KV probe records from the *live pool during decode* — the
+    accumulated wire error of real traffic, not the one-shot forward
+    fake-quant proxy — plus ``kv_dequant_bits`` saying which wire format
+    produced each number.
+    """
+    import json
+    import re
+
+    with open(path) as f:
+        gauges = json.load(f)["gauges"]
+    pat = re.compile(r'^kv_dequant_(mse|bits)\{layer="layer(\d+)"\}$')
+    mse: dict = {}
+    bits: dict = {}
+    for key, value in gauges.items():
+        m = pat.match(key)
+        if m is None:
+            continue
+        (mse if m.group(1) == "mse" else bits)[int(m.group(2))] = value
+    return {i: (mse[i], int(bits.get(i, 0))) for i in sorted(mse)}
+
+
+def apply_kv_measurements(kv_sens: dict, measured: dict,
+                          *, verbose: bool = True) -> dict:
+    """Re-anchor the forward-proxy KV sensitivities on decode-time error.
+
+    The proxy ranks layers by one-shot fake-quant damage; the serve-time
+    probe measures the error each layer's cache actually accumulates
+    over decode (scatter round trips, rope'd keys, real occupancy).  For
+    each measured layer the whole candidate row (all non-fp cells, both
+    ``kl`` and ``mse``) is scaled by ``measured / proxy`` at the
+    *deployed* format, preserving the proxy's relative bitwidth curve
+    while moving its absolute level to where decode traffic says it is.
+    Layers that served an fp wire (bits 0), have no searchable cache, or
+    a zero proxy cell are left on the proxy.
+    """
+    from repro.plan.costmodel import kv_label
+    from repro.plan.plan import layer_name
+
+    out = {layer: {lab: dict(cell) for lab, cell in row.items()}
+           for layer, row in kv_sens.items()}
+    for i, (ms, bits) in measured.items():
+        layer = layer_name(i)
+        row = out.get(layer)
+        if row is None or not bits:
+            continue
+        proxy = row.get(kv_label(bits), {}).get("mse", 0.0)
+        if proxy <= 0.0 or ms <= 0.0:
+            continue
+        factor = ms / proxy
+        for lab, cell in row.items():
+            for k in ("kl", "mse"):
+                if cell.get(k):
+                    cell[k] *= factor
+        if verbose:
+            print(f"  kv sensitivity {layer}: measured mse {ms:.3e} at "
+                  f"{kv_label(bits)} vs proxy {proxy:.3e} -> x{factor:.3f}")
+    return out
+
+
 def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
                metric: str = "kl", batches=None, verbose: bool = True,
                kv_bits=None, kv_group: int = 64, kv_tokens: int = 256,
-               hw=None):
+               hw=None, kv_measured: dict | None = None):
     """profile -> price -> search.  Returns (plan, search_result, profile).
 
     ``kv_bits`` (e.g. ``[8, 4, 2]``, ``None`` entries meaning fp) switches
@@ -60,6 +124,10 @@ def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
     with — pass ``repro.obs.calibrated_hw(load_calibration(path))`` to
     search against *measured* host speed (``--budget-ms`` then constrains
     calibrated milliseconds, not the stock roofline's).
+
+    ``kv_measured`` (:func:`load_kv_measurements` output) re-anchors the
+    kv sensitivities on serve-time dequant error before the joint search
+    — see :func:`apply_kv_measurements`.
     """
     if (budget_mb is None) == (budget_ms is None):
         raise ValueError("pass exactly one of budget_mb / budget_ms")
@@ -76,6 +144,9 @@ def build_plan(cfg, params, scheme_names, *, budget_mb=None, budget_ms=None,
         kvg = fit_kv_group(kv_group, cfg.head_dim)
         kv_sens = profile_kv_sensitivity(params, cfg, batches, kv_bits,
                                          kv_group=kvg)
+        if kv_measured:
+            kv_sens = apply_kv_measurements(kv_sens, kv_measured,
+                                            verbose=verbose)
         kv_costs = kv_candidate_costs(cfg, kv_bits, kv_group=kvg,
                                       tokens=kv_tokens)
         sens = joint_space(prof.losses, kv_sens)
@@ -157,6 +228,12 @@ def main(argv=None):
                          "plan and pool budgets share one currency")
     ap.add_argument("--page-size", type=int, default=16,
                     help="serve-cell page size (with --n-pages)")
+    ap.add_argument("--kv-sensitivity-from", default=None,
+                    metavar="METRICS.json",
+                    help="metrics snapshot from a --numerics serve run: "
+                         "re-anchors the forward-proxy kv sensitivities "
+                         "on the measured decode-time kv_dequant_mse "
+                         "gauges (with --kv)")
     ap.add_argument("--calibration", default=None, metavar="CALIB.json",
                     help="cost-model correction from a measured run "
                          "(repro.launch.serve --calibration-out): prices "
@@ -189,12 +266,25 @@ def main(argv=None):
     if args.kv is not None:
         kv_bits = [None if s.strip() in ("fp", "none") else int(s)
                    for s in args.kv.split(",")]
+    kv_measured = None
+    if args.kv_sensitivity_from is not None:
+        if kv_bits is None:
+            ap.error("--kv-sensitivity-from re-anchors the joint kv "
+                     "search; use it with --kv")
+        kv_measured = load_kv_measurements(args.kv_sensitivity_from)
+        if not kv_measured:
+            print(f"warning: no kv_dequant_mse gauges in "
+                  f"{args.kv_sensitivity_from} (run serve with "
+                  f"--numerics --kv-bits/--plan); keeping the proxy")
+        else:
+            print(f"kv sensitivity re-anchored on {len(kv_measured)} "
+                  f"measured layers ({args.kv_sensitivity_from})")
     plan, result, _ = build_plan(
         cfg, params, [s.strip() for s in args.schemes.split(",")],
         budget_mb=args.budget_mb, budget_ms=args.budget_ms,
         metric=args.metric, batches=stream,
         kv_bits=kv_bits, kv_group=args.kv_group, kv_tokens=kv_tokens,
-        hw=hw)
+        hw=hw, kv_measured=kv_measured)
     print(f"plan totals: {plan_cost(cfg, plan.resolve(cfg), hw)['mb']:.4f} "
           f"MiB")
     plan.save(args.out)

@@ -49,10 +49,33 @@ from repro.serve import (Engine, EngineConfig, PagedConfig, RequestParams,
 def _make_obs(args) -> Observability | None:
     """One Observability per run when any instrumentation was requested."""
     if (args.trace_out or args.metrics_out or args.numerics
-            or args.flight_out or args.calibration_out
+            or args.flight_out or args.calibration_out or args.profile
             or args.serve_metrics is not None):
         return Observability()
     return None
+
+
+def _report_utilization(obs, cfg, engine, pool, args, *, labels=None):
+    """MFU / HBM-utilization gauges against the *measured* roof.
+
+    Residuals are recorded first so the roofline constants can be
+    calibrated to this host before the utilization division — a stock
+    roof on a laptop would report a meaninglessly small MFU.
+    """
+    from repro.obs.profile import record_utilization
+    from repro.obs.residuals import (calibrated_hw, fit_calibration,
+                                     record_residuals)
+    res = record_residuals(obs, cfg, engine, pool, labels=labels)
+    hw = calibrated_hw(fit_calibration(res, model=cfg.name))
+    u = record_utilization(obs, cfg, engine, pool, hw=hw, labels=labels)
+    tag = f" [{labels}]" if labels else ""
+    if u is None:
+        print(f"utilization{tag}: no decode-step latency recorded")
+        return None
+    print(f"utilization{tag}: mfu {u['mfu']:.4f}, hbm {u['hbm_util']:.4f} "
+          f"of the calibrated roof ({u['flops_per_step']:,.0f} FLOPs, "
+          f"{u['bytes_per_step']:,.0f} B per {u['step_ms']:.3f} ms step)")
+    return u
 
 
 def _attach_extras(obs, args):
@@ -149,10 +172,15 @@ def _continuous(cfg, params, ecfg, args):
     server.submit(warm.tolist(), RequestParams(max_new_tokens=2))
     server.drain()                          # warm both jits off the clock
     obs = _make_obs(args)
-    flight = msrv = quality = None
+    flight = msrv = quality = profiler = None
     if obs is not None:
         server.set_obs(obs)                 # compile time stays off the books
         flight, msrv = _attach_extras(obs, args)
+        if args.profile:
+            from repro.obs.profile import PhaseProfiler
+            profiler = server.attach_profiler(PhaseProfiler(
+                obs, cfg, server.engine,
+                every_n_steps=args.profile_every))
         if args.numerics:
             from repro.core import schemes
             from repro.obs.numerics import (NumericsConfig, QualityMonitor,
@@ -164,20 +192,30 @@ def _continuous(cfg, params, ecfg, args):
             quality = server.attach_quality(QualityMonitor(
                 obs, cfg, params, server.engine,
                 ncfg=NumericsConfig(every_n_steps=args.numerics_every)))
+    import contextlib
+
+    from repro.obs.profile import xprof_capture
+    capture = (xprof_capture(args.xprof_out) if args.xprof_out
+               else contextlib.nullcontext())
     occ, sw = [], Stopwatch()
     rids = []
-    for i in range(args.continuous):
-        prompt = jax.random.randint(jax.random.fold_in(rng, i),
-                                    (args.prompt_len,), 0, cfg.vocab_size)
-        rids.append(server.submit(prompt.tolist(), RequestParams(
-            max_new_tokens=args.steps + 1)))
-        for _ in range(args.arrival_every):      # staggered arrivals
+    with capture:
+        for i in range(args.continuous):
+            prompt = jax.random.randint(jax.random.fold_in(rng, i),
+                                        (args.prompt_len,), 0,
+                                        cfg.vocab_size)
+            rids.append(server.submit(prompt.tolist(), RequestParams(
+                max_new_tokens=args.steps + 1)))
+            for _ in range(args.arrival_every):  # staggered arrivals
+                server.step()
+                occ.append(server.pool.occupancy())
+        while server.has_work:
             server.step()
             occ.append(server.pool.occupancy())
-    while server.has_work:
-        server.step()
-        occ.append(server.pool.occupancy())
     dt = sw.elapsed()
+    if args.xprof_out:
+        print(f"wrote xprof capture under {args.xprof_out} (open in "
+              f"TensorBoard / XProf)")
     toks = sum(len(server.output(r)) for r in rids)
     s = server.stats()
     print(f"continuous: {len(rids)} requests, {toks} tokens in {dt:.2f}s "
@@ -195,6 +233,11 @@ def _continuous(cfg, params, ecfg, args):
               f"{server.scheduler.stats()['rejected_tokens']} drafts")
     if obs is not None and (args.numerics or args.calibration_out):
         _report_residuals(obs, cfg, server.engine, server.pool, args)
+    if profiler is not None:
+        probes = obs.metrics.counter("profile_probes_total").value
+        print(f"profile: {probes} phase probes "
+              f"(every {args.profile_every} steps)")
+        _report_utilization(obs, cfg, server.engine, server.pool, args)
     if quality is not None:
         probes = obs.metrics.counter("quality_shadow_probes_total").value
         agree = obs.metrics.gauge("quality_shadow_top1_agree").value
@@ -232,6 +275,10 @@ def _fleet(args):
     router.reset_telemetry()                   # drop warmup counters; re-wire
     if obs is not None:
         flight, msrv = _attach_extras(obs, args)
+        if args.profile:
+            from repro.obs.profile import attach_fleet_profilers
+            attach_fleet_profilers(router, cfg,
+                                   every_n_steps=args.profile_every)
         if args.numerics:
             from repro.obs.numerics import (NumericsConfig,
                                             attach_fleet_quality)
@@ -271,6 +318,13 @@ def _fleet(args):
             row = res["weight_bytes"]
             print(f"costmodel residual [{t.tenant_id}] weight_bytes: "
                   f"ratio {row['ratio']:.3f}")
+    if obs is not None and args.profile:
+        probes = obs.metrics.counter("profile_probes_total").value
+        print(f"profile: {probes} phase probes across "
+              f"{len(tenants)} tenants")
+        for t in router.registry:              # per-tenant MFU / HBM gauges
+            _report_utilization(obs, cfg, t.engine, t.pool, args,
+                                labels={"tenant": t.tenant_id})
     _save_obs(obs, args)
     _finish_extras(flight, msrv, args)
 
@@ -338,6 +392,19 @@ def main():
                          "spans/events, auto-dumped on anomalies "
                          "(preemption storm / pool alloc failure / drift "
                          "alarm) and saved here at exit")
+    ap.add_argument("--profile", action="store_true",
+                    help="perf-attribution plane: sampled per-phase "
+                         "decode-step breakdown (serve_phase_ms{phase,"
+                         "layer_run} histograms) plus MFU / HBM-"
+                         "utilization gauges against the calibrated "
+                         "roofline at exit; host-side only — tokens and "
+                         "compile counts are unchanged")
+    ap.add_argument("--profile-every", type=int, default=4, metavar="N",
+                    help="decode steps between phase probes (--profile)")
+    ap.add_argument("--xprof-out", default=None, metavar="DIR",
+                    help="capture a programmatic jax.profiler trace of "
+                         "the serve loop under DIR (TensorBoard/XProf); "
+                         "--continuous only")
     ap.add_argument("--calibration-out", default=None, metavar="CALIB.json",
                     help="persist the measured/predicted decode-ms "
                          "correction factor for repro.launch.plan "
@@ -345,12 +412,14 @@ def main():
     args = ap.parse_args()
 
     obs_flags = (args.trace_out or args.metrics_out or args.numerics
-                 or args.flight_out or args.calibration_out
+                 or args.flight_out or args.calibration_out or args.profile
                  or args.serve_metrics is not None)
     if obs_flags and not (args.continuous or args.fleet):
         ap.error("--trace-out/--metrics-out/--numerics/--serve-metrics/"
-                 "--flight-out/--calibration-out instrument the serve "
-                 "layer; use them with --continuous or --fleet")
+                 "--flight-out/--calibration-out/--profile instrument the "
+                 "serve layer; use them with --continuous or --fleet")
+    if args.xprof_out and not args.continuous:
+        ap.error("--xprof-out captures the --continuous serve loop")
     if args.calibration_out and args.fleet:
         ap.error("--calibration-out fits one engine's roofline correction; "
                  "use it with --continuous (fleet runs report per-tenant "

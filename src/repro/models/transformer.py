@@ -439,8 +439,11 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
             return (xx, aux_acc + aux), out
 
         body = _maybe_remat(body, cfg, training)
-        (x, aux_total), new_seg = jax.lax.scan(
-            body, (x, aux_total), (seg_params, seg_caches))
+        # one named scope per walker segment: xprof attributes device time
+        # to the same stack runs serve_phase_ms{layer_run=...} reports
+        with jax.named_scope(f"segment{k}"):
+            (x, aux_total), new_seg = jax.lax.scan(
+                body, (x, aux_total), (seg_params, seg_caches))
         if cache_runs is not None:
             new_run_parts[run].append(new_seg)
         elif sup_caches is not None:
@@ -468,11 +471,12 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
     for t, tp in enumerate(tail_params):
         spec = pattern[t % p_len]
         ct = caches["tail"][t] if caches is not None else None
-        x, nc, aux = block_apply(tp, x, spec, cfg,
-                                 policy=per_layer[n_super * p_len + t],
-                                 cache=ct, cache_pos=cache_pos,
-                                 enc_out=enc_out, positions=positions,
-                                 page_table=page_table)
+        with jax.named_scope(f"tail{t}"):
+            x, nc, aux = block_apply(tp, x, spec, cfg,
+                                     policy=per_layer[n_super * p_len + t],
+                                     cache=ct, cache_pos=cache_pos,
+                                     enc_out=enc_out, positions=positions,
+                                     page_table=page_table)
         aux_total = aux_total + aux
         new_tail.append(nc)
 
@@ -673,16 +677,20 @@ def prefill(params, cfg: ModelConfig, batch, cache, *,
         x = layers.posembed_apply(params["pos"], x)
     x = x.astype(cfg.activation_dtype)
     l = x.shape[1]
-    x, new_caches, _ = _stack_apply(
-        params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches=_layer_caches(cache),
-        cache_pos=None, enc_out=enc_out, positions=None)
+    # named scopes are HLO metadata only (no numerics / retrace impact):
+    # they label phases in xprof captures (repro.obs.profile)
+    with jax.named_scope("prefill"):
+        x, new_caches, _ = _stack_apply(
+            params["decoder"], x, cfg, cfg.pattern, policy=policy,
+            caches=_layer_caches(cache),
+            cache_pos=None, enc_out=enc_out, positions=None)
     if logits_pos is None:
         x = x[:, -1:]
     else:
         x = jax.lax.dynamic_slice_in_dim(x, logits_pos, 1, axis=1)
-    x = _norm_apply(cfg, params["final_norm"], x)
-    logits = _logits(params, cfg, x, policy)
+    with jax.named_scope("lm_head"):
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = _logits(params, cfg, x, policy)
     new_caches["pos"] = jnp.asarray(l, jnp.int32)
     return logits, new_caches
 
@@ -695,12 +703,14 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
     if cfg.pos_embed == "learned":
         x = layers.posembed_apply(params["pos"], x, offset=pos)
     x = x.astype(cfg.activation_dtype)
-    x, new_caches, _ = _stack_apply(
-        params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches=_layer_caches(cache),
-        cache_pos=pos, enc_out=None, positions=None)
-    x = _norm_apply(cfg, params["final_norm"], x)
-    logits = _logits(params, cfg, x, policy)
+    with jax.named_scope("decode_step"):
+        x, new_caches, _ = _stack_apply(
+            params["decoder"], x, cfg, cfg.pattern, policy=policy,
+            caches=_layer_caches(cache),
+            cache_pos=pos, enc_out=None, positions=None)
+    with jax.named_scope("lm_head"):
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = _logits(params, cfg, x, policy)
     new_caches["pos"] = pos + 1
     return logits, new_caches
 
@@ -721,13 +731,15 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
                          "positional embeddings are not supported")
     x = layers.embed_apply(params["embed"], tokens)
     x = x.astype(cfg.activation_dtype)
-    x, new_pages, _ = _stack_apply(
-        params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches=_layer_caches(pages),
-        cache_pos=pos, enc_out=None, positions=pos[:, None],
-        page_table=page_table)
-    x = _norm_apply(cfg, params["final_norm"], x)
-    logits = _logits(params, cfg, x, policy)
+    with jax.named_scope("paged_decode_step"):
+        x, new_pages, _ = _stack_apply(
+            params["decoder"], x, cfg, cfg.pattern, policy=policy,
+            caches=_layer_caches(pages),
+            cache_pos=pos, enc_out=None, positions=pos[:, None],
+            page_table=page_table)
+    with jax.named_scope("lm_head"):
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = _logits(params, cfg, x, policy)
     return logits, new_pages
 
 
@@ -752,13 +764,15 @@ def paged_decode_multi(params, cfg: ModelConfig, tokens, pages, page_table,
     x = layers.embed_apply(params["embed"], tokens)
     x = x.astype(cfg.activation_dtype)
     positions = pos[:, None] + jnp.arange(l)[None]
-    x, new_pages, _ = _stack_apply(
-        params["decoder"], x, cfg, cfg.pattern, policy=policy,
-        caches=_layer_caches(pages),
-        cache_pos=pos, enc_out=None, positions=positions,
-        page_table=page_table)
-    x = _norm_apply(cfg, params["final_norm"], x)
-    logits = _logits(params, cfg, x, policy)
+    with jax.named_scope("paged_decode_multi"):
+        x, new_pages, _ = _stack_apply(
+            params["decoder"], x, cfg, cfg.pattern, policy=policy,
+            caches=_layer_caches(pages),
+            cache_pos=pos, enc_out=None, positions=positions,
+            page_table=page_table)
+    with jax.named_scope("lm_head"):
+        x = _norm_apply(cfg, params["final_norm"], x)
+        logits = _logits(params, cfg, x, policy)
     return logits, new_pages
 
 

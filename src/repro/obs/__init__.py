@@ -31,6 +31,8 @@ __all__ = [
     "attach_fleet_quality", "record_weight_wire_error",
     "engine_weight_configs", "record_residuals", "fit_calibration",
     "save_calibration", "load_calibration", "calibrated_hw",
+    "PhaseProfiler", "annotate", "attach_fleet_profilers",
+    "record_utilization", "xprof_capture",
 ]
 
 _LAZY = {
@@ -40,6 +42,9 @@ _LAZY = {
     "engine_weight_configs": "residuals", "record_residuals": "residuals",
     "fit_calibration": "residuals", "save_calibration": "residuals",
     "load_calibration": "residuals", "calibrated_hw": "residuals",
+    "PhaseProfiler": "profile", "annotate": "profile",
+    "attach_fleet_profilers": "profile", "record_utilization": "profile",
+    "xprof_capture": "profile",
 }
 
 

@@ -1,6 +1,7 @@
 """Validate ``--trace-out`` / ``--metrics-out`` artifacts.
 
-    python -m repro.obs.check trace.json metrics.json [--spec] [--numerics]
+    python -m repro.obs.check trace.json metrics.json \
+        [--spec] [--numerics] [--profile]
 
 Asserts the trace is Chrome-trace-valid (``traceEvents`` list; every
 event carries ``name``/``ph``/``ts``/``pid``/``tid``; complete events
@@ -10,9 +11,13 @@ standard serving histograms with non-zero counts.  ``--spec`` also
 requires the speculative ``draft``/``verify`` spans; ``--numerics``
 requires the quality-plane metrics (shadow-divergence KL histogram +
 agreement gauge, per-layer KV dequant-error gauges, cost-model residual
-gauges — obs/numerics.py, obs/residuals.py).  Exit code 0 on success, 1
-with a diagnostic on invalid/malformed artifacts, 2 on usage errors.
-This is the ``make obs-smoke`` / ``make numerics-smoke`` gate, and a
+gauges — obs/numerics.py, obs/residuals.py); ``--profile`` requires the
+perf-attribution plane (every ``serve_phase_ms`` phase recorded, the
+``serve_mfu``/``serve_hbm_util`` gauges in ``(0, 1]``, the ``profile``/
+``phase:*`` spans, and a plausible phase-sum vs decode-step p50 —
+obs/profile.py).  Exit code 0 on success, 1 with a diagnostic on
+invalid/malformed artifacts, 2 on usage errors.  This is the ``make
+obs-smoke`` / ``make numerics-smoke`` / ``make perf-smoke`` gate, and a
 quick sanity check for any saved run.
 """
 from __future__ import annotations
@@ -28,6 +33,13 @@ REQUIRED_HISTOGRAMS = ("serve_ttft_ms", "serve_itl_ms",
 NUMERICS_HISTOGRAMS = ("quality_shadow_kl",)
 NUMERICS_GAUGE_PREFIXES = ("quality_shadow_top1_agree", "kv_dequant_mse",
                            "kv_dequant_maxabs", "costmodel_residual")
+PROFILE_PHASES = ("gather", "dequant", "attention", "lm_head", "other")
+PROFILE_GAUGES = ("serve_mfu", "serve_hbm_util")
+# phase replays run in standalone jits with per-call dispatch overhead;
+# on a tiny smoke model that overhead dwarfs the compute, so the phase
+# sum is only required to land within a loose ratio band of the engine's
+# fused decode-step p50 (attribution sanity, not a timing identity)
+PHASE_SUM_BAND = (0.02, 50.0)
 
 
 def check_trace(trace: dict, *, spec: bool = False) -> dict:
@@ -105,14 +117,66 @@ def check_numerics(snap: dict) -> list[str]:
     return found
 
 
+def check_profile(trace: dict, snap: dict, *, spec: bool = False
+                  ) -> list[str]:
+    """Validate the perf-attribution plane (``--profile``); returns the
+    metric keys found.
+
+    Requires every phase of ``repro.obs.profile.PHASES`` in the
+    ``serve_phase_ms`` histograms with non-zero counts, the utilization
+    gauges in ``(0, 1]``, the ``profile`` + ``phase:*`` spans in the
+    trace, and the phase-time sum within :data:`PHASE_SUM_BAND` of the
+    engine's decode-step p50 (verify p50 under ``--spec``).
+    """
+    hists = snap.get("histograms", {})
+    gauges = snap.get("gauges", {})
+    found = []
+    phase_sum = 0.0
+    for phase in PROFILE_PHASES:
+        frag = f'phase="{phase}"'
+        keys = [k for k in hists
+                if k.startswith("serve_phase_ms{") and frag in k]
+        assert keys, f"metrics lack serve_phase_ms phase {phase!r}; " \
+                     f"has {sorted(hists)}"
+        for k in keys:
+            assert hists[k].get("count", 0) > 0, f"{k} recorded nothing"
+            phase_sum += hists[k]["p50"]
+        found.extend(keys)
+    for name in PROFILE_GAUGES:
+        keys = [k for k in gauges if k == name or k.startswith(name + "{")]
+        assert keys, f"metrics lack gauge {name!r}*; has {sorted(gauges)}"
+        for k in keys:
+            assert 0.0 < gauges[k] <= 1.0, \
+                f"{k} = {gauges[k]} outside (0, 1]"
+        found.extend(keys)
+    names = {ev.get("name") for ev in trace.get("traceEvents", ())}
+    assert "profile" in names, f"trace lacks 'profile' span; has " \
+                               f"{sorted(n for n in names if n)}"
+    assert any(isinstance(n, str) and n.startswith("phase:")
+               for n in names), "trace lacks phase:* spans"
+    step = "serve_verify_ms" if spec else "serve_decode_step_ms"
+    step_keys = [k for k in hists
+                 if (k == step or k.startswith(step + "{"))
+                 and hists[k].get("count", 0)]
+    assert step_keys, f"metrics lack {step!r} to compare phases against"
+    step_p50 = max(hists[k]["p50"] for k in step_keys)
+    lo, hi = PHASE_SUM_BAND
+    assert lo * step_p50 <= phase_sum <= hi * step_p50, \
+        f"phase p50 sum {phase_sum:.3f} ms outside [{lo}, {hi}]x of " \
+        f"{step} p50 {step_p50:.3f} ms — attribution is implausible"
+    return found
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
     spec = "--spec" in argv
     numerics = "--numerics" in argv
-    argv = [a for a in argv if a not in ("--spec", "--numerics")]
+    profile = "--profile" in argv
+    argv = [a for a in argv if a not in ("--spec", "--numerics",
+                                         "--profile")]
     if len(argv) != 2:
         print("usage: python -m repro.obs.check trace.json metrics.json "
-              "[--spec] [--numerics]", file=sys.stderr)
+              "[--spec] [--numerics] [--profile]", file=sys.stderr)
         return 2
     trace_path, metrics_path = argv
     try:
@@ -123,6 +187,7 @@ def main(argv=None) -> int:
         names = check_trace(trace, spec=spec)
         hists = check_metrics(snap, spec=spec)
         quality = check_numerics(snap) if numerics else []
+        perf = check_profile(trace, snap, spec=spec) if profile else []
     except (AssertionError, json.JSONDecodeError, OSError) as e:
         print(f"check failed: {e}", file=sys.stderr)
         return 1
@@ -131,6 +196,8 @@ def main(argv=None) -> int:
     print(f"{metrics_path}: {len(hists)} serving histograms ok")
     if numerics:
         print(f"{metrics_path}: {len(quality)} quality-plane metrics ok")
+    if profile:
+        print(f"{metrics_path}: {len(perf)} perf-plane metrics ok")
     return 0
 
 

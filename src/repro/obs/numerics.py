@@ -387,6 +387,13 @@ class QualityMonitor:
                      float(np.max(np.abs(err))) if err.size else 0.0)
             m.gauge("kv_dequant_mse", layer=label).set(stats[0])
             m.gauge("kv_dequant_maxabs", layer=label).set(stats[1])
+            # the deployed wire width alongside the measured error, so a
+            # metrics snapshot alone is enough for launch/plan.py
+            # --kv-sensitivity-from to map error -> format (0 = fp wire)
+            kq = block["self"]["k"]
+            bits = (kvwire.kv_bits_of(kq, d)
+                    if kvwire.is_quant_kv(kq) else 0)
+            m.gauge("kv_dequant_bits", layer=label).set(float(bits))
             out[label] = stats
         return out
 

@@ -1,0 +1,184 @@
+"""Benchmark regression gate: ``python -m repro.obs.regress``.
+
+Compares a fresh benchmark result (``BENCH_serve.json`` or any nested
+dict of floats) against the rolling baseline of the append-only history
+``benchmarks/history.jsonl`` (see ``benchmarks/history.py``) and exits:
+
+  0  no regression (or no comparable baseline yet — first run passes)
+  1  at least one metric regressed past its tolerance band, or the
+     inputs were unreadable
+  2  usage error
+
+The baseline per metric is the **median over the last ``--window``
+comparable entries** (same backend — device kind varies across CI
+hosts, backend does not), so one noisy run neither poisons the baseline
+nor slips a real regression through.  Tolerance bands are per-metric
+and direction-aware, keyed on the metric-name suffix:
+
+  ``*tok_per_s``               higher is better   ratio 1.5 (CI timing
+  ``*_ms``                     lower is better    ratio 1.5  is noisy)
+  ``*acceptance_rate``         higher is better   ratio 1.05 (numerics-
+  ``*verify_steps_per_token``  lower is better    ratio 1.05  stable)
+
+Unknown suffixes are skipped, not failed: the gate guards the headline
+metrics it understands and stays quiet about new ones until a band is
+added here.
+
+    python -m repro.obs.regress BENCH_serve.json
+    python -m repro.obs.regress BENCH_serve.json --append   # pass, then
+                                                            # become history
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import sys
+
+def _history_module():
+    """``benchmarks.history`` lives at the repo root (a namespace
+    package outside ``src/``); put the root on the path when the caller
+    didn't run from it."""
+    try:
+        from benchmarks import history
+    except ImportError:                                    # pragma: no cover
+        import pathlib
+        sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[3]))
+        from benchmarks import history
+    return history
+
+
+# (suffix, higher_is_better, tolerated ratio of regression)
+_BANDS = (
+    ("tok_per_s", True, 1.5),
+    ("_ms", False, 1.5),
+    ("acceptance_rate", True, 1.05),
+    ("verify_steps_per_token", False, 1.05),
+)
+
+
+def flatten_metrics(tree: dict, prefix: str = "") -> dict:
+    """Nested BENCH dict -> flat ``{"serve_throughput.kv8_...": 3.4}``."""
+    out: dict = {}
+    for k, v in tree.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(flatten_metrics(v, f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            out[key] = float(v)
+    return out
+
+
+def band_for(name: str):
+    """(higher_is_better, ratio) for a metric name, or None (ungated)."""
+    for suffix, higher, ratio in _BANDS:
+        if name.endswith(suffix):
+            return higher, ratio
+    return None
+
+
+def rolling_baseline(history: list[dict], *, backend: str | None = None,
+                     window: int = 5) -> dict:
+    """Per-metric median over the last ``window`` comparable entries."""
+    if backend and backend != "unknown":
+        comparable = [e for e in history
+                      if e.get("meta", {}).get("backend") in (backend,
+                                                              "unknown",
+                                                              None)]
+    else:
+        comparable = list(history)
+    values: dict[str, list[float]] = {}
+    for entry in comparable[-window:]:
+        for name, v in entry.get("metrics", {}).items():
+            values.setdefault(name, []).append(float(v))
+    return {name: statistics.median(vs) for name, vs in values.items()}
+
+
+def compare(current: dict, baseline: dict) -> list[dict]:
+    """Regressions of ``current`` (flat) vs ``baseline`` (flat).
+
+    A metric regresses when it moved past its tolerance band in the bad
+    direction; improvements and in-band noise pass.  Metrics missing
+    from either side are skipped (history grows incrementally).
+    """
+    regressions = []
+    for name, cur in sorted(current.items()):
+        base = baseline.get(name)
+        spec = band_for(name)
+        if base is None or spec is None:
+            continue
+        higher, ratio = spec
+        if base <= 0 or cur <= 0:
+            continue                      # degenerate: nothing to gate on
+        worse = (base / cur) if higher else (cur / base)
+        if worse > ratio:
+            regressions.append({
+                "metric": name, "current": cur, "baseline": base,
+                "ratio": worse, "tolerance": ratio,
+                "direction": "higher_is_better" if higher
+                             else "lower_is_better",
+            })
+    return regressions
+
+
+def check(current_path: str, history_path=None, *, window: int = 5,
+          append: bool = False) -> int:
+    """The CLI body; returns the process exit code (0 ok / 1 fail)."""
+    hist = _history_module()
+
+    try:
+        with open(current_path) as f:
+            current = flatten_metrics(json.load(f))
+    except (OSError, json.JSONDecodeError, AttributeError) as e:
+        print(f"regress: cannot read {current_path}: {e}")
+        return 1
+    entries = hist.load_history(history_path)
+    meta = hist.run_metadata()
+    baseline = rolling_baseline(entries, backend=meta.get("backend"),
+                                window=window)
+    gated = [n for n in current if band_for(n) and n in baseline]
+    if not gated:
+        print(f"regress: no comparable baseline in "
+              f"{history_path or hist.HISTORY_PATH} — passing "
+              f"({len(current)} metrics, {len(entries)} history entries)")
+        if append:
+            hist.append_entry(current, history_path, meta=meta)
+        return 0
+    regressions = compare(current, baseline)
+    print(f"regress: {len(gated)} gated metrics vs median of last "
+          f"{window} runs (backend={meta.get('backend')})")
+    for r in regressions:
+        print(f"  REGRESSION {r['metric']}: {r['current']:.4g} vs "
+              f"baseline {r['baseline']:.4g} "
+              f"({r['ratio']:.2f}x worse, tolerance {r['tolerance']}x, "
+              f"{r['direction']})")
+    if regressions:
+        return 1
+    print("regress: OK — no metric outside its tolerance band")
+    if append:
+        hist.append_entry(current, history_path, meta=meta)
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.regress",
+        description="benchmark regression gate over benchmarks/"
+                    "history.jsonl")
+    ap.add_argument("current", help="fresh benchmark JSON "
+                                    "(e.g. BENCH_serve.json)")
+    ap.add_argument("--history", default=None,
+                    help="history JSONL path (default: "
+                         "benchmarks/history.jsonl)")
+    ap.add_argument("--window", type=int, default=5,
+                    help="rolling-baseline window (default 5)")
+    ap.add_argument("--append", action="store_true",
+                    help="append the current run to the history when it "
+                         "passes")
+    args = ap.parse_args(argv)
+    return check(args.current, args.history, window=args.window,
+                 append=args.append)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -32,6 +32,7 @@ from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import QuantPolicy, NO_QUANT
 from repro.obs import NOOP, Stopwatch
+from repro.obs.profile import annotate
 from repro.serve.pool import PagedKVPool
 
 
@@ -278,9 +279,11 @@ class PagedEngine(Engine):
         padded[0, :len(tokens)] = tokens
         ids = np.zeros((self.pcfg.pages_per_slot,), np.int32)
         ids[:len(page_ids)] = page_ids
-        tok, pool.pages = self._prefill_paged(
-            self.params, jnp.asarray(padded), pool.pages, jnp.asarray(ids),
-            jnp.asarray(len(tokens) - 1, jnp.int32), key)
+        with annotate("prefill"):       # xprof TraceMe; metadata only
+            tok, pool.pages = self._prefill_paged(
+                self.params, jnp.asarray(padded), pool.pages,
+                jnp.asarray(ids), jnp.asarray(len(tokens) - 1, jnp.int32),
+                key)
         return int(tok[0])
 
     def decode_step_batch(self, pool: PagedKVPool, tokens, page_table, pos,
@@ -289,10 +292,11 @@ class PagedEngine(Engine):
         page_table (max_slots, pages_per_slot).  Returns sampled tokens."""
         obs = self.obs
         sw = Stopwatch(obs.clock) if obs.enabled else None
-        toks, pool.pages = self._step_paged(
-            self.params, pool.pages, jnp.asarray(tokens, jnp.int32),
-            jnp.asarray(page_table, jnp.int32), jnp.asarray(pos, jnp.int32),
-            key)
+        with annotate("decode_step"):   # xprof TraceMe; metadata only
+            toks, pool.pages = self._step_paged(
+                self.params, pool.pages, jnp.asarray(tokens, jnp.int32),
+                jnp.asarray(page_table, jnp.int32),
+                jnp.asarray(pos, jnp.int32), key)
         out = np.asarray(toks)
         if sw is not None:
             jax.block_until_ready(pool.pages)

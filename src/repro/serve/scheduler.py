@@ -78,6 +78,9 @@ class Scheduler:
         # the sampled shadow-divergence / KV dequant probes after each
         # decode step (host-side; never touches the compiled step)
         self.quality = None
+        # optional repro.obs.profile.PhaseProfiler: same tap shape — the
+        # sampled phase-attribution replays (gather/dequant/attention/...)
+        self.profiler = None
         self._lanes: dict[int, deque[Request]] = {}
         self._requests: dict[int, Request] = {}
         self._slots: list[Request | None] = [None] * self.pcfg.max_slots
@@ -372,6 +375,8 @@ class Scheduler:
                 self.pool.truncate(req.rid, int(self._pos[i]))
         if self.quality is not None:
             self.quality.on_step(self)
+        if self.profiler is not None:
+            self.profiler.on_step(self)
         return events
 
     def drain(self, max_steps: int | None = None) -> dict[int, list[int]]:

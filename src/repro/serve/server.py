@@ -66,6 +66,13 @@ class Server:
         self.scheduler.quality = monitor
         return monitor
 
+    def attach_profiler(self, profiler):
+        """Attach a :class:`repro.obs.profile.PhaseProfiler`: the
+        scheduler calls its ``on_step`` tap after every decode step.
+        Pass ``None`` to detach.  Returns the profiler."""
+        self.scheduler.profiler = profiler
+        return profiler
+
     # ------------------------------------------------------------- public
     def submit(self, prompt, params: RequestParams = RequestParams(), *,
                on_token=None) -> int:

@@ -105,6 +105,8 @@ class TestQualityMonitor:
             g = m.find("kv_dequant_mse", layer=f"layer{i}")
             assert g is not None and 0.0 <= g.value < 1e-2   # 8-bit: small
             assert m.find("kv_dequant_maxabs", layer=f"layer{i}") is not None
+            bits = m.find("kv_dequant_bits", layer=f"layer{i}")
+            assert bits is not None and bits.value == 8.0    # deployed wire
 
     def test_snapshot_passes_check_numerics(self, quality_run):
         found = check_numerics(quality_run["obs"].metrics.snapshot())
@@ -365,6 +367,55 @@ class TestMetricsServer:
         srv.close()
         with pytest.raises(urllib.error.URLError):
             urllib.request.urlopen(f"{url}/healthz", timeout=0.5)
+
+    def test_concurrent_scrapes_while_recording(self):
+        # a GET storm against /metrics + /snapshot.json while the
+        # registry is being written: every response parses, none hangs
+        # (scrapers race the serving threads in production)
+        import threading
+
+        obs = Observability()
+        for i in range(8):
+            obs.metrics.histogram("serve_itl_ms",
+                                  tenant=f"t{i}").record(1.0)
+        stop = threading.Event()
+
+        def writer():
+            i = 0
+            while not stop.is_set():
+                obs.metrics.counter("serve_tokens_total",
+                                    tenant=f"t{i % 8}").inc()
+                obs.metrics.histogram(
+                    "serve_itl_ms", tenant=f"t{i % 8}").record(i % 7 + 0.5)
+                i += 1
+
+        errors: list = []
+
+        def scraper(url, n=20):
+            try:
+                for _ in range(n):
+                    body = urllib.request.urlopen(
+                        f"{url}/metrics", timeout=5).read().decode()
+                    assert "# TYPE serve_itl_ms histogram" in body
+                    snap = json.loads(urllib.request.urlopen(
+                        f"{url}/snapshot.json", timeout=5).read())
+                    assert "histograms" in snap
+            except Exception as e:                 # pragma: no cover
+                errors.append(e)
+
+        with MetricsServer(obs, port=0) as srv:
+            wt = threading.Thread(target=writer, daemon=True)
+            wt.start()
+            threads = [threading.Thread(target=scraper, args=(srv.url,))
+                       for _ in range(4)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=60)
+            stop.set()
+            wt.join(timeout=5)
+        assert not errors, errors
+        assert not any(t.is_alive() for t in threads), "scrape hung"
 
 
 # ---------------------------------------------------------------------------

@@ -1,11 +1,12 @@
 """Tests for the ``python -m repro.obs.check`` artifact gate: exit codes
 (0 valid, 1 malformed/invalid, 2 usage) and the ``--spec`` /
-``--numerics`` extensions, driven through ``main(argv)`` directly."""
+``--numerics`` / ``--profile`` extensions, driven through ``main(argv)``
+directly."""
 import json
 
 import pytest
 
-from repro.obs.check import check_numerics, main
+from repro.obs.check import check_numerics, check_profile, main
 
 
 def _trace(extra_spans=()):
@@ -21,11 +22,19 @@ def _hist(count=3):
     return {"count": count, "p50": 1.0, "p95": 2.0}
 
 
-def _metrics(extra_hists=(), quality=False):
+def _metrics(extra_hists=(), quality=False, profile=False):
     names = ["serve_ttft_ms", "serve_itl_ms", "serve_queue_wait_ms",
              "serve_prefill_ms", "serve_decode_step_ms", *extra_hists]
     snap = {"counters": {}, "gauges": {},
             "histograms": {n: _hist() for n in names}}
+    if profile:
+        for phase in ("gather", "dequant", "attention", "lm_head",
+                      "other"):
+            run = "all" if phase in ("lm_head", "other") else "run0"
+            key = (f'serve_phase_ms{{layer_run="{run}",phase="{phase}"}}')
+            snap["histograms"][key] = {"count": 4, "p50": 0.2, "p95": 0.4}
+        snap["gauges"].update({"serve_mfu": 0.03,
+                               "serve_hbm_util": 0.4})
     if quality:
         snap["histograms"]["quality_shadow_kl"] = _hist()
         snap["gauges"] = {
@@ -121,3 +130,46 @@ class TestNumericsFlag:
         snap["histograms"]["quality_shadow_kl"] = _hist(count=0)
         with pytest.raises(AssertionError, match="recorded nothing"):
             check_numerics(snap)
+
+
+class TestProfileFlag:
+    def test_profile_requires_perf_metrics(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics())
+        assert main([tp, mp, "--profile"]) == 1
+        assert "serve_phase_ms" in capsys.readouterr().err
+
+    def test_profile_valid(self, artifacts, capsys):
+        tp, mp = artifacts(
+            _trace(extra_spans=("profile", "phase:gather")),
+            _metrics(profile=True))
+        assert main([tp, mp, "--profile"]) == 0
+        assert "perf-plane metrics ok" in capsys.readouterr().out
+
+    def test_profile_requires_trace_spans(self, artifacts, capsys):
+        tp, mp = artifacts(_trace(), _metrics(profile=True))
+        assert main([tp, mp, "--profile"]) == 1
+        assert "profile" in capsys.readouterr().err
+
+    def test_gauge_out_of_unit_interval_fails(self):
+        snap = _metrics(profile=True)
+        snap["gauges"]["serve_mfu"] = 0.0       # never recorded a step
+        with pytest.raises(AssertionError, match="outside"):
+            check_profile(_trace(("profile", "phase:gather")), snap)
+
+    def test_phase_sum_band(self):
+        snap = _metrics(profile=True)
+        for k in snap["histograms"]:
+            if k.startswith("serve_phase_ms"):
+                snap["histograms"][k]["p50"] = 1e6  # vs step p50 of 1 ms
+        with pytest.raises(AssertionError, match="implausible"):
+            check_profile(_trace(("profile", "phase:gather")), snap)
+
+    def test_spec_uses_verify_step(self, artifacts):
+        # spec runs carry no plain decode-step histogram with counts;
+        # the phase sum compares against serve_verify_ms instead
+        tp, mp = artifacts(
+            _trace(extra_spans=("draft", "verify", "profile",
+                                "phase:gather")),
+            _metrics(extra_hists=("serve_draft_ms", "serve_verify_ms"),
+                     profile=True))
+        assert main([tp, mp, "--spec", "--profile"]) == 0

@@ -1,0 +1,186 @@
+"""Tests for the benchmark regression harness (obs/regress.py,
+benchmarks/history.py): run metadata, append-only history round trips,
+rolling-baseline medians, direction-aware tolerance bands, and the CLI
+exit codes (0 pass / 1 regression / 2 usage)."""
+import json
+
+import pytest
+
+from benchmarks import history
+from repro.obs import regress
+
+
+def _entry(metrics, backend="cpu", sha="abc1234"):
+    return {"meta": {"backend": backend, "git_sha": sha,
+                     "device": "x", "jax_version": "0",
+                     "timestamp": "2026-08-01T00:00:00+00:00"},
+            "metrics": metrics}
+
+
+BASE = {"serve_throughput.kv8_tok_per_s": 1000.0,
+        "serve_throughput.kv8_itl_p50_ms": 2.0,
+        "spec_decode.lq8w_acceptance_rate": 0.9,
+        "spec_decode.lq8w_verify_steps_per_token": 0.5}
+
+
+# ---------------------------------------------------------------------------
+# history file
+# ---------------------------------------------------------------------------
+
+class TestHistory:
+    def test_metadata_keys(self):
+        meta = history.run_metadata()
+        assert set(meta) >= {"git_sha", "backend", "device",
+                             "jax_version", "timestamp"}
+        assert meta["git_sha"] != ""
+
+    def test_append_load_round_trip(self, tmp_path):
+        p = tmp_path / "h.jsonl"
+        history.append_entry({"a": 1.0}, p, meta={"backend": "cpu"})
+        history.append_entry({"a": 2.0}, p, meta={"backend": "cpu"})
+        got = history.load_history(p)
+        assert [e["metrics"]["a"] for e in got] == [1.0, 2.0]
+
+    def test_missing_file_and_corrupt_lines(self, tmp_path):
+        assert history.load_history(tmp_path / "nope.jsonl") == []
+        p = tmp_path / "h.jsonl"
+        p.write_text('{"metrics": {"a": 1.0}, "meta": {}}\n'
+                     "{truncated garbage\n\n")
+        assert len(history.load_history(p)) == 1
+
+    def test_committed_history_loads(self):
+        # the tracked baseline the CI gate compares against
+        entries = history.load_history()
+        assert entries, "benchmarks/history.jsonl missing or empty"
+        assert all("metrics" in e and "meta" in e for e in entries)
+
+
+# ---------------------------------------------------------------------------
+# baseline + bands
+# ---------------------------------------------------------------------------
+
+class TestBaseline:
+    def test_rolling_median_over_window(self):
+        hist = [_entry({"x_tok_per_s": v})
+                for v in (1.0, 100.0, 110.0, 120.0)]
+        base = regress.rolling_baseline(hist, window=3)
+        assert base["x_tok_per_s"] == 110.0      # the 1.0 aged out
+
+    def test_backend_filter(self):
+        hist = [_entry({"x_tok_per_s": 10.0}, backend="tpu"),
+                _entry({"x_tok_per_s": 100.0}, backend="cpu")]
+        base = regress.rolling_baseline(hist, backend="cpu")
+        assert base["x_tok_per_s"] == 100.0
+
+    def test_band_lookup(self):
+        assert regress.band_for("a.kv8_tok_per_s") == (True, 1.5)
+        assert regress.band_for("a.itl_p50_ms") == (False, 1.5)
+        assert regress.band_for("a.acceptance_rate") == (True, 1.05)
+        assert regress.band_for("a.verify_steps_per_token") == (False, 1.05)
+        assert regress.band_for("a.pool_occupancy") is None
+
+    def test_flatten(self):
+        flat = regress.flatten_metrics(
+            {"serve": {"tok_per_s": 3.0}, "meta": {"sha": "x"},
+             "flag": True})
+        assert flat == {"serve.tok_per_s": 3.0}   # strings/bools dropped
+
+
+class TestCompare:
+    def test_within_band_passes(self):
+        cur = dict(BASE)
+        cur["serve_throughput.kv8_tok_per_s"] = 700.0    # 1.43x < 1.5x
+        assert regress.compare(cur, BASE) == []
+
+    def test_improvement_passes(self):
+        cur = {k: (v * 3 if "tok_per_s" in k else v)
+               for k, v in BASE.items()}
+        assert regress.compare(cur, BASE) == []
+
+    def test_throughput_regression_flagged(self):
+        cur = dict(BASE)
+        cur["serve_throughput.kv8_tok_per_s"] = 400.0    # 2.5x worse
+        bad = regress.compare(cur, BASE)
+        assert [b["metric"] for b in bad] == \
+            ["serve_throughput.kv8_tok_per_s"]
+
+    def test_latency_direction(self):
+        cur = dict(BASE)
+        cur["serve_throughput.kv8_itl_p50_ms"] = 4.0     # 2x slower
+        assert len(regress.compare(cur, BASE)) == 1
+        cur["serve_throughput.kv8_itl_p50_ms"] = 0.5     # faster: fine
+        assert regress.compare(cur, BASE) == []
+
+    def test_acceptance_band_is_tight(self):
+        cur = dict(BASE)
+        cur["spec_decode.lq8w_acceptance_rate"] = 0.8    # 1.125x > 1.05x
+        assert len(regress.compare(cur, BASE)) == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def bench_files(tmp_path):
+    def write(current, hist_entries):
+        cp = tmp_path / "BENCH.json"
+        cp.write_text(json.dumps(current))
+        hp = tmp_path / "history.jsonl"
+        with open(hp, "w") as f:
+            for e in hist_entries:
+                f.write(json.dumps(e) + "\n")
+        return str(cp), str(hp)
+    return write
+
+
+class TestCLI:
+    CURRENT = {"serve_throughput": {"kv8_tok_per_s": 1000.0,
+                                    "kv8_itl_p50_ms": 2.0}}
+
+    def test_clean_run_exits_0(self, bench_files, capsys):
+        cp, hp = bench_files(self.CURRENT, [
+            _entry(regress.flatten_metrics(self.CURRENT))] * 3)
+        assert regress.main([cp, "--history", hp]) == 0
+        assert "OK" in capsys.readouterr().out
+
+    def test_injected_regression_exits_1(self, bench_files, capsys):
+        bad = {"serve_throughput": {"kv8_tok_per_s": 100.0,
+                                    "kv8_itl_p50_ms": 2.0}}
+        cp, hp = bench_files(bad, [
+            _entry(regress.flatten_metrics(self.CURRENT))] * 3)
+        assert regress.main([cp, "--history", hp]) == 1
+        assert "REGRESSION" in capsys.readouterr().out
+
+    def test_no_baseline_exits_0(self, bench_files, capsys):
+        cp, hp = bench_files(self.CURRENT, [])
+        assert regress.main([cp, "--history", hp]) == 0
+        assert "no comparable baseline" in capsys.readouterr().out
+
+    def test_append_on_pass(self, bench_files):
+        cp, hp = bench_files(self.CURRENT, [
+            _entry(regress.flatten_metrics(self.CURRENT))])
+        assert regress.main([cp, "--history", hp, "--append"]) == 0
+        assert len(history.load_history(hp)) == 2
+
+    def test_no_append_on_fail(self, bench_files):
+        bad = {"serve_throughput": {"kv8_tok_per_s": 100.0}}
+        cp, hp = bench_files(bad, [
+            _entry(regress.flatten_metrics(self.CURRENT))] * 2)
+        assert regress.main([cp, "--history", hp, "--append"]) == 1
+        assert len(history.load_history(hp)) == 2        # unchanged
+
+    def test_unreadable_current_exits_1(self, tmp_path, capsys):
+        assert regress.main([str(tmp_path / "nope.json")]) == 1
+        assert "cannot read" in capsys.readouterr().out
+
+    def test_usage_error_exits_2(self):
+        with pytest.raises(SystemExit) as exc:
+            regress.main([])
+        assert exc.value.code == 2
+
+    def test_tracked_baseline_gates_current_bench(self):
+        # the real BENCH_serve.json must pass against the committed
+        # history — this IS the CI gate, run as a test
+        from benchmarks.history import REPO_ROOT
+        assert regress.main([str(REPO_ROOT / "BENCH_serve.json")]) == 0
