@@ -2,7 +2,7 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke spec-smoke obs-smoke numerics-smoke perf-smoke
+	fleet-smoke spec-smoke obs-smoke numerics-smoke perf-smoke fused-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -84,6 +84,23 @@ perf-smoke:  ## perf plane: phase breakdown + MFU gauges + regress gate
 	$(PY) -m repro.obs.check /tmp/perf_smoke_trace.json \
 	    /tmp/perf_smoke_metrics.json --profile
 	$(PY) -m repro.obs.regress BENCH_serve.json \
+	    --history benchmarks/history.jsonl
+
+fused-smoke: ## fused paged-attention serve + profile + bench regress gate
+	$(PY) -m repro.launch.serve --arch llama3.2-1b --continuous 3 \
+	    --max-slots 2 --page-size 8 --n-pages 32 \
+	    --prompt-len 12 --steps 6 \
+	    --kv-bits 4 --kv-group 16 \
+	    --fused-attention \
+	    --profile --profile-every 2 \
+	    --trace-out /tmp/fused_smoke_trace.json \
+	    --metrics-out /tmp/fused_smoke_metrics.json
+	$(PY) -m repro.obs.check /tmp/fused_smoke_trace.json \
+	    /tmp/fused_smoke_metrics.json --profile
+	$(PY) -c "import json; from benchmarks import kernels_bench, run; \
+	    run.write_bench_serve({'fused': kernels_bench.run_fused()}, \
+	        path='/tmp/fused_smoke_bench.json')"
+	$(PY) -m repro.obs.regress /tmp/fused_smoke_bench.json \
 	    --history benchmarks/history.jsonl
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench

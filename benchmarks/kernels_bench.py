@@ -10,12 +10,85 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import kvwire
 from repro.kernels import ops
+from repro.kernels import paged_attention as paged_attn
+from repro.models import attention
 from repro.obs import time_fn
 
 
 def _time(fn, reps=3):
     return time_fn(fn, reps=reps)
+
+
+def run_fused(verbose: bool = True) -> dict:
+    """Fused paged-attention vs the gather+dequant+attention baseline.
+
+    One decode step over the wire-format paged pool, kv bits
+    {fp, 8, 4, 2} x context length: the triple round-trip the fused
+    kernel eliminates, timed against the XLA fallback on identical
+    pages.  On a CPU host the fused column runs the interpreter (a
+    correctness harness, orders of magnitude slower than a compiled
+    TPU kernel) — the regress gate compares same-backend history only,
+    so the columns are self-consistent, never cross-backend.
+    """
+    b, kvh, g, d, gs = 2, 2, 2, 64, 16
+    page_size = 16
+    mode = paged_attn.default_mode() if paged_attn.available() else None
+    key = jax.random.key(0)
+    rows = {}
+    for ctx in (128, 512):
+        pps = ctx // page_size
+        n_pages = b * pps + 1                     # page 0 = scratch
+        kf = jax.random.normal(key, (n_pages, page_size, kvh, d),
+                               jnp.float32)
+        vf = jax.random.normal(jax.random.fold_in(key, 1), kf.shape,
+                               jnp.float32)
+        q = jax.random.normal(jax.random.fold_in(key, 2),
+                              (b, 1, kvh, g, d), jnp.float32)
+        table = (1 + jnp.arange(b * pps, dtype=jnp.int32)).reshape(b, pps)
+        pos = jnp.full((b,), ctx - 1, jnp.int32)
+        for bits in (None, 8, 4, 2):
+            if bits is None:
+                k_pg, v_pg = kf, vf
+            else:
+                k_pg = kvwire.quantize_kv(kf, bits, gs)
+                v_pg = kvwire.quantize_kv(vf, bits, gs)
+            label = "fp" if bits is None else f"kv{bits}"
+
+            def baseline(k_pg=k_pg, v_pg=v_pg, bits=bits):
+                kk = kvwire.gather_pages(k_pg, table)
+                vv = kvwire.gather_pages(v_pg, table)
+                if bits is not None:
+                    kk = kvwire.dequantize_kv(kk, d)
+                    vv = kvwire.dequantize_kv(vv, d)
+                return attention.decode_attention(q, kk, vv, pos)
+
+            t = _time(jax.jit(baseline), reps=2)
+            rows[f"paged_attn_{label}_ctx{ctx}_baseline_ms"] = t * 1e3
+            if mode is None:
+                continue                          # no Pallas: XLA-only row
+
+            def fused(k_pg=k_pg, v_pg=v_pg):
+                return paged_attn.paged_attention(
+                    q, k_pg, v_pg, table, pos,
+                    interpret=mode == "interpret")
+
+            t = _time(fused, reps=2)
+            rows[f"paged_attn_{label}_ctx{ctx}_fused_ms"] = t * 1e3
+
+    if verbose:
+        print(f"\n== fused paged-attention vs gather+dequant baseline "
+              f"(fused mode: {mode or 'unavailable'}) ==")
+        for ctx in (128, 512):
+            for label in ("fp", "kv8", "kv4", "kv2"):
+                base = rows[f"paged_attn_{label}_ctx{ctx}_baseline_ms"]
+                fkey = f"paged_attn_{label}_ctx{ctx}_fused_ms"
+                fstr = f"{rows[fkey]:8.2f} ms fused" if fkey in rows \
+                    else "     n/a fused"
+                print(f"  {label:>4} ctx {ctx:4d}: {base:8.2f} ms baseline"
+                      f"  {fstr}")
+    return rows
 
 
 def run(verbose: bool = True) -> dict:
@@ -51,3 +124,4 @@ def run(verbose: bool = True) -> dict:
 
 if __name__ == "__main__":
     run()
+    run_fused()

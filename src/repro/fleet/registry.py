@@ -176,12 +176,15 @@ class FleetRegistry:
 
     def __init__(self, model_cfg, params, *, budget_mb: float | None = None,
                  backend: str = "auto", seed: int = 0,
-                 share_weights: bool = True):
+                 share_weights: bool = True, fused_attention: bool = False):
         self.model_cfg, self.params = model_cfg, params
         self.budget_mb = budget_mb
         self.backend = backend
         self.seed = seed
         self.share_weights = share_weights
+        # host-level, like backend: every tenant's decode runs the fused
+        # paged-attention kernel (manifests describe tenants, not hosts)
+        self.fused_attention = fused_attention
         self.tenants: dict[str, Tenant] = {}
         # packed-leaf dedup across tenants of the one shared checkpoint:
         # quantize_params segment subtrees keyed on (range, position,
@@ -261,7 +264,8 @@ class FleetRegistry:
                 f"but only {self.remaining_bytes() / 2**20:.3f} MiB of the "
                 f"{self.budget_mb:.3f} MiB host budget remain")
         ecfg = dataclasses.replace(spec.engine_config(self.model_cfg),
-                                   backend=self.backend)
+                                   backend=self.backend,
+                                   fused_attention=self.fused_attention)
         build_params = self.params
         if self.share_weights and ecfg.plan is not None:
             # pre-pack through the registry's leaf cache: segments another

@@ -175,7 +175,8 @@ class FleetRouter:
 def build_fleet(manifest: FleetManifest | str, model_cfg, params, *,
                 budget_mb: float | None = None, backend: str = "auto",
                 seed: int = 0, telemetry: FleetTelemetry | None = None,
-                obs=None, on_token=None, on_complete=None) -> FleetRouter:
+                obs=None, on_token=None, on_complete=None,
+                fused_attention: bool = False) -> FleetRouter:
     """Build registry + router from a manifest (path or parsed).
 
     ``budget_mb`` overrides the manifest's budget when given.  Raises
@@ -188,7 +189,8 @@ def build_fleet(manifest: FleetManifest | str, model_cfg, params, *,
         manifest = load_manifest(manifest)
     budget = budget_mb if budget_mb is not None else manifest.budget_mb
     registry = FleetRegistry(model_cfg, params, budget_mb=budget,
-                             backend=backend, seed=seed)
+                             backend=backend, seed=seed,
+                             fused_attention=fused_attention)
     for spec in manifest.tenants:
         registry.register(spec)
     return FleetRouter(registry, telemetry=telemetry, obs=obs,

@@ -79,6 +79,13 @@ def lut_matmul(a_packed, a_scale, a_zmin, w, *, bits: int, group_size: int,
         raise ValueError("LUT path needs activation bits <= 4 (section V.A)")
     m = a_packed.shape[0]
     k, n = w.shape
+    if k % group_size:
+        # the grid covers K // group_size full regions; a ragged tail
+        # would be silently dropped from the product, not just misrounded
+        raise ValueError(
+            f"K={k} is not a multiple of group_size={group_size}: the "
+            f"trailing {k % group_size}-wide partial local region has no "
+            f"grid step and would be dropped from the matmul")
     g = k // group_size
     codes = packing.unpack(a_packed, bits, k)            # (M, K) uint8
 

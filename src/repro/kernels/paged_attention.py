@@ -1,0 +1,338 @@
+"""Fused paged-attention Pallas kernel: flash-decode over wire-format pages.
+
+The XLA paged-decode path pays three HBM round-trips on exactly the data
+the LQ format compressed: gather wire pages into a logical view, dequantize
+that view to a full fp pool copy, then attend over it
+(``models/attention.py`` paged branch).  This kernel fuses all three — the
+page table is a scalar-prefetch operand, so each grid step's BlockSpec
+``index_map`` streams ONE physical page of packed codes (+ per-region
+scale/zmin) straight into VMEM, dequantizes in-register, and folds the page
+into an online-softmax accumulator (the flash-decode recurrence).  HBM
+traffic is the wire bytes, once.
+
+Dequant paths per page (``dequant=``):
+
+  "affine"  unpack codes, ``k = codes * scale + zmin`` per local region,
+            then the q@k / p@v matmuls — the throughput path, any bits.
+  "lut"     bits <= 4: the paper's Table-Lookup trick (section V) applied
+            to attention, reusing the ``core/lut.py`` /
+            ``kernels/lut_matmul.py`` masked-matmul dataflow.  With n-bit
+            codes there are only 2^n distinct values, so per local region
+
+                q . k      = scale * sum_v v * (q @ mask_v) + zmin * sum_j q_j
+                p . v_col  = sum_v v * (p*scale @ mask_v)   + (p @ zmin)
+
+            with ``mask_v = (codes == v)`` a {0,1} matrix — table build and
+            read are adds + binary matmuls, never a materialized fp page.
+  "auto"    "lut" when the pool is quantized at bits <= 4, else "affine"
+            ("fp" pools skip dequant entirely).
+
+Grid ``(B, KV, P)`` — batch and kv-head parallel, the page axis sequential
+("arbitrary") so the m/l/acc VMEM scratch carries the running softmax state
+across pages.  Queries arrive as (B, Lq, KV, G, D) — GQA groups and the
+multi-query run (Lq = k+1, the speculative verify) flatten onto one
+(Lq*G, D) row block so both decode shapes share this kernel.  Masking
+matches ``decode_attention`` over the gathered view: key position
+``p*page_size + r`` is visible to query row i iff it is ``<= pos[b] + i``,
+which also hides scratch-padded table entries (their positions lie past the
+slot's live prefix) — an all-masked page contributes nothing because masked
+probabilities are forced to zero *after* the running-max update.
+
+``interpret=True`` runs the same kernel on CPU (CI parity tests); real-TPU
+deployments should keep D and page_size lane/sublane aligned (see
+``quant_matmul.py`` for the padding idiom).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+try:  # pallas is optional at import time: gate, don't crash (ROADMAP env)
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+    from .pallas_compat import CompilerParams as _CompilerParams
+    _PALLAS_ERR = None
+except Exception as e:  # pragma: no cover - exercised on pallas-less hosts
+    pl = pltpu = _CompilerParams = None
+    _PALLAS_ERR = e
+
+NEG_INF = -1e30
+DEQUANT_MODES = ("auto", "affine", "lut")
+
+
+def available() -> bool:
+    """Whether the Pallas toolchain imported (kernel or interpret mode)."""
+    return pl is not None
+
+
+def default_mode() -> str:
+    """Execution mode for this host: compiled on TPU, interpret elsewhere."""
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def resolve_mode(fused: bool) -> str | None:
+    """Map an engine flag to a kernel mode, falling back to the XLA
+    gather+dequant path (``None``) when Pallas is unavailable."""
+    if not fused or not available():
+        return None
+    return default_mode()
+
+
+def _infer_bits(packed_d: int, d: int) -> int:
+    return {1: 8, 2: 4, 4: 2, 8: 1}[d // packed_d]
+
+
+def dequant_path(bits: int | None, dequant: str = "auto") -> str:
+    """The per-page dequant dataflow a pool format lowers to:
+    ``"fp"`` (no dequant), ``"affine"``, or ``"lut"`` — the ``auto``
+    policy picks LUT whenever the table fits (bits <= 4)."""
+    if dequant not in DEQUANT_MODES:
+        raise ValueError(f"dequant must be one of {DEQUANT_MODES}, "
+                         f"got {dequant!r}")
+    if bits is None:
+        return "fp"
+    lut = dequant == "lut" or (dequant == "auto" and bits <= 4)
+    if lut and bits > 4:
+        raise ValueError("LUT dequant needs kv bits <= 4 (section V.A)")
+    return "lut" if lut else "affine"
+
+
+def _unpack(pk, bits: int, d: int):
+    """In-register unpack of uint8 lanes -> int32 codes (..., d).
+
+    Must match ``core/packing.pack``: code j of a byte sits at shift
+    ``(j % cpb) * bits``.
+    """
+    if bits == 8:
+        return pk.astype(jnp.int32)
+    cpb = 8 // bits
+    shifts = jnp.arange(cpb, dtype=jnp.int32) * bits
+    vals = (pk.astype(jnp.int32)[..., None] >> shifts) & ((1 << bits) - 1)
+    return vals.reshape(*pk.shape[:-1], pk.shape[-1] * cpb)
+
+
+def _row_positions(lqg: int, gq: int, page_size: int, pos_b, p):
+    """(allowed (LqG, ps)) mask for this page: key pos <= query pos."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (lqg, 1), 0)
+    qpos = pos_b + row // gq                                   # (LqG, 1)
+    spos = p * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)                          # (1, ps)
+    return spos <= qpos
+
+
+def _online_step(s, allowed, acc_ref, m_ref, l_ref, pv_fn):
+    """One flash-decode page update; returns nothing (scratch in place).
+
+    ``pv_fn(pmat)`` produces the page's (LqG, D) probability-weighted
+    values.  Masked probabilities are zeroed AFTER the max update: an
+    all-masked page has m == NEG_INF and exp(s - m) == 1 there, which
+    would otherwise poison l with phantom mass.
+    """
+    s = jnp.where(allowed, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    pmat = jnp.where(allowed, jnp.exp(s - m_new), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + pmat.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + pv_fn(pmat)
+    m_ref[...] = m_new
+
+
+def _kernel_fp(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+               acc_ref, m_ref, l_ref, *, page_size: int, gq: int,
+               p_steps: int, sm_scale: float):
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                        # (LqG, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)                  # (ps, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * sm_scale
+    allowed = _row_positions(q.shape[0], gq, page_size,
+                             pos_ref[pl.program_id(0)], p)
+    _online_step(s, allowed, acc_ref, m_ref, l_ref,
+                 lambda pmat: jax.lax.dot_general(
+                     pmat, v, (((1,), (0,)), ((), ())),
+                     preferred_element_type=jnp.float32))
+
+    @pl.when(p == p_steps - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+def _kernel_quant(tbl_ref, pos_ref, q_ref, kp_ref, ks_ref, kz_ref,
+                  vp_ref, vs_ref, vz_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bits: int, group_size: int, page_size: int, gq: int,
+                  p_steps: int, sm_scale: float, lut: bool, d: int):
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    gr = d // group_size                                       # regions
+    q = q_ref[0, 0].astype(jnp.float32)                        # (LqG, D)
+    lqg = q.shape[0]
+    k_codes = _unpack(kp_ref[0, :, 0, :], bits, d)             # (ps, D) i32
+    k_sc = ks_ref[0, :, 0, :]                                  # (ps, Gr)
+    k_zm = kz_ref[0, :, 0, :]
+    v_codes = _unpack(vp_ref[0, :, 0, :], bits, d)
+    v_sc = vs_ref[0, :, 0, :]
+    v_zm = vz_ref[0, :, 0, :]
+
+    if lut:
+        # table-lookup scores: s*sum_v v*(q_g @ mask_v) + zmin*(q row sums)
+        qg = q.reshape(lqg, gr, group_size)
+        qsum = qg.sum(axis=-1)                                 # (LqG, Gr)
+        kc = k_codes.reshape(page_size, gr, group_size)
+        code_dot = jnp.zeros((lqg, page_size, gr), jnp.float32)
+        for vcode in range(1, 1 << bits):                      # v=0 adds 0
+            mask_v = (kc == vcode).astype(jnp.float32)
+            code_dot += jnp.float32(vcode) * jnp.einsum(
+                "lgj,sgj->lsg", qg, mask_v,
+                preferred_element_type=jnp.float32)
+        s = (code_dot * k_sc[None]).sum(axis=-1) \
+            + jax.lax.dot_general(qsum, k_zm, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32)
+    else:
+        kf = (k_codes.astype(jnp.float32)
+              .reshape(page_size, gr, group_size)
+              * k_sc[..., None] + k_zm[..., None]).reshape(page_size, d)
+        s = jax.lax.dot_general(q, kf, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    s = s * sm_scale
+    allowed = _row_positions(lqg, gq, page_size,
+                             pos_ref[pl.program_id(0)], p)
+
+    if lut:
+        vc = v_codes.reshape(page_size, gr, group_size)
+
+        def pv_fn(pmat):
+            # p@v per region: sum_v v*((p*scale) @ mask_v) + (p @ zmin)
+            ps_mat = pmat[:, :, None] * v_sc[None]             # (LqG,ps,Gr)
+            pv = jnp.zeros((lqg, gr, group_size), jnp.float32)
+            for vcode in range(1, 1 << bits):
+                mask_v = (vc == vcode).astype(jnp.float32)
+                pv += jnp.float32(vcode) * jnp.einsum(
+                    "lsg,sgj->lgj", ps_mat, mask_v,
+                    preferred_element_type=jnp.float32)
+            pz = jax.lax.dot_general(pmat, v_zm, (((1,), (0,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+            return (pv + pz[..., None]).reshape(lqg, d)
+    else:
+        vf = (v_codes.astype(jnp.float32)
+              .reshape(page_size, gr, group_size)
+              * v_sc[..., None] + v_zm[..., None]).reshape(page_size, d)
+
+        def pv_fn(pmat):
+            return jax.lax.dot_general(pmat, vf, (((1,), (0,)), ((), ())),
+                                       preferred_element_type=jnp.float32)
+
+    _online_step(s, allowed, acc_ref, m_ref, l_ref, pv_fn)
+
+    @pl.when(p == p_steps - 1)
+    def _flush():
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("dequant", "interpret"))
+def paged_attention(q, k_pages, v_pages, page_table, pos, *,
+                    dequant: str = "auto", interpret: bool = False):
+    """Fused flash-decode over a paged pool, wire format and all.
+
+    q (B, Lq, KV, G, D); ``k_pages``/``v_pages`` are one pool leaf — fp
+    (n_pages, page_size, KV, D) arrays or LQ wire dicts with
+    (n_pages, page_size, KV, D/cpb) packed codes (``core/kvwire.py``);
+    page_table (B, P) int32 physical page ids, in table order (position t
+    lives at table entry t // page_size); pos (B,) int32 — the absolute
+    position of each slot's FIRST query row (query i attends ``<= pos+i``).
+    Returns (B, Lq, KV, G, D) in q's dtype.  Token parity with
+    ``gather_pages -> dequantize_kv -> decode_attention`` is the contract
+    (tests/test_paged_attention.py); bit-identity is not, since the online
+    softmax re-associates the reduction.
+    """
+    if pl is None:
+        raise RuntimeError(f"Pallas unavailable: {_PALLAS_ERR!r}; use the "
+                           "XLA gather+dequant path instead")
+    b, lq, kvh, gq, d = q.shape
+    lqg = lq * gq
+    n_tbl = page_table.shape[1]
+    quant = isinstance(k_pages, dict)
+    sm_scale = d ** -0.5
+
+    qm = q.transpose(0, 2, 1, 3, 4).reshape(b, kvh, lqg, d)
+    qm = qm.astype(jnp.float32)
+    tbl = page_table.astype(jnp.int32)
+    posb = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+
+    def q_map(bi, h, p, tbl_ref, pos_ref):
+        return (bi, h, 0, 0)
+
+    def page_map(bi, h, p, tbl_ref, pos_ref):
+        return (tbl_ref[bi, p], 0, h, 0)
+
+    if quant:
+        packed_d = k_pages["packed"].shape[-1]
+        gr = k_pages["scale"].shape[-1]
+        bits = _infer_bits(packed_d, d)
+        group_size = d // gr
+        page_size = k_pages["packed"].shape[1]
+        lut = dequant_path(bits, dequant) == "lut"
+        kernel = functools.partial(
+            _kernel_quant, bits=bits, group_size=group_size,
+            page_size=page_size, gq=gq, p_steps=n_tbl, sm_scale=sm_scale,
+            lut=lut, d=d)
+        leaf_specs = [
+            pl.BlockSpec((1, page_size, 1, packed_d), page_map),
+            pl.BlockSpec((1, page_size, 1, gr), page_map),
+            pl.BlockSpec((1, page_size, 1, gr), page_map),
+        ]
+        in_specs = [pl.BlockSpec((1, 1, lqg, d), q_map)] \
+            + leaf_specs + leaf_specs
+        operands = (qm, k_pages["packed"], k_pages["scale"],
+                    k_pages["zmin"], v_pages["packed"], v_pages["scale"],
+                    v_pages["zmin"])
+        name = f"paged_attention_{'lut' if lut else 'affine'}_b{bits}"
+    else:
+        dequant_path(None, dequant)            # still validates the mode
+        page_size = k_pages.shape[1]
+        kernel = functools.partial(
+            _kernel_fp, page_size=page_size, gq=gq, p_steps=n_tbl,
+            sm_scale=sm_scale)
+        in_specs = [
+            pl.BlockSpec((1, 1, lqg, d), q_map),
+            pl.BlockSpec((1, page_size, 1, d), page_map),
+            pl.BlockSpec((1, page_size, 1, d), page_map),
+        ]
+        operands = (qm, k_pages, v_pages)
+        name = "paged_attention_fp"
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=(b, kvh, n_tbl),
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, 1, lqg, d), q_map),
+            scratch_shapes=[pltpu.VMEM((lqg, d), jnp.float32),
+                            pltpu.VMEM((lqg, 1), jnp.float32),
+                            pltpu.VMEM((lqg, 1), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, kvh, lqg, d), jnp.float32),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+        name=name,
+    )(tbl, posb, *operands)
+    out = out.reshape(b, kvh, lq, gq, d).transpose(0, 2, 1, 3, 4)
+    return out.astype(q.dtype)

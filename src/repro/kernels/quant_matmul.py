@@ -95,6 +95,13 @@ def quant_matmul(x, packed, scale, zmin, *, bits: int, group_size: int,
     m, k = x.shape
     cpb = packing.codes_per_byte(bits)
     n = packed.shape[1]
+    if k % group_size:
+        # same hazard as lut_matmul: the K grid walks whole local regions,
+        # so a ragged tail region would silently vanish from the product
+        raise ValueError(
+            f"K={k} is not a multiple of group_size={group_size}: the "
+            f"trailing {k % group_size}-wide partial local region has no "
+            f"grid step and would be dropped from the matmul")
     if bk is None:
         bk = _pick_bk(k, group_size)
     if k % bk or bk % group_size:

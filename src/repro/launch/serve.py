@@ -258,7 +258,8 @@ def _fleet(args):
     cfg = configs.smoke(manifest.arch)
     params = transformer.init_params(cfg, jax.random.key(0))
     router = build_fleet(manifest, cfg, params, budget_mb=args.budget_mb,
-                         backend="ref")
+                         backend="ref",
+                         fused_attention=args.fused_attention)
     print(router.registry.describe())
 
     rng = jax.random.key(3)
@@ -352,6 +353,15 @@ def main():
     ap.add_argument("--max-slots", type=int, default=4)
     ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--n-pages", type=int, default=128)
+    ap.add_argument("--fused-attention", action="store_true",
+                    help="paged decode through the fused flash-decode "
+                         "kernel (kernels/paged_attention.py): wire pages "
+                         "stream through VMEM and dequantize in-register "
+                         "(LUT path at kv bits <= 4) instead of gather -> "
+                         "fp pool view -> attend; compiled on TPU, "
+                         "interpret-mode elsewhere, with automatic "
+                         "fallback to the XLA gather path when Pallas is "
+                         "unavailable; --continuous and --fleet")
     ap.add_argument("--spec-plan", default=None, metavar="DRAFT.json",
                     help="speculative decoding (with --continuous): a "
                          "low-bit draft QuantPlan of the same checkpoint "
@@ -443,11 +453,15 @@ def main():
         from repro.plan import QuantPlan
         plan = QuantPlan.load(args.plan)
         print(plan.describe(cfg))
+    if args.fused_attention and not args.continuous:
+        ap.error("--fused-attention fuses the *paged* decode path; use it "
+                 "with --continuous or --fleet")
     ecfg = EngineConfig(max_len=args.prompt_len + args.steps + 8,
                         kv_bits=args.kv_bits, kv_group=args.kv_group,
                         weight_scheme=args.scheme, a_bits=args.a_bits,
                         plan=plan, backend="ref",
-                        temperature=args.temperature)
+                        temperature=args.temperature,
+                        fused_attention=args.fused_attention)
     if args.continuous:
         print(f"arch={args.arch} scheme={args.scheme} plan={args.plan} "
               f"a_bits={args.a_bits} kv_bits={args.kv_bits}")

@@ -26,6 +26,7 @@ from . import layers
 from .layers import QuantPolicy, NO_QUANT
 from repro.core import kvwire as kvcache
 from repro.distributed.actshard import constrain
+from repro.kernels import paged_attention as paged_attn
 
 NEG_INF = -1e30
 
@@ -298,11 +299,14 @@ def decode_attention(q, k_cache, v_cache, pos, *, window: int | None = None,
         valid &= spos[None, None, :] > (qpos[..., None] - window)
     if chunk is not None:
         valid &= spos[None, None, :] >= (qpos[..., None] // chunk) * chunk
-    s = jnp.einsum("bqkgd,bskd->bkgqs", q.astype(jnp.float32),
-                   k_cache.astype(jnp.float32)) * (d ** -0.5)
+    # keep caches in their storage dtype: preferred_element_type gives the
+    # f32 accumulation without materializing an upcast (B, S, KV, D) copy
+    s = jnp.einsum("bqkgd,bskd->bkgqs", q, k_cache,
+                   preferred_element_type=jnp.float32) * (d ** -0.5)
     s = jnp.where(valid[:, None, None], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache.astype(jnp.float32))
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
     return out.astype(q.dtype)
 
 
@@ -354,7 +358,8 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
                window: int | None = None, qk_norm: bool = False,
                rope: bool = True, rope_theta: float = 1e4,
                positions=None, kv_src=None, cache=None, cache_pos=None,
-               page_table=None, policy: QuantPolicy = NO_QUANT):
+               page_table=None, fused: str | None = None,
+               policy: QuantPolicy = NO_QUANT):
     """One attention block.
 
     kind: 'full' | 'local' (sliding window) | 'chunked' (within-chunk) |
@@ -367,6 +372,10 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
       per-request (B, S, KV, ...) buffer, cache_pos is a (B,) per-slot
       position vector, and the step writes this token's K/V into its page
       before attending over the gathered page views (kind 'full' only).
+    fused: None (XLA gather+dequant path) or 'pallas'/'interpret' — run the
+      paged branch through the fused flash-decode kernel
+      (``kernels/paged_attention.py``), which streams wire pages through
+      VMEM and dequantizes in-register instead of materializing the pool.
     Returns (out, new_cache).
     """
     b, l, _ = x.shape
@@ -416,6 +425,13 @@ def attn_apply(p, x, *, n_heads: int, n_kv: int, head_dim: int,
         kw = dict(bits=qbits, group_size=qgroup) if quant else {}
         qk = kvcache.scatter_tokens(cache["k"], k, page_idx, row, **kw)
         qv = kvcache.scatter_tokens(cache["v"], v, page_idx, row, **kw)
+        if fused is not None:
+            new_cache = {"k": qk, "v": qv}
+            out = paged_attn.paged_attention(
+                q, qk, qv, page_table, cache_pos,
+                interpret=fused == "interpret")
+            out = out.reshape(b, l, n_heads * head_dim)
+            return layers.dense_apply(p["wo"], out, policy), new_cache
         if quant:
             k_cache = kvcache.dequantize_kv(
                 kvcache.gather_pages(qk, page_table), head_dim, q.dtype)

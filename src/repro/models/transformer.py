@@ -111,7 +111,7 @@ def _attn_kind(mixer: str):
 
 def block_apply(p, x, spec, cfg: ModelConfig, *, policy: QuantPolicy,
                 cache=None, cache_pos=None, enc_out=None, positions=None,
-                page_table=None):
+                page_table=None, fused=None):
     """Returns (x, new_cache, aux)."""
     mixer, ffn = spec
     aux = jnp.zeros((), jnp.float32)
@@ -127,7 +127,7 @@ def block_apply(p, x, spec, cfg: ModelConfig, *, policy: QuantPolicy,
             head_dim=cfg.head_dim, kind=kind, causal=causal, window=window,
             qk_norm=cfg.qk_norm, rope=cfg.rope, rope_theta=cfg.rope_theta,
             positions=positions, cache=self_cache, cache_pos=cache_pos,
-            page_table=page_table, policy=policy)
+            page_table=page_table, fused=fused, policy=policy)
         if cache is not None:
             new_cache["self"] = sc
     elif mixer == "mamba2":
@@ -264,7 +264,7 @@ def _maybe_remat(fn, cfg: ModelConfig, training: bool):
 def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
                  policy: QuantPolicy, caches=None, cache_pos=None,
                  enc_out=None, positions=None, page_table=None,
-                 training=False):
+                 fused=None, training=False):
     """Run scan-stacked superblocks + tail.  Returns (x, caches, aux).
 
     With a uniform :class:`QuantPolicy` (and unsegmented params) every
@@ -278,7 +278,7 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
         return _stack_apply_planned(
             params, x, cfg, pattern, policy=policy, caches=caches,
             cache_pos=cache_pos, enc_out=enc_out, positions=positions,
-            page_table=page_table, training=training)
+            page_table=page_table, fused=fused, training=training)
     aux_total = jnp.zeros((), jnp.float32)
 
     def body(carry, xs):
@@ -291,7 +291,7 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
                                       policy=policy, cache=cj,
                                       cache_pos=cache_pos, enc_out=enc_out,
                                       positions=positions,
-                                      page_table=page_table)
+                                      page_table=page_table, fused=fused)
             xx = constrain(xx, "batch", "seq", "embed")
             new_caches.append(nc)
         out_caches = tuple(new_caches) if blk_caches is not None else None
@@ -311,7 +311,8 @@ def _stack_apply(params, x, cfg: ModelConfig, pattern, *,
         ct = caches["tail"][t] if caches is not None else None
         x, nc, aux = block_apply(tp, x, spec, cfg, policy=policy, cache=ct,
                                  cache_pos=cache_pos, enc_out=enc_out,
-                                 positions=positions, page_table=page_table)
+                                 positions=positions, page_table=page_table,
+                                 fused=fused)
         aux_total = aux_total + aux
         new_tail.append(nc)
 
@@ -353,7 +354,8 @@ def _combined_segments(per_layer, kv_list, p_len: int, n_super: int) -> list:
 
 def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
                          caches=None, cache_pos=None, enc_out=None,
-                         positions=None, page_table=None, training=False):
+                         positions=None, page_table=None, fused=None,
+                         training=False):
     """Segmented stack walk: one lax.scan per run of identically-configured
     superblocks, per-layer policies for the tail.  Cache layout is
     IDENTICAL to the uniform path — segments slice and re-concatenate the
@@ -432,7 +434,8 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
                                           cache_pos=cache_pos,
                                           enc_out=enc_out,
                                           positions=positions,
-                                          page_table=page_table)
+                                          page_table=page_table,
+                                          fused=fused)
                 xx = constrain(xx, "batch", "seq", "embed")
                 new_caches.append(nc)
             out = tuple(new_caches) if blk_caches is not None else None
@@ -476,7 +479,7 @@ def _stack_apply_planned(params, x, cfg: ModelConfig, pattern, *, policy,
                                      policy=per_layer[n_super * p_len + t],
                                      cache=ct, cache_pos=cache_pos,
                                      enc_out=enc_out, positions=positions,
-                                     page_table=page_table)
+                                     page_table=page_table, fused=fused)
         aux_total = aux_total + aux
         new_tail.append(nc)
 
@@ -716,7 +719,7 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *,
 
 
 def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
-                      pos, *, policy: QuantPolicy = NO_QUANT):
+                      pos, *, policy: QuantPolicy = NO_QUANT, fused=None):
     """One continuous-batching decode step over a paged KV pool.
 
     tokens (B, 1) int32; pages {'super': ..., 'tail': ...} with shared
@@ -724,6 +727,8 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
     physical page ids per slot (scratch page 0 pads unused entries); pos
     (B,) int32 — the absolute position each slot's token is written at.
     Inactive slots point at the scratch page and are masked by the caller.
+    ``fused`` ('pallas' | 'interpret' | None) routes every layer's
+    attention through the fused paged kernel instead of gather+dequant.
     Returns (logits (B, 1, V), new pages).
     """
     if cfg.pos_embed == "learned":
@@ -736,7 +741,7 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
             params["decoder"], x, cfg, cfg.pattern, policy=policy,
             caches=_layer_caches(pages),
             cache_pos=pos, enc_out=None, positions=pos[:, None],
-            page_table=page_table)
+            page_table=page_table, fused=fused)
     with jax.named_scope("lm_head"):
         x = _norm_apply(cfg, params["final_norm"], x)
         logits = _logits(params, cfg, x, policy)
@@ -744,7 +749,7 @@ def paged_decode_step(params, cfg: ModelConfig, tokens, pages, page_table,
 
 
 def paged_decode_multi(params, cfg: ModelConfig, tokens, pages, page_table,
-                       pos, *, policy: QuantPolicy = NO_QUANT):
+                       pos, *, policy: QuantPolicy = NO_QUANT, fused=None):
     """Length-L batched decode over the paged pool — the speculative
     verify step (one compiled forward scores all L candidate tokens).
 
@@ -769,7 +774,7 @@ def paged_decode_multi(params, cfg: ModelConfig, tokens, pages, page_table,
             params["decoder"], x, cfg, cfg.pattern, policy=policy,
             caches=_layer_caches(pages),
             cache_pos=pos, enc_out=None, positions=positions,
-            page_table=page_table)
+            page_table=page_table, fused=fused)
     with jax.named_scope("lm_head"):
         x = _norm_apply(cfg, params["final_norm"], x)
         logits = _logits(params, cfg, x, policy)

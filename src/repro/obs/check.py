@@ -34,6 +34,11 @@ NUMERICS_HISTOGRAMS = ("quality_shadow_kl",)
 NUMERICS_GAUGE_PREFIXES = ("quality_shadow_top1_agree", "kv_dequant_mse",
                            "kv_dequant_maxabs", "costmodel_residual")
 PROFILE_PHASES = ("gather", "dequant", "attention", "lm_head", "other")
+# a fused-attention engine (EngineConfig.fused_attention) runs gather+
+# dequant+attention as ONE kernel, so its honest decomposition is a
+# single fused_attention phase — check.py accepts either breakdown,
+# keyed on which phases the profiler actually recorded
+FUSED_PROFILE_PHASES = ("fused_attention", "lm_head", "other")
 PROFILE_GAUGES = ("serve_mfu", "serve_hbm_util")
 # phase replays run in standalone jits with per-call dispatch overhead;
 # on a tiny smoke model that overhead dwarfs the compute, so the phase
@@ -122,7 +127,9 @@ def check_profile(trace: dict, snap: dict, *, spec: bool = False
     """Validate the perf-attribution plane (``--profile``); returns the
     metric keys found.
 
-    Requires every phase of ``repro.obs.profile.PHASES`` in the
+    Requires every phase of the recorded decomposition (the XLA
+    gather/dequant/attention triplet, or :data:`FUSED_PROFILE_PHASES`
+    when the profiler recorded a ``fused_attention`` phase) in the
     ``serve_phase_ms`` histograms with non-zero counts, the utilization
     gauges in ``(0, 1]``, the ``profile`` + ``phase:*`` spans in the
     trace, and the phase-time sum within :data:`PHASE_SUM_BAND` of the
@@ -132,7 +139,9 @@ def check_profile(trace: dict, snap: dict, *, spec: bool = False
     gauges = snap.get("gauges", {})
     found = []
     phase_sum = 0.0
-    for phase in PROFILE_PHASES:
+    fused = any(k.startswith("serve_phase_ms{")
+                and 'phase="fused_attention"' in k for k in hists)
+    for phase in FUSED_PROFILE_PHASES if fused else PROFILE_PHASES:
         frag = f'phase="{phase}"'
         keys = [k for k in hists
                 if k.startswith("serve_phase_ms{") and frag in k]

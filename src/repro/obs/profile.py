@@ -20,6 +20,10 @@ profiling on:
   cache, and the ``lm_head`` (final norm + logits), each
   ``block_until_ready``-bounded, plus one full decode-step replay through
   the engine's own already-compiled jit (same shapes — no new trace).
+  A fused engine (``EngineConfig.fused_attention``) replays ONE
+  ``fused_attention`` phase per stack run instead of the gather/dequant/
+  attention triplet — the decomposition no longer exists on device, and
+  pretending it does would mis-attribute the step.
   Histograms ``serve_phase_ms{phase=...,layer_run=...}`` per stack run
   (``run0``/``run1``/.../``tail0``; ``all`` for stack-wide phases), with
   the unattributed remainder ``phase="other"`` defined as
@@ -48,10 +52,16 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kvwire
+from repro.kernels import paged_attention as paged_attn
 from repro.models import attention, transformer
 from repro.obs.metrics import Stopwatch
 
+# the two decompositions a decode step can attribute to: the XLA path
+# splits into gather/dequant/attention; a fused engine
+# (EngineConfig.fused_attention) runs all three as ONE kernel, so its
+# honest attribution is a single fused_attention phase per stack run
 PHASES = ("gather", "dequant", "attention", "lm_head", "other")
+FUSED_PHASES = ("fused_attention", "lm_head", "other")
 
 
 def annotate(name: str):
@@ -207,6 +217,35 @@ class PhaseProfiler:
         self._jits[label] = jits
         return jits
 
+    def _fused_jit(self, label: str, stacked: bool):
+        """Standalone fused-kernel replay for one stack run — the single
+        phase a fused engine's step actually executes per layer."""
+        key = ("fused", label)
+        if key in self._jits:
+            return self._jits[key]
+        interpret = self.core.fused_mode == "interpret"
+
+        def fused(kv_list, q, table, pos):
+            outs = []
+            for kv in kv_list:
+                k, v = kv["k"], kv["v"]
+                if stacked:
+                    lead = (k["packed"] if kvwire.is_quant_kv(k)
+                            else k).shape[0]
+                    outs.extend(paged_attn.paged_attention(
+                        q, jax.tree.map(lambda a, i=i: a[i], k),
+                        jax.tree.map(lambda a, i=i: a[i], v),
+                        table, pos, interpret=interpret)
+                        for i in range(lead))
+                else:
+                    outs.append(paged_attn.paged_attention(
+                        q, k, v, table, pos, interpret=interpret))
+            return outs
+
+        jit = jax.jit(fused)
+        self._jits[key] = jit
+        return jit
+
     def _lm_head_jit(self):
         if self._lm_head is None:
             cfg, policy = self.cfg, self.core.policy
@@ -250,10 +289,18 @@ class PhaseProfiler:
 
         with self.obs.tracer.span("profile", step=self.steps,
                                   n_slots=int(live.sum())):
+            fused_mode = getattr(self.core, "fused_mode", None)
             for label, blocks, stacked in _pool_runs(pool.pages):
                 kvs = _run_kv(blocks)
                 if not kvs:
                     continue            # recurrent mixer: no paged cache
+                if fused_mode is not None:
+                    with self.obs.tracer.span("phase:fused_attention",
+                                              layer_run=label):
+                        _, ms = self._timed(self._fused_jit(label, stacked),
+                                            kvs, self._q, jtable, jpos)
+                    record("fused_attention", label, ms)
+                    continue
                 gather, dequant, attend = self._phase_jits(label, kvs,
                                                            stacked)
                 with self.obs.tracer.span("phase:gather", layer_run=label):

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import kvwire, schemes
+from repro.kernels import paged_attention as paged_attn
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.models.layers import QuantPolicy, NO_QUANT
@@ -61,6 +62,12 @@ class EngineConfig:
     backend: str = "auto"
     temperature: float = 0.0             # 0 => greedy
     top_k: int | None = None
+    # paged decode through the fused flash-decode kernel
+    # (kernels/paged_attention.py): wire pages stream through VMEM and
+    # dequantize in-register instead of gather -> fp pool view -> attend.
+    # Compiled on TPU, interpret-mode elsewhere; silently falls back to
+    # the XLA gather path when Pallas is unavailable.
+    fused_attention: bool = False
 
 
 class Engine:
@@ -201,6 +208,10 @@ class PagedEngine(Engine):
             raise ValueError("pcfg.max_context exceeds ecfg.max_len")
         self.pcfg = pcfg
         self._kvq = self._kv_quant()
+        # None (XLA gather+dequant) | "pallas" | "interpret"; a static
+        # closure value, so toggling it is a different engine, never a
+        # retrace of a running one
+        self.fused_mode = paged_attn.resolve_mode(ecfg.fused_attention)
         self._prefill_paged = jax.jit(self._prefill_paged_impl)
         self._step_paged = jax.jit(self._step_paged_impl)
         self._multi_paged = jax.jit(self._multi_paged_impl)
@@ -241,13 +252,13 @@ class PagedEngine(Engine):
     def _step_paged_impl(self, params, pages, tokens, page_table, pos, key):
         logits, pages = transformer.paged_decode_step(
             params, self.cfg, tokens[:, None], pages, page_table, pos,
-            policy=self.policy)
+            policy=self.policy, fused=self.fused_mode)
         return self._sample(logits[:, -1], key), pages
 
     def _multi_paged_impl(self, params, pages, tokens, page_table, pos):
         logits, pages = transformer.paged_decode_multi(
             params, self.cfg, tokens, pages, page_table, pos,
-            policy=self.policy)
+            policy=self.policy, fused=self.fused_mode)
         return jnp.argmax(logits, axis=-1).astype(jnp.int32), pages
 
     # --------------------------------------------------------------- host

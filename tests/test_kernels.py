@@ -144,6 +144,35 @@ def test_lut_matmul_interpret_vs_ref(bits, m, k, n, gs):
                                rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("k,gs", [(96, 64), (130, 32), (100, 128)])
+def test_lut_matmul_rejects_ragged_tail_region(k, gs):
+    """Regression: a K not divisible by group_size used to silently drop
+    the trailing partial local region from the product (the K grid walks
+    whole regions only).  It must be a loud ValueError instead."""
+    from repro.kernels.lut_matmul import lut_matmul as raw_lut
+    bits, m, n = 2, 4, 8
+    cpb = 8 // bits
+    a_packed = jnp.zeros((m, -(-k // cpb)), jnp.uint8)
+    a_scale = jnp.ones((m, -(-k // gs)), jnp.float32)
+    w = jnp.ones((k, n), jnp.float32)
+    with pytest.raises(ValueError, match="dropped"):
+        raw_lut(a_packed, a_scale, a_scale, w, bits=bits, group_size=gs)
+
+
+@pytest.mark.parametrize("k,gs", [(96, 64), (130, 32)])
+def test_quant_matmul_rejects_ragged_tail_region(k, gs):
+    """Same hazard audit on the dequant-matmul kernel: the ragged tail
+    must fail loudly before any grid arithmetic."""
+    from repro.kernels.quant_matmul import quant_matmul as raw_qm
+    bits, m, n = 8, 4, 8
+    x = jnp.ones((m, k), jnp.float32)
+    packed = jnp.zeros((k, n), jnp.uint8)
+    g = -(-k // gs)
+    with pytest.raises(ValueError, match="dropped"):
+        raw_qm(x, packed, jnp.ones((g, n)), jnp.zeros((g, n)),
+               bits=bits, group_size=gs)
+
+
 def test_lut_equals_dequant_matmul():
     """LUT forward == dequantized-activation matmul (paper eq. 8)."""
     x = _x(8, 256, seed=50)

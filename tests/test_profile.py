@@ -189,6 +189,42 @@ class TestCheckProfile:
 
 
 # ---------------------------------------------------------------------------
+# fused engine: honest single-phase attribution
+# ---------------------------------------------------------------------------
+
+def test_fused_engine_profiles_single_fused_phase(params, tmp_path):
+    """A fused engine runs gather+dequant+attention as one kernel, so the
+    probe must record ONE ``fused_attention`` phase per stack run — never
+    the XLA triplet — and the artifacts must pass ``check --profile``
+    under that decomposition, tokens and compile count untouched."""
+    from repro.kernels import paged_attention as paged_attn
+    if not paged_attn.available():
+        pytest.skip("Pallas unavailable: no fused mode on this host")
+    ref = _drive(_server(params))
+    obs = Observability()
+    ecfg = EngineConfig(max_len=32, kv_bits=8, kv_group=16, backend="ref",
+                        fused_attention=True)
+    pcfg = PagedConfig(max_slots=2, page_size=4, n_pages=24,
+                       max_context=32)
+    server = Server(TINY, params, ecfg, pcfg, seed=0, obs=obs)
+    server.attach_profiler(PhaseProfiler(obs, TINY, server.engine,
+                                         every_n_steps=2))
+    out = _drive(server)
+    assert out == ref                          # profiling + fusion: no drift
+    assert server.engine.decode_compilations == 1
+    record_utilization(obs, TINY, server.engine, server.pool)
+    snap = obs.metrics.snapshot()
+    hists = snap["histograms"]
+    assert any('phase="fused_attention"' in k for k in hists)
+    for phase in ("gather", "dequant", "attention"):
+        assert not any(f'phase="{phase}"' in k for k in hists), \
+            f"fused probe still records the XLA phase {phase!r}"
+    tp = tmp_path / "trace.json"
+    obs.save_trace(str(tp))
+    check_profile(json.loads(tp.read_text()), snap)
+
+
+# ---------------------------------------------------------------------------
 # speculative engine: profile through the verifier
 # ---------------------------------------------------------------------------
 
