@@ -2,7 +2,8 @@
 PY := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python
 
 .PHONY: test smoke quickstart serve-demo bench plan-smoke kv-plan-smoke \
-	fleet-smoke spec-smoke obs-smoke numerics-smoke perf-smoke fused-smoke
+	fleet-smoke spec-smoke obs-smoke numerics-smoke perf-smoke \
+	fused-smoke slo-smoke
 
 test:        ## tier-1: the full pytest suite
 	$(PY) -m pytest -x -q
@@ -102,6 +103,26 @@ fused-smoke: ## fused paged-attention serve + profile + bench regress gate
 	        path='/tmp/fused_smoke_bench.json')"
 	$(PY) -m repro.obs.regress /tmp/fused_smoke_bench.json \
 	    --history benchmarks/history.jsonl
+
+slo-smoke:   ## SLO plane: fleet serve under a 2-tenant SLO manifest,
+	##           validate + gate the report, then prove the gate trips
+	$(PY) -m repro.launch.plan --arch llama3.2-1b \
+	    --schemes lq8w,lq4w,lq2w --budget-mb 0.06 \
+	    --out examples/fleet_plan_smoke.json
+	$(PY) -m repro.launch.serve --fleet examples/fleet_smoke.json \
+	    --fleet-requests 2 --prompt-len 12 --steps 6 \
+	    --slo-report /tmp/slo_smoke_report.json \
+	    --trace-out /tmp/slo_smoke_trace.json \
+	    --metrics-out /tmp/slo_smoke_metrics.json \
+	    --flight-out /tmp/slo_smoke_flight.json
+	$(PY) -m repro.obs.check /tmp/slo_smoke_trace.json \
+	    /tmp/slo_smoke_metrics.json --slo /tmp/slo_smoke_report.json
+	$(PY) -m repro.obs.slo /tmp/slo_smoke_report.json
+	$(PY) -m repro.obs.slo --demo-breach /tmp/slo_smoke_breach.json
+	@$(PY) -m repro.obs.slo /tmp/slo_smoke_breach.json; st=$$?; \
+	    test $$st -eq 1 || \
+	    { echo "expected breach gate to exit 1, got $$st"; exit 1; }
+	@echo "slo-smoke ok: healthy report passes, injected breach trips"
 
 fleet-smoke: ## two-tenant fleet: plan one tenant, route a manifest, bench
 	$(PY) -m repro.launch.plan --arch llama3.2-1b \

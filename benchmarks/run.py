@@ -52,6 +52,13 @@ def write_bench_serve(results: dict, path=None, history_path=None
         out["serve_throughput"] = {
             k: v for k, v in results["serve"].items()
             if k.endswith(_SERVE_KEYS)}
+        # SLO-compliance fractions (share of requests/tokens inside the
+        # benchmark's TTFT/ITL targets) ride along under their own
+        # section; the regress gate's "attainment" band guards them
+        slo = {k: v for k, v in results["serve"].items()
+               if k.endswith("_attainment")}
+        if slo:
+            out["slo"] = slo
     if "spec" in results:
         out["spec_decode"] = {
             k: v for k, v in results["spec"].items()

@@ -3,9 +3,11 @@
 Sweeps request arrival rate (one new request every `arrival` decode steps)
 across 8/4/2-bit quantized KV pools, reporting decode tokens/sec, TTFT
 and inter-token-latency p50/p95 (from a per-cell
-:class:`repro.obs.Observability` attached after jit warmup), mean and
-peak pool occupancy, and pool bytes — the serving-side counterpart of the
-paper's memory-pressure analysis.  Wall times on the CPU host are
+:class:`repro.obs.Observability` attached after jit warmup), SLO
+attainment (fraction of TTFT/ITL samples inside the benchmark targets,
+via the same bucket-conservative ``good_fraction`` the SLO tracker
+uses), mean and peak pool occupancy, and pool bytes — the serving-side
+counterpart of the paper's memory-pressure analysis.  Wall times on the CPU host are
 indicative only (the kernels target TPU); occupancy and bytes are exact.
 
 Run:  PYTHONPATH=src python -m benchmarks.serve_throughput
@@ -20,6 +22,7 @@ import numpy as np
 from repro.models import transformer
 from repro.models.config import ModelConfig
 from repro.obs import Observability, Stopwatch
+from repro.obs.slo import good_fraction
 from repro.serve import EngineConfig, PagedConfig, RequestParams, Server
 
 CFG = ModelConfig(name="serve-bench", family="dense", n_layers=4,
@@ -29,6 +32,11 @@ CFG = ModelConfig(name="serve-bench", family="dense", n_layers=4,
 N_REQ, MAX_NEW = 8, 16
 ARRIVALS = (1, 2, 4)          # decode steps between request arrivals
 KV_BITS = (8, 4, 2)
+# generous host-CPU SLO targets: the attainment columns exist to catch
+# regressions in the tail (via the repro.obs.regress gate), not to
+# grade a TPU-class latency budget on the CPU host
+SLO_TTFT_MS = 2000.0
+SLO_ITL_MS = 500.0
 
 
 def _run_cell(params, kv_bits: int, arrival: int) -> dict:
@@ -68,6 +76,8 @@ def _run_cell(params, kv_bits: int, arrival: int) -> dict:
             "ttft_p95_ms": ttft.percentile(95),
             "itl_p50_ms": itl.percentile(50),
             "itl_p95_ms": itl.percentile(95),
+            "slo_ttft_attainment": good_fraction(ttft, SLO_TTFT_MS),
+            "slo_itl_attainment": good_fraction(itl, SLO_ITL_MS),
             "occupancy_mean": float(np.mean(occ)),
             "occupancy_peak": float(np.max(occ)),
             "pool_bytes": server.pool.nbytes(),
@@ -88,7 +98,8 @@ def run(verbose: bool = True) -> dict:
               f"({N_REQ} reqs x {MAX_NEW} toks, CPU host) ==")
         print(f"{'kv_bits':>8} {'arrival':>8} {'tok/s':>8} "
               f"{'ttft-p50':>9} {'ttft-p95':>9} {'itl-p50':>8} "
-              f"{'itl-p95':>8} {'occ-mean':>9} {'occ-peak':>9} "
+              f"{'itl-p95':>8} {'slo-ttft':>9} {'slo-itl':>8} "
+              f"{'occ-mean':>9} {'occ-peak':>9} "
               f"{'pool-bytes':>11}")
         for bits in KV_BITS:
             for arrival in ARRIVALS:
@@ -98,6 +109,8 @@ def run(verbose: bool = True) -> dict:
                       f"{rows[p + 'ttft_p95_ms']:>9.2f} "
                       f"{rows[p + 'itl_p50_ms']:>8.2f} "
                       f"{rows[p + 'itl_p95_ms']:>8.2f} "
+                      f"{rows[p + 'slo_ttft_attainment']:>9.3f} "
+                      f"{rows[p + 'slo_itl_attainment']:>8.3f} "
                       f"{rows[p + 'occupancy_mean']:>9.2f} "
                       f"{rows[p + 'occupancy_peak']:>9.2f} "
                       f"{rows[p + 'pool_bytes']:>11,}")

@@ -60,6 +60,7 @@ class TenantSpec:
     max_context: int = 256
     temperature: float = 0.0
     top_k: int | None = None
+    slo: object = None                  # TenantSLO targets (obs/slo.py)
 
     def __post_init__(self):
         if not self.tenant_id:
@@ -143,7 +144,12 @@ class TenantSpec:
         tid = obj.pop("id", None) or obj.pop("tenant_id", None)
         if tid is None:
             raise ValueError("manifest tenant entry needs an 'id'")
-        return TenantSpec(tenant_id=tid, plan=plan, **obj)
+        slo_obj = obj.pop("slo", None)
+        slo = None
+        if slo_obj is not None:
+            from repro.obs.slo import TenantSLO     # lazy: obs <- fleet
+            slo = TenantSLO.from_obj(slo_obj)
+        return TenantSpec(tenant_id=tid, plan=plan, slo=slo, **obj)
 
 
 @dataclasses.dataclass
@@ -317,10 +323,16 @@ class FleetRegistry:
 
 @dataclasses.dataclass(frozen=True)
 class FleetManifest:
-    """Parsed ``fleet.json``: the shared arch/budget plus tenant specs."""
+    """Parsed ``fleet.json``: the shared arch/budget plus tenant specs.
+
+    ``slo`` is the manifest's assembled :class:`repro.obs.slo.SLOSpec`
+    (top-level ``slo:`` section merged with per-tenant inline ``slo:``
+    rows), or ``None`` when the manifest declares no objectives.
+    """
     arch: str
     tenants: tuple
     budget_mb: float | None = None
+    slo: object = None
 
     def __post_init__(self):
         ids = [t.tenant_id for t in self.tenants]
@@ -336,5 +348,12 @@ def load_manifest(path: str) -> FleetManifest:
     base = os.path.dirname(os.path.abspath(path))
     tenants = tuple(TenantSpec.from_manifest(t, base)
                     for t in obj.get("tenants", []))
+    slo_obj = obj.get("slo")
+    inline = tuple((t.tenant_id, t.slo) for t in tenants
+                   if t.slo is not None)
+    slo = None
+    if slo_obj is not None or inline:
+        from repro.obs.slo import SLOSpec           # lazy: obs <- fleet
+        slo = SLOSpec.from_obj(slo_obj or {}, extra_tenants=inline)
     return FleetManifest(arch=obj["arch"], tenants=tenants,
-                         budget_mb=obj.get("budget_mb"))
+                         budget_mb=obj.get("budget_mb"), slo=slo)

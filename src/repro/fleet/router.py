@@ -55,6 +55,7 @@ class FleetRouter:
         tenant.scheduler.obs = self.obs
         tenant.engine.obs = self.obs
         tenant.pool.obs = self.obs
+        tenant.engine.report_attention_mode(self.obs)
         if self.obs.enabled:
             self.obs.tracer.name_thread(0, "engine")
 
@@ -164,6 +165,7 @@ class FleetRouter:
             s["tenants"].setdefault(t.tenant_id, {}).update(
                 active=live["active"], queued=live["queued"],
                 pool_occupancy=live["pool_occupancy"],
+                attention_mode=t.engine.attention_mode,
                 bytes={"weights": t.weight_bytes, "pool": t.pool_bytes})
         return s
 

@@ -76,6 +76,11 @@ class FleetTelemetry:
         self.obs = obs
         self.min_window_s = min_window_s
         self.per_tenant: dict[str, TenantStats] = {}
+        # optional judgment layers (launch/serve wires them): an
+        # obs.slo.SLOTracker and an obs.health.HealthMonitor whose
+        # per-tenant summaries ride along in snapshot()
+        self.slo = None
+        self.health = None
 
     def _stats(self, tenant_id: str) -> TenantStats:
         return self.per_tenant.setdefault(tenant_id, TenantStats())
@@ -132,6 +137,14 @@ class FleetTelemetry:
         for tid, s in self.per_tenant.items():
             per[tid] = s.snapshot(self.min_window_s)
             per[tid].update(self._latency_percentiles(tid))
+            if self.slo is not None:
+                slo = self.slo.tenant_summary(tid)
+                if slo:
+                    per[tid]["slo"] = slo
+            if self.health is not None:
+                h = self.health.tenant_summary(tid)
+                if h is not None:
+                    per[tid]["health"] = h
         # aggregate tok/s is host tokens over the union step window —
         # NOT the sum of per-tenant rates, whose windows overlap
         firsts = [s.first_step_t for s in self.per_tenant.values()

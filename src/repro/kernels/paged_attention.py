@@ -72,12 +72,33 @@ def default_mode() -> str:
     return "pallas" if jax.default_backend() == "tpu" else "interpret"
 
 
-def resolve_mode(fused: bool) -> str | None:
+def resolve_mode(fused: bool, *, obs=None) -> str | None:
     """Map an engine flag to a kernel mode, falling back to the XLA
-    gather+dequant path (``None``) when Pallas is unavailable."""
-    if not fused or not available():
+    gather+dequant path (``None``) when Pallas is unavailable.
+
+    A downgrade (fused requested, Pallas missing) is an SLO-relevant
+    silent failure: when an enabled ``obs`` is passed, it is reported via
+    :func:`report_fallback` so the run's trace/metrics carry the truth.
+    """
+    if not fused:
+        return None
+    if not available():
+        report_fallback(obs)
         return None
     return default_mode()
+
+
+def report_fallback(obs) -> bool:
+    """Emit the one-shot ``fused_fallback`` trace event + counter.
+
+    Returns True when something was recorded (engines use this to latch
+    their own once-per-engine guard across late obs attachment)."""
+    if obs is None or not getattr(obs, "enabled", False):
+        return False
+    obs.event("fused_fallback", backend=jax.default_backend(),
+              error=repr(_PALLAS_ERR) if _PALLAS_ERR is not None else "")
+    obs.metrics.counter("fused_fallback_total").inc()
+    return True
 
 
 def _infer_bits(packed_d: int, d: int) -> int:

@@ -30,7 +30,16 @@ fitted roofline correction ``repro.launch.plan --calibration`` consumes);
 ``/healthz`` and ``/snapshot.json`` over stdlib HTTP (port 0 picks an
 ephemeral port); ``--flight-out`` arms a flight recorder that dumps the
 recent span/event ring on anomalies (preemption storm, pool alloc
-failure, drift alarm) and saves it at exit.
+failure, drift alarm, SLO breach) and saves it at exit.
+
+The SLO plane (``repro.obs.slo`` / ``repro.obs.health``) judges the
+measurements against targets: ``--slo slo.json`` loads an
+:class:`repro.obs.SLOSpec` (``--fleet`` manifests may carry an ``slo:``
+section instead), polls an :class:`repro.obs.SLOTracker` plus a
+:class:`repro.obs.HealthMonitor` every decode step, exposes
+``/slo.json`` on the live endpoint, and ``--slo-report out.json``
+persists the final per-tenant budget/burn/episode report —
+``python -m repro.obs.slo out.json`` gates on it (exit 1 on breach).
 """
 from __future__ import annotations
 
@@ -50,6 +59,7 @@ def _make_obs(args) -> Observability | None:
     """One Observability per run when any instrumentation was requested."""
     if (args.trace_out or args.metrics_out or args.numerics
             or args.flight_out or args.calibration_out or args.profile
+            or args.slo or args.slo_report
             or args.serve_metrics is not None):
         return Observability()
     return None
@@ -107,6 +117,42 @@ def _finish_extras(flight, msrv, args):
         flight.save(args.flight_out)
         print(f"wrote {args.flight_out} ({len(flight.ring)} ring events, "
               f"{len(flight.dumps)} anomaly dumps)")
+
+
+def _load_slo_spec(args, manifest=None):
+    """The run's SLOSpec: ``--slo`` file, else the manifest's ``slo:``
+    section (fleet mode).  None when neither declares objectives."""
+    if args.slo:
+        from repro.obs.slo import SLOSpec
+        return SLOSpec.load(args.slo)
+    return manifest.slo if manifest is not None else None
+
+
+def _report_slo(tracker, health, args):
+    """Print the judgment summary; persist ``--slo-report`` (with the
+    health snapshot riding along under ``"health"``)."""
+    import json
+
+    rep = tracker.report()
+    if health is not None:
+        rep["health"] = health.snapshot()
+    for tid, objectives in sorted(rep["tenants"].items()):
+        for objective, row in sorted(objectives.items()):
+            print(f"slo [{tid}] {objective}: {row['state']}, budget "
+                  f"{row['budget_remaining']:.3f}, burn fast "
+                  f"{row['burn_fast']:.2f} / slow {row['burn_slow']:.2f}")
+    print(f"slo: worst state {rep['worst_state']} over {rep['steps']} "
+          f"steps ({tracker.suppressed_events} suppressed events)")
+    if health is not None:
+        for tid, row in sorted(health.snapshot()["tenants"].items()):
+            print(f"health [{tid}]: {row['health']:.2f} "
+                  f"({row.get('attention_mode', '?')})")
+    if args.slo_report:
+        with open(args.slo_report, "w") as f:
+            json.dump(rep, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"wrote {args.slo_report} (gate with "
+              f"python -m repro.obs.slo {args.slo_report})")
 
 
 def _report_residuals(obs, cfg, engine, pool, args, *, labels=None):
@@ -172,10 +218,24 @@ def _continuous(cfg, params, ecfg, args):
     server.submit(warm.tolist(), RequestParams(max_new_tokens=2))
     server.drain()                          # warm both jits off the clock
     obs = _make_obs(args)
-    flight = msrv = quality = profiler = None
+    flight = msrv = quality = profiler = tracker = health = None
     if obs is not None:
         server.set_obs(obs)                 # compile time stays off the books
         flight, msrv = _attach_extras(obs, args)
+        spec = _load_slo_spec(args)
+        if args.slo_report and spec is None:
+            raise SystemExit("--slo-report needs --slo in --continuous "
+                             "mode (no manifest to carry targets)")
+        if spec is not None:
+            from repro.obs.health import HealthMonitor
+            from repro.obs.slo import SLOTracker
+            tracker = SLOTracker(spec, obs)
+            health = HealthMonitor(obs, slo=tracker)
+            # single-cell serves record under the "default" tenant label
+            health.register("default", engine=server.engine,
+                            pool=server.pool)
+            if msrv is not None:
+                msrv.attach_slo(tracker)
         if args.profile:
             from repro.obs.profile import PhaseProfiler
             profiler = server.attach_profiler(PhaseProfiler(
@@ -199,6 +259,12 @@ def _continuous(cfg, params, ecfg, args):
                else contextlib.nullcontext())
     occ, sw = [], Stopwatch()
     rids = []
+
+    def tick():                 # one judgment poll per decode step
+        if tracker is not None:
+            tracker.on_step()
+            health.on_step()
+
     with capture:
         for i in range(args.continuous):
             prompt = jax.random.randint(jax.random.fold_in(rng, i),
@@ -209,9 +275,11 @@ def _continuous(cfg, params, ecfg, args):
             for _ in range(args.arrival_every):  # staggered arrivals
                 server.step()
                 occ.append(server.pool.occupancy())
+                tick()
         while server.has_work:
             server.step()
             occ.append(server.pool.occupancy())
+            tick()
     dt = sw.elapsed()
     if args.xprof_out:
         print(f"wrote xprof capture under {args.xprof_out} (open in "
@@ -243,6 +311,8 @@ def _continuous(cfg, params, ecfg, args):
         agree = obs.metrics.gauge("quality_shadow_top1_agree").value
         print(f"quality: {probes} shadow probes, top-1 agreement "
               f"{agree:.3f}")
+    if tracker is not None:
+        _report_slo(tracker, health, args)
     _save_obs(obs, args)
     _finish_extras(flight, msrv, args)
     print("sample:", server.output(rids[0])[:16])
@@ -270,12 +340,24 @@ def _fleet(args):
         router.submit(tid, warm.tolist(), max_new_tokens=2)
     router.drain(max_steps=10_000)
     obs = _make_obs(args)
-    flight = msrv = None
+    flight = msrv = tracker = health = None
     if obs is not None:                        # attach after warmup so jit
         router.obs = obs                       # compiles stay off the books
     router.reset_telemetry()                   # drop warmup counters; re-wire
     if obs is not None:
         flight, msrv = _attach_extras(obs, args)
+        spec = _load_slo_spec(args, manifest)
+        if args.slo_report and spec is None:
+            raise SystemExit("--slo-report needs --slo or a manifest "
+                             "'slo:' section")
+        if spec is not None:
+            from repro.obs.health import attach_fleet_health
+            from repro.obs.slo import SLOTracker
+            tracker = SLOTracker(spec, obs, telemetry=router.telemetry)
+            router.telemetry.slo = tracker
+            health = attach_fleet_health(router, slo=tracker)
+            if msrv is not None:
+                msrv.attach_slo(tracker)
         if args.profile:
             from repro.obs.profile import attach_fleet_profilers
             attach_fleet_profilers(router, cfg,
@@ -285,6 +367,11 @@ def _fleet(args):
                                             attach_fleet_quality)
             attach_fleet_quality(router, params, ncfg=NumericsConfig(
                 every_n_steps=args.numerics_every))
+
+    def tick():                 # one judgment poll per decode step
+        if tracker is not None:
+            tracker.on_step()
+            health.on_step()
 
     sw = Stopwatch()
     for i in range(args.fleet_requests):
@@ -299,7 +386,14 @@ def _fleet(args):
                 print(f"[fleet] rejected: {e}")
             for _ in range(args.arrival_every):  # staggered arrivals
                 router.step()
-    router.drain(max_steps=100_000)
+                tick()
+    steps = 0
+    while router.has_work:                     # drain, polling per step
+        router.step()
+        tick()
+        steps += 1
+        if steps > 100_000:
+            raise RuntimeError("fleet drain exceeded max_steps")
     dt = sw.elapsed()
 
     stats = router.stats()
@@ -326,6 +420,8 @@ def _fleet(args):
         for t in router.registry:              # per-tenant MFU / HBM gauges
             _report_utilization(obs, cfg, t.engine, t.pool, args,
                                 labels={"tenant": t.tenant_id})
+    if tracker is not None:
+        _report_slo(tracker, health, args)
     _save_obs(obs, args)
     _finish_extras(flight, msrv, args)
 
@@ -401,7 +497,20 @@ def main():
                     help="arm the flight recorder: ring of recent "
                          "spans/events, auto-dumped on anomalies "
                          "(preemption storm / pool alloc failure / drift "
-                         "alarm) and saved here at exit")
+                         "alarm / SLO breach) and saved here at exit")
+    ap.add_argument("--slo", default=None, metavar="SLO.json",
+                    help="judge the run against an SLOSpec (repro.obs.slo):"
+                         " per-tenant TTFT/ITL p95, tok/s, availability "
+                         "and acceptance targets through error budgets + "
+                         "multi-window burn rates; breaches fire slo_breach"
+                         " events (a flight-recorder dump trigger) and "
+                         "per-tenant health gauges track silent "
+                         "degradation; --fleet manifests may carry an "
+                         "'slo:' section instead")
+    ap.add_argument("--slo-report", default=None, metavar="OUT.json",
+                    help="write the final SLO report (budgets, burn rates, "
+                         "breach episodes, health) for the python -m "
+                         "repro.obs.slo gate")
     ap.add_argument("--profile", action="store_true",
                     help="perf-attribution plane: sampled per-phase "
                          "decode-step breakdown (serve_phase_ms{phase,"
@@ -423,11 +532,13 @@ def main():
 
     obs_flags = (args.trace_out or args.metrics_out or args.numerics
                  or args.flight_out or args.calibration_out or args.profile
+                 or args.slo or args.slo_report
                  or args.serve_metrics is not None)
     if obs_flags and not (args.continuous or args.fleet):
         ap.error("--trace-out/--metrics-out/--numerics/--serve-metrics/"
-                 "--flight-out/--calibration-out/--profile instrument the "
-                 "serve layer; use them with --continuous or --fleet")
+                 "--flight-out/--calibration-out/--profile/--slo/"
+                 "--slo-report instrument the serve layer; use them with "
+                 "--continuous or --fleet")
     if args.xprof_out and not args.continuous:
         ap.error("--xprof-out captures the --continuous serve loop")
     if args.calibration_out and args.fleet:

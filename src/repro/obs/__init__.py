@@ -33,6 +33,8 @@ __all__ = [
     "save_calibration", "load_calibration", "calibrated_hw",
     "PhaseProfiler", "annotate", "attach_fleet_profilers",
     "record_utilization", "xprof_capture",
+    "SLOSpec", "TenantSLO", "SLOTracker", "good_fraction",
+    "validate_report", "HealthMonitor", "attach_fleet_health",
 ]
 
 _LAZY = {
@@ -45,6 +47,9 @@ _LAZY = {
     "PhaseProfiler": "profile", "annotate": "profile",
     "attach_fleet_profilers": "profile", "record_utilization": "profile",
     "xprof_capture": "profile",
+    "SLOSpec": "slo", "TenantSLO": "slo", "SLOTracker": "slo",
+    "good_fraction": "slo", "validate_report": "slo",
+    "HealthMonitor": "health", "attach_fleet_health": "health",
 }
 
 

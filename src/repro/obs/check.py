@@ -1,7 +1,7 @@
 """Validate ``--trace-out`` / ``--metrics-out`` artifacts.
 
     python -m repro.obs.check trace.json metrics.json \
-        [--spec] [--numerics] [--profile]
+        [--spec] [--numerics] [--profile] [--slo report.json]
 
 Asserts the trace is Chrome-trace-valid (``traceEvents`` list; every
 event carries ``name``/``ph``/``ts``/``pid``/``tid``; complete events
@@ -15,7 +15,12 @@ gauges — obs/numerics.py, obs/residuals.py); ``--profile`` requires the
 perf-attribution plane (every ``serve_phase_ms`` phase recorded, the
 ``serve_mfu``/``serve_hbm_util`` gauges in ``(0, 1]``, the ``profile``/
 ``phase:*`` spans, and a plausible phase-sum vs decode-step p50 —
-obs/profile.py).  Exit code 0 on success, 1 with a diagnostic on
+obs/profile.py); ``--slo report.json`` additionally validates a saved
+SLO report's structure (every spec objective present, budgets in
+[0, 1], burn rates finite, breach episodes well-formed — delegating to
+``repro.obs.slo.validate_report``; unlike ``python -m repro.obs.slo``
+this does NOT fail on a breach, only on malformed reports).  Exit code
+0 on success, 1 with a diagnostic on
 invalid/malformed artifacts, 2 on usage errors.  This is the ``make
 obs-smoke`` / ``make numerics-smoke`` / ``make perf-smoke`` gate, and a
 quick sanity check for any saved run.
@@ -176,16 +181,33 @@ def check_profile(trace: dict, snap: dict, *, spec: bool = False
     return found
 
 
+def check_slo(report: dict) -> list[str]:
+    """Validate a saved SLO report's structure (``--slo``); returns the
+    ``tenant/objective`` keys found.  Structure only — gating on breach
+    state is ``python -m repro.obs.slo``'s job."""
+    from repro.obs.slo import validate_report
+    return validate_report(report)
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
+    usage = ("usage: python -m repro.obs.check trace.json metrics.json "
+             "[--spec] [--numerics] [--profile] [--slo report.json]")
     spec = "--spec" in argv
     numerics = "--numerics" in argv
     profile = "--profile" in argv
     argv = [a for a in argv if a not in ("--spec", "--numerics",
                                          "--profile")]
+    slo_path = None
+    if "--slo" in argv:
+        i = argv.index("--slo")
+        if i + 1 >= len(argv):
+            print(usage, file=sys.stderr)
+            return 2
+        slo_path = argv[i + 1]
+        del argv[i:i + 2]
     if len(argv) != 2:
-        print("usage: python -m repro.obs.check trace.json metrics.json "
-              "[--spec] [--numerics] [--profile]", file=sys.stderr)
+        print(usage, file=sys.stderr)
         return 2
     trace_path, metrics_path = argv
     try:
@@ -197,6 +219,10 @@ def main(argv=None) -> int:
         hists = check_metrics(snap, spec=spec)
         quality = check_numerics(snap) if numerics else []
         perf = check_profile(trace, snap, spec=spec) if profile else []
+        slo = []
+        if slo_path is not None:
+            with open(slo_path) as f:
+                slo = check_slo(json.load(f))
     except (AssertionError, json.JSONDecodeError, OSError) as e:
         print(f"check failed: {e}", file=sys.stderr)
         return 1
@@ -207,6 +233,8 @@ def main(argv=None) -> int:
         print(f"{metrics_path}: {len(quality)} quality-plane metrics ok")
     if profile:
         print(f"{metrics_path}: {len(perf)} perf-plane metrics ok")
+    if slo_path is not None:
+        print(f"{slo_path}: {len(slo)} SLO objectives structurally ok")
     return 0
 
 

@@ -7,7 +7,10 @@ and serves three read-only routes straight from the live registry:
   ``Content-Type: text/plain; version=0.0.4``;
 * ``GET /healthz``        — ``ok`` (liveness probe);
 * ``GET /snapshot.json``  — the full counters/gauges/histograms snapshot
-  as JSON (includes percentiles — richer than the Prometheus view).
+  as JSON (includes percentiles — richer than the Prometheus view);
+* ``GET /slo.json``       — the attached :class:`repro.obs.slo.SLOTracker`
+  report (per-tenant budgets, burn rates, breach episodes); 404 until an
+  ``attach_slo`` call wires a tracker.
 
 Handlers only *read* registry state (plain Python dicts mutated by the
 single serving thread between requests); nothing here touches the engine
@@ -25,6 +28,7 @@ from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 class _Handler(BaseHTTPRequestHandler):
     # the Observability to serve; set by MetricsServer on the handler class
     obs = None
+    slo = None      # optional SLOTracker behind /slo.json
 
     def _send(self, code: int, body: bytes, ctype: str):
         self.send_response(code)
@@ -43,6 +47,12 @@ class _Handler(BaseHTTPRequestHandler):
         elif path == "/snapshot.json":
             body = json.dumps(self.obs.metrics.snapshot()).encode()
             self._send(200, body, "application/json")
+        elif path == "/slo.json":
+            if self.slo is None:
+                self._send(404, b"no slo tracker attached\n", "text/plain")
+            else:
+                body = json.dumps(self.slo.report()).encode()
+                self._send(200, body, "application/json")
         else:
             self._send(404, b"not found\n", "text/plain")
 
@@ -53,8 +63,11 @@ class _Handler(BaseHTTPRequestHandler):
 class MetricsServer:
     """Serve ``/metrics``, ``/healthz``, ``/snapshot.json`` for ``obs``."""
 
-    def __init__(self, obs, *, port: int = 0, host: str = "127.0.0.1"):
-        handler = type("BoundHandler", (_Handler,), {"obs": obs})
+    def __init__(self, obs, *, port: int = 0, host: str = "127.0.0.1",
+                 slo=None):
+        handler = type("BoundHandler", (_Handler,), {"obs": obs,
+                                                     "slo": slo})
+        self._handler = handler
         self._httpd = ThreadingHTTPServer((host, port), handler)
         self._httpd.daemon_threads = True
         self.host = host
@@ -67,6 +80,12 @@ class MetricsServer:
     @property
     def url(self) -> str:
         return f"http://{self.host}:{self.port}"
+
+    def attach_slo(self, tracker):
+        """Expose ``tracker.report()`` at ``/slo.json`` (``None``
+        detaches — the route 404s again).  Returns the tracker."""
+        self._handler.slo = tracker
+        return tracker
 
     def close(self):
         self._httpd.shutdown()

@@ -11,7 +11,10 @@ events in a ring.  Three anomaly triggers watch the stream:
 * **pool alloc failure** — any ``alloc_fail`` event (the pool turned a
   request away; ``serve/pool.py`` emits it on exhaustion);
 * **drift alarm** — any ``drift_alarm`` event (the spec-acceptance drift
-  detector in ``obs/numerics.py`` fired).
+  detector in ``obs/numerics.py`` fired);
+* **SLO breach** — any ``slo_breach`` event (a tenant objective's burn
+  rate crossed the breach threshold on both windows; ``obs/slo.py``
+  fires it once per episode).
 
 Each trigger snapshots the ring plus the live metrics registry into an
 in-memory dump (and a JSON file next to ``out`` when set), rate-limited
@@ -29,7 +32,8 @@ from collections import deque
 
 from repro.obs.metrics import DEFAULT_CLOCK
 
-TRIGGER_EVENTS = ("alloc_fail", "drift_alarm")   # fire on first sight
+TRIGGER_EVENTS = ("alloc_fail", "drift_alarm", "slo_breach")
+#                                                ^ fire on first sight
 STORM_EVENT = "preempt"
 
 

@@ -1,0 +1,174 @@
+"""Silent-degradation detection: per-tenant composite health gauges.
+
+The serving stack has failure modes that degrade quality or latency
+without tripping any existing alarm:
+
+* **fused-attention fallback** — ``EngineConfig.fused_attention`` was
+  requested but Pallas is unavailable, so the engine silently serves the
+  XLA gather+dequant path (``kernels/paged_attention.resolve_mode``
+  returning ``None``).  The engine reports it via ``fused_fallback`` /
+  ``attention_mode`` (serve/engine.py); this monitor folds it into the
+  health gauge so a fleet cannot *believe* it is running fused.
+* **shadow-KL blowup** — the quality plane's ``quality_shadow_kl``
+  histogram (obs/numerics.py) spiking past ``kl_max``: the quantized
+  model has diverged from its fp shadow even though tokens keep flowing.
+* **pool pressure** — occupancy trending up with less than
+  ``headroom_requests`` worth of free pages (measured in full-request
+  page demands, ``pages_per_slot``).  This fires a ``pool_pressure``
+  event *before* the allocator's ``alloc_fail`` does, one per pressure
+  episode, so operators get an early warning instead of a post-mortem.
+* **SLO state** — when an :class:`repro.obs.slo.SLOTracker` is wired,
+  its worst per-tenant objective state (warning/breach) caps health.
+
+Exported metrics, refreshed by :meth:`HealthMonitor.on_step`:
+
+* ``health{tenant}``                       — composite in [0, 1]
+  (min over components: 1.0 healthy, 0.75 degraded-warning, 0.5
+  degraded, 0.25 breaching)
+* ``health_component{tenant,component}``   — per-component value
+* ``pool_alloc_headroom{tenant}``          — free pages / pages one
+  full-length request needs (admissions of headroom left)
+* ``pool_occupancy_trend{tenant}``         — EWMA occupancy slope
+* ``pool_pressure_total{tenant}``          — pressure episodes counter
+
+Host-side reads over the pool's allocator state and already-recorded
+metrics only: nothing enters a compiled function.
+"""
+from __future__ import annotations
+
+COMPONENTS = ("fused", "quality", "pool", "slo")
+_SLO_HEALTH = {"ok": 1.0, "warning": 0.75, "breach": 0.25}
+
+
+def _pages_per_request(engine) -> int:
+    """Worst-case page demand of one request: ``pages_per_slot`` of the
+    engine's paged geometry (a speculative engine's verifier owns it)."""
+    pcfg = getattr(engine, "pcfg", None)
+    if pcfg is None:
+        pcfg = getattr(getattr(engine, "verifier", None), "pcfg", None)
+    return pcfg.pages_per_slot if pcfg is not None else 1
+
+
+class HealthMonitor:
+    """Composite per-tenant health over engines/pools + obs metrics.
+
+    Register each tenant's engine/pool (``attach_fleet_health`` does it
+    for a router; single-cell serves register ``"default"``), then call
+    :meth:`on_step` once per decode step alongside the SLO tracker.
+    """
+
+    def __init__(self, obs, *, slo=None, kl_max: float = 1.0,
+                 pressure_occupancy: float = 0.85,
+                 headroom_requests: float = 1.0,
+                 trend_alpha: float = 0.3):
+        if not 0.0 < trend_alpha <= 1.0:
+            raise ValueError(f"trend_alpha must be in (0, 1], "
+                             f"got {trend_alpha}")
+        self.obs = obs
+        self.slo = slo                      # optional SLOTracker
+        self.kl_max = kl_max
+        self.pressure_occupancy = pressure_occupancy
+        self.headroom_requests = headroom_requests
+        self.trend_alpha = trend_alpha
+        self._tenants: dict[str, dict] = {}
+
+    def register(self, tenant_id: str, *, engine=None, pool=None):
+        """Track a tenant's serving stack (either handle optional)."""
+        self._tenants[tenant_id] = {"engine": engine, "pool": pool,
+                                    "occ_ewma": None, "trend": 0.0,
+                                    "pressure": False, "health": 1.0,
+                                    "components": {}}
+
+    # ------------------------------------------------------- components
+    def _fused_component(self, st) -> float:
+        engine = st["engine"]
+        if engine is None or not getattr(engine, "fused_fallback", False):
+            return 1.0
+        return 0.5      # serving, but NOT on the path the config asked for
+
+    def _quality_component(self, tid: str) -> float:
+        h = (self.obs.metrics.find("quality_shadow_kl", tenant=tid)
+             or self.obs.metrics.find("quality_shadow_kl"))
+        if h is None or not getattr(h, "count", 0):
+            return 1.0
+        return 0.5 if h.percentile(95) > self.kl_max else 1.0
+
+    def _pool_component(self, tid: str, st) -> float:
+        pool = st["pool"]
+        if pool is None:
+            return 1.0
+        occ = pool.occupancy()
+        headroom = pool.n_free / max(_pages_per_request(st["engine"]), 1)
+        prev = st["occ_ewma"]
+        ewma = (occ if prev is None
+                else self.trend_alpha * occ
+                + (1.0 - self.trend_alpha) * prev)
+        st["occ_ewma"] = ewma
+        st["trend"] = 0.0 if prev is None else ewma - prev
+        m = self.obs.metrics
+        m.gauge("pool_alloc_headroom", tenant=tid).set(headroom)
+        m.gauge("pool_occupancy_trend", tenant=tid).set(st["trend"])
+        pressure = (ewma >= self.pressure_occupancy
+                    and st["trend"] >= 0.0
+                    and headroom < self.headroom_requests)
+        if pressure and not st["pressure"]:     # one event per episode
+            self.obs.event("pool_pressure", tenant=tid,
+                           occupancy=round(occ, 4),
+                           headroom=round(headroom, 4))
+            m.counter("pool_pressure_total", tenant=tid).inc()
+        st["pressure"] = pressure
+        return 0.5 if pressure else 1.0
+
+    def _slo_component(self, tid: str) -> float:
+        if self.slo is None:
+            return 1.0
+        return _SLO_HEALTH[self.slo.worst_state(tid)]
+
+    # -------------------------------------------------------------- step
+    def on_step(self):
+        """Refresh every tenant's component + composite health gauges."""
+        if not getattr(self.obs, "enabled", False):
+            return
+        m = self.obs.metrics
+        for tid, st in self._tenants.items():
+            comps = {"fused": self._fused_component(st),
+                     "quality": self._quality_component(tid),
+                     "pool": self._pool_component(tid, st),
+                     "slo": self._slo_component(tid)}
+            for name, v in comps.items():
+                m.gauge("health_component", tenant=tid,
+                        component=name).set(v)
+            h = min(comps.values())
+            st["health"] = h
+            st["components"] = comps
+            m.gauge("health", tenant=tid).set(h)
+
+    # ------------------------------------------------------------ export
+    def tenant_summary(self, tenant_id: str) -> float | None:
+        st = self._tenants.get(tenant_id)
+        return None if st is None else st["health"]
+
+    def snapshot(self) -> dict:
+        out = {}
+        for tid, st in sorted(self._tenants.items()):
+            row = {"health": st["health"],
+                   "components": dict(st["components"]),
+                   "pool_pressure": st["pressure"]}
+            engine = st["engine"]
+            if engine is not None:
+                mode = getattr(engine, "attention_mode", None)
+                if mode is not None:
+                    row["attention_mode"] = mode
+            out[tid] = row
+        return {"tenants": out}
+
+
+def attach_fleet_health(router, *, slo=None, **kwargs) -> HealthMonitor:
+    """One :class:`HealthMonitor` over every tenant of a
+    :class:`repro.fleet.FleetRouter`; also threads it into the router's
+    telemetry so ``snapshot()`` carries per-tenant health."""
+    monitor = HealthMonitor(router.obs, slo=slo, **kwargs)
+    for t in router.registry:
+        monitor.register(t.tenant_id, engine=t.engine, pool=t.pool)
+    router.telemetry.health = monitor
+    return monitor

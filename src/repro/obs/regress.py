@@ -19,6 +19,8 @@ and direction-aware, keyed on the metric-name suffix:
   ``*_ms``                     lower is better    ratio 1.5  is noisy)
   ``*acceptance_rate``         higher is better   ratio 1.05 (numerics-
   ``*verify_steps_per_token``  lower is better    ratio 1.05  stable)
+  ``*_attainment``             higher is better   ratio 1.5 (SLO
+                                                  compliance fraction)
 
 Unknown suffixes are skipped, not failed: the gate guards the headline
 metrics it understands and stays quiet about new ones until a band is
@@ -54,6 +56,7 @@ _BANDS = (
     ("_ms", False, 1.5),
     ("acceptance_rate", True, 1.05),
     ("verify_steps_per_token", False, 1.05),
+    ("_attainment", True, 1.5),
 )
 
 

@@ -1,0 +1,699 @@
+"""SLO plane: per-tenant error budgets, burn rates, breach alerting.
+
+PRs 6-8 built the *measurement* planes (tracing, quality probes, perf
+attribution); this module is the *judgment* plane — it holds those
+measurements against explicit per-tenant targets, SRE-style:
+
+* :class:`TenantSLO` — one tenant's targets: TTFT p95 / ITL p95 upper
+  bounds (ms), a tok/s floor, an availability floor
+  (``1 - rejected/submitted``), and an acceptance-rate floor for
+  speculative tenants.  Every target is optional; unset objectives are
+  simply not tracked.
+* :class:`SLOSpec` — the serializable spec (JSON round-trip with
+  validation, like ``repro.plan.QuantPlan``): per-tenant targets plus
+  the shared window/alerting configuration.  Fleet manifests carry it
+  as an ``"slo"`` section (``repro.fleet.load_manifest``).
+* :class:`SLOTracker` — consumes the metrics the serving stack already
+  records (``serve_ttft_ms{tenant=}`` / ``serve_itl_ms{tenant=}``
+  histograms, ``serve_tokens_total`` counters, ``FleetTelemetry``
+  submit/reject counters, the ``spec_acceptance_rate`` gauge) through
+  sliding **step** windows and computes, per (tenant, objective):
+
+    - multi-window burn rates: how fast the error budget is burning
+      over the ``fast_steps`` window ("5m-equivalent" decode steps) and
+      the ``slow_steps`` window ("1h-equivalent") — burn 1.0 == exactly
+      consuming the budget, SRE-style;
+    - error-budget consumption over the ``budget_steps`` window
+      (``slo_budget_remaining`` in [0, 1]);
+    - an ok -> warning -> breach state machine that fires one
+      ``slo_breach`` trace event per breach episode (latching like
+      ``AcceptanceDrift``), rate-limited by ``cooldown_s`` — the event
+      is a ``FlightRecorder`` dump trigger, so a breach snapshots the
+      recent timeline automatically.
+
+Windows are measured in *tracker polls* (one ``on_step()`` per decode
+step), not wall-clock, so the whole plane is injectable-clock testable;
+the "5m/1h-equivalent" defaults assume roughly one poll per second and
+shrink to a handful of steps in smoke specs.
+
+Like the rest of ``repro.obs`` this is host-side bookkeeping over
+already-recorded metrics: nothing enters a compiled function, tokens are
+bit-identical with tracking on, and the decode step never retraces.
+
+CLI gate (exit 0 ok / 1 breach or invalid / 2 usage, like
+``repro.obs.regress``)::
+
+    python -m repro.obs.slo report.json          # gate a saved report
+    python -m repro.obs.slo --demo-breach out.json   # synthesize a
+        # breached report through a real tracker (negative-test input)
+"""
+from __future__ import annotations
+
+import bisect
+import dataclasses
+import json
+import math
+import sys
+from collections import deque
+
+# objective name -> (metric direction) — latency targets are upper
+# bounds on the p95, the rest are floors
+LATENCY_OBJECTIVES = ("ttft_p95_ms", "itl_p95_ms")
+FLOOR_OBJECTIVES = ("tok_per_s", "availability", "acceptance_rate")
+OBJECTIVES = LATENCY_OBJECTIVES + FLOOR_OBJECTIVES
+STATES = ("ok", "warning", "breach")
+_STATE_LEVEL = {"ok": 0, "warning": 1, "breach": 2}
+# a p95 latency target tolerates 5% bad samples by definition
+_P95_FRACTION = 0.95
+# burn-rate denominator floor: an availability floor of exactly 1.0
+# leaves a zero error budget; clamp so burn rates stay finite
+_MIN_EPS = 1e-6
+
+
+def good_fraction(hist, target: float) -> float:
+    """Fraction of a fixed-bucket histogram's samples <= ``target``.
+
+    Buckets whose upper bound exceeds ``target`` count as bad even when
+    the target falls inside them (conservative: never over-reports
+    compliance).  Empty histograms are fully compliant.
+    """
+    if not getattr(hist, "count", 0):
+        return 1.0
+    return good_count(hist, target) / hist.count
+
+
+def good_count(hist, target: float) -> int:
+    """Number of samples recorded at or under ``target`` (see
+    :func:`good_fraction` for the in-bucket convention)."""
+    idx = bisect.bisect_right(hist.buckets, float(target))
+    return sum(hist.counts[:idx])
+
+
+# ---------------------------------------------------------------------------
+# spec
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TenantSLO:
+    """One tenant's objective targets.  Unset (None) == not tracked."""
+    ttft_p95_ms: float | None = None     # TTFT p95 upper bound, ms
+    itl_p95_ms: float | None = None      # inter-token-latency p95, ms
+    tok_per_s: float | None = None       # decode-throughput floor
+    availability: float | None = None    # floor on 1 - rejected/submitted
+    acceptance_rate: float | None = None  # spec-decode acceptance floor
+
+    def __post_init__(self):
+        for name in LATENCY_OBJECTIVES + ("tok_per_s",):
+            v = getattr(self, name)
+            if v is not None and not (isinstance(v, (int, float))
+                                      and math.isfinite(v) and v > 0):
+                raise ValueError(f"{name} must be a finite positive "
+                                 f"number, got {v!r}")
+        for name in ("availability", "acceptance_rate"):
+            v = getattr(self, name)
+            if v is not None and not (isinstance(v, (int, float))
+                                      and 0.0 < v <= 1.0):
+                raise ValueError(f"{name} must be in (0, 1], got {v!r}")
+
+    def objectives(self) -> dict:
+        """The set targets: ``{objective_name: target}``."""
+        return {n: getattr(self, n) for n in OBJECTIVES
+                if getattr(self, n) is not None}
+
+    def to_obj(self) -> dict:
+        return self.objectives()
+
+    @staticmethod
+    def from_obj(obj: dict) -> "TenantSLO":
+        if not isinstance(obj, dict):
+            raise ValueError(f"tenant SLO entry must be an object, "
+                             f"got {obj!r}")
+        unknown = sorted(set(obj) - set(OBJECTIVES))
+        if unknown:
+            raise ValueError(f"unknown SLO objectives {unknown}; "
+                             f"known: {list(OBJECTIVES)}")
+        return TenantSLO(**obj)
+
+
+@dataclasses.dataclass(frozen=True)
+class SLOSpec:
+    """Serializable per-tenant SLO targets + shared window/alert config.
+
+    ``tenants`` maps tenant ids to their :class:`TenantSLO`; ``default``
+    (optional) applies to tenants that carry traffic but have no
+    explicit row.  Windows are in tracker steps; ``target`` is the
+    good-event fraction objective for the floor objectives (latency p95
+    targets imply 0.95, an availability floor is its own fraction).
+    """
+    tenants: tuple = ()                  # ((tenant_id, TenantSLO), ...)
+    default: TenantSLO | None = None
+    target: float = 0.95                 # good-event fraction (floors)
+    fast_steps: int = 300                # "5m-equivalent" burn window
+    slow_steps: int = 3600               # "1h-equivalent" burn window
+    budget_steps: int = 3600             # error-budget accounting window
+    warn_burn: float = 2.0               # fast burn >= this -> warning
+    breach_burn: float = 6.0             # fast AND slow >= this -> breach
+    cooldown_s: float = 5.0              # min clock between breach events
+
+    def __post_init__(self):
+        seen = set()
+        for entry in self.tenants:
+            tid, tslo = entry
+            if not tid or not isinstance(tid, str):
+                raise ValueError(f"tenant id must be a non-empty string, "
+                                 f"got {tid!r}")
+            if tid in seen:
+                raise ValueError(f"duplicate tenant {tid!r} in SLOSpec")
+            seen.add(tid)
+            if not isinstance(tslo, TenantSLO):
+                raise ValueError(f"tenant {tid!r}: expected a TenantSLO, "
+                                 f"got {type(tslo).__name__}")
+        if not 0.0 < self.target < 1.0:
+            raise ValueError(f"target must be in (0, 1), got {self.target}")
+        for name in ("fast_steps", "slow_steps", "budget_steps"):
+            v = getattr(self, name)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"{name} must be an int >= 1, got {v!r}")
+        if self.fast_steps > self.slow_steps:
+            raise ValueError(f"fast_steps ({self.fast_steps}) must not "
+                             f"exceed slow_steps ({self.slow_steps})")
+        for name in ("warn_burn", "breach_burn"):
+            v = getattr(self, name)
+            if not (isinstance(v, (int, float)) and v > 0):
+                raise ValueError(f"{name} must be > 0, got {v!r}")
+        if self.warn_burn > self.breach_burn:
+            raise ValueError(f"warn_burn ({self.warn_burn}) must not "
+                             f"exceed breach_burn ({self.breach_burn})")
+        if self.cooldown_s < 0:
+            raise ValueError(f"cooldown_s must be >= 0, "
+                             f"got {self.cooldown_s}")
+
+    def tenant_slo(self, tenant_id: str) -> TenantSLO | None:
+        for tid, tslo in self.tenants:
+            if tid == tenant_id:
+                return tslo
+        return self.default
+
+    # ------------------------------------------------------------- JSON
+    def to_obj(self) -> dict:
+        return {
+            "version": 1,
+            "target": self.target,
+            "windows": {"fast_steps": self.fast_steps,
+                        "slow_steps": self.slow_steps,
+                        "budget_steps": self.budget_steps},
+            "alerting": {"warn_burn": self.warn_burn,
+                         "breach_burn": self.breach_burn,
+                         "cooldown_s": self.cooldown_s},
+            "default": (self.default.to_obj()
+                        if self.default is not None else None),
+            "tenants": {tid: tslo.to_obj() for tid, tslo in self.tenants},
+        }
+
+    def to_json(self, indent: int | None = 2) -> str:
+        return json.dumps(self.to_obj(), indent=indent, sort_keys=True)
+
+    @staticmethod
+    def from_obj(obj: dict, *, extra_tenants=()) -> "SLOSpec":
+        """Parse the JSON object form.  ``extra_tenants`` (an iterable of
+        ``(tenant_id, TenantSLO)``) merges per-tenant rows from outside
+        the spec object — fleet manifests carry targets inline on tenant
+        entries; an inline row overrides the spec object's row."""
+        if not isinstance(obj, dict):
+            raise ValueError(f"SLO spec must be a JSON object, got {obj!r}")
+        version = obj.get("version", 1)
+        if version != 1:
+            raise ValueError(f"unsupported SLO spec version {version!r}")
+        known = {"version", "target", "windows", "alerting", "default",
+                 "tenants"}
+        unknown = sorted(set(obj) - known)
+        if unknown:
+            raise ValueError(f"unknown SLO spec keys {unknown}; "
+                             f"known: {sorted(known)}")
+        windows = obj.get("windows") or {}
+        alerting = obj.get("alerting") or {}
+        for section, allowed in ((windows, ("fast_steps", "slow_steps",
+                                            "budget_steps")),
+                                 (alerting, ("warn_burn", "breach_burn",
+                                             "cooldown_s"))):
+            bad = sorted(set(section) - set(allowed))
+            if bad:
+                raise ValueError(f"unknown SLO spec keys {bad}; "
+                                 f"known: {list(allowed)}")
+        tenants = {tid: TenantSLO.from_obj(t)
+                   for tid, t in (obj.get("tenants") or {}).items()}
+        tenants.update(extra_tenants)
+        default = obj.get("default")
+        kw = {}
+        if "target" in obj:
+            kw["target"] = obj["target"]
+        kw.update(windows)
+        kw.update(alerting)
+        return SLOSpec(
+            tenants=tuple(sorted(tenants.items())),
+            default=(TenantSLO.from_obj(default)
+                     if default is not None else None),
+            **kw)
+
+    @staticmethod
+    def from_json(text: str) -> "SLOSpec":
+        return SLOSpec.from_obj(json.loads(text))
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            f.write(self.to_json())
+            f.write("\n")
+
+    @staticmethod
+    def load(path: str) -> "SLOSpec":
+        with open(path) as f:
+            return SLOSpec.from_json(f.read())
+
+
+# ---------------------------------------------------------------------------
+# sliding windows + per-objective series
+# ---------------------------------------------------------------------------
+
+class _Window:
+    """Running (good, total) sums over the last ``steps`` pushes."""
+    __slots__ = ("steps", "_deq", "good", "total")
+
+    def __init__(self, steps: int):
+        self.steps = steps
+        self._deq: deque = deque()
+        self.good = 0
+        self.total = 0
+
+    def push(self, good: int, total: int):
+        self._deq.append((good, total))
+        self.good += good
+        self.total += total
+        while len(self._deq) > self.steps:
+            g, t = self._deq.popleft()
+            self.good -= g
+            self.total -= t
+
+    @property
+    def bad(self) -> int:
+        return self.total - self.good
+
+    def bad_fraction(self) -> float:
+        return self.bad / self.total if self.total else 0.0
+
+
+class _Series:
+    """One (tenant, objective) event stream and its alert state."""
+    __slots__ = ("tenant", "objective", "target", "fraction", "eps",
+                 "fast", "slow", "budget", "state", "episodes",
+                 "good_total", "total", "_cursor", "_rate_cursor")
+
+    def __init__(self, tenant: str, objective: str, target: float,
+                 spec: SLOSpec):
+        self.tenant, self.objective, self.target = tenant, objective, target
+        if objective in LATENCY_OBJECTIVES:
+            self.fraction = _P95_FRACTION
+        elif objective == "availability":
+            self.fraction = target
+        else:
+            self.fraction = spec.target
+        self.eps = max(1.0 - self.fraction, _MIN_EPS)
+        self.fast = _Window(spec.fast_steps)
+        self.slow = _Window(spec.slow_steps)
+        self.budget = _Window(spec.budget_steps)
+        self.state = "ok"
+        self.episodes: list[dict] = []
+        self.good_total = 0
+        self.total = 0
+        self._cursor = (0, 0)       # cumulative (good, total) last seen
+        self._rate_cursor = None    # (clock, tokens) for the tok/s floor
+
+    def push_cumulative(self, good: int, total: int):
+        """Feed new cumulative counts; deltas enter every window."""
+        pg, pt = self._cursor
+        dg, dt = good - pg, total - pt
+        if dt < 0 or dg < 0:        # counter reset (fresh telemetry)
+            self._cursor = (good, total)
+            dg, dt = good, total
+        else:
+            self._cursor = (good, total)
+        self.push_delta(dg, dt)
+
+    def push_delta(self, good: int, total: int):
+        self.good_total += good
+        self.total += total
+        for w in (self.fast, self.slow, self.budget):
+            w.push(good, total)
+
+    # ------------------------------------------------------------ derived
+    def burn(self, window: _Window) -> float:
+        """Burn rate: bad-event fraction over the window, in units of
+        the allowed bad fraction (1.0 == exactly consuming budget)."""
+        return window.bad_fraction() / self.eps
+
+    def budget_remaining(self) -> float:
+        if not self.budget.total:
+            return 1.0
+        allowed = self.eps * self.budget.total
+        return min(max(1.0 - self.budget.bad / allowed, 0.0), 1.0)
+
+    def evaluate(self, spec: SLOSpec) -> tuple[str, bool]:
+        """Advance the state machine; returns (state, entered_breach)."""
+        bf, bs = self.burn(self.fast), self.burn(self.slow)
+        if bf >= spec.breach_burn and bs >= spec.breach_burn:
+            new = "breach"
+        elif bf >= spec.warn_burn:
+            new = "warning"
+        else:
+            new = "ok"
+        entered = new == "breach" and self.state != "breach"
+        self.state = new
+        return new, entered
+
+    def summary(self) -> dict:
+        return {"objective": self.objective, "target": self.target,
+                "slo_fraction": self.fraction, "state": self.state,
+                "budget_remaining": round(self.budget_remaining(), 6),
+                "burn_fast": round(self.burn(self.fast), 6),
+                "burn_slow": round(self.burn(self.slow), 6),
+                "events_total": self.total,
+                "bad_total": self.total - self.good_total,
+                "episodes": [dict(e) for e in self.episodes]}
+
+
+# ---------------------------------------------------------------------------
+# tracker
+# ---------------------------------------------------------------------------
+
+class SLOTracker:
+    """Error-budget accounting over the live metrics registry.
+
+    Call :meth:`on_step` once per decode step (the launch loops do; the
+    fleet path also threads summaries into ``FleetTelemetry.snapshot``).
+    All reads go through ``obs.metrics.find`` — nothing is created, and
+    a disabled obs turns the tracker into a no-op.
+
+    ``telemetry`` (a :class:`repro.fleet.FleetTelemetry`) supplies the
+    submitted/rejected counters behind the availability objective and
+    the set of tenants the ``default`` targets apply to; without it the
+    single-cell serve path tracks the ``"default"`` tenant.
+    """
+
+    def __init__(self, spec: SLOSpec, obs, *, telemetry=None, clock=None):
+        self.spec = spec
+        self.obs = obs
+        self.telemetry = telemetry
+        self.clock = clock or obs.clock
+        self.steps = 0
+        self._series: dict[tuple, _Series] = {}
+        self._last_fire: dict[tuple, float] = {}
+        self.suppressed_events = 0
+
+    # ---------------------------------------------------------- resolve
+    def _resolved(self) -> dict:
+        """{tenant_id: TenantSLO} — explicit rows plus the default for
+        every tenant currently known to telemetry (or "default")."""
+        out = dict(self.spec.tenants)
+        if self.spec.default is not None:
+            ids = (self.telemetry.per_tenant.keys()
+                   if self.telemetry is not None else ("default",))
+            for tid in ids:
+                out.setdefault(tid, self.spec.default)
+        return out
+
+    def _get_series(self, tenant: str, objective: str,
+                    target: float) -> _Series:
+        key = (tenant, objective)
+        s = self._series.get(key)
+        if s is None:
+            s = self._series[key] = _Series(tenant, objective, target,
+                                            self.spec)
+        return s
+
+    # ----------------------------------------------------------- observe
+    def _observe(self, s: _Series):
+        """Pull the objective's current good/total counts into windows."""
+        m = self.obs.metrics
+        if s.objective in ("ttft_p95_ms", "itl_p95_ms"):
+            name = ("serve_ttft_ms" if s.objective == "ttft_p95_ms"
+                    else "serve_itl_ms")
+            h = m.find(name, tenant=s.tenant)
+            if h is None or not getattr(h, "count", 0):
+                s.push_delta(0, 0)
+                return
+            s.push_cumulative(good_count(h, s.target), h.count)
+        elif s.objective == "availability":
+            st = (self.telemetry.per_tenant.get(s.tenant)
+                  if self.telemetry is not None else None)
+            if st is None:
+                s.push_delta(0, 0)
+                return
+            s.push_cumulative(st.submitted - st.rejected, st.submitted)
+        elif s.objective == "tok_per_s":
+            # one event per poll: did the tenant sustain its floor over
+            # the interval since the last poll?
+            c = m.find("serve_tokens_total", tenant=s.tenant)
+            now = self.clock()
+            prev = getattr(s, "_rate_cursor", None)
+            tokens = c.value if c is not None else 0
+            s._rate_cursor = (now, tokens)
+            if prev is None:
+                s.push_delta(0, 0)
+                return
+            t0, tok0 = prev
+            dt = now - t0
+            if dt <= 0:
+                s.push_delta(0, 0)
+                return
+            rate = (tokens - tok0) / dt
+            good = 1 if rate >= s.target else 0
+            s.push_delta(good, 1)
+        elif s.objective == "acceptance_rate":
+            g = m.find("spec_acceptance_rate")
+            if g is None:
+                s.push_delta(0, 0)
+                return
+            s.push_delta(1 if g.value >= s.target else 0, 1)
+
+    # -------------------------------------------------------------- step
+    def on_step(self):
+        """One tracker poll: windows advance, gauges refresh, breaches
+        fire.  Host-side reads only — safe to call every decode step."""
+        if not getattr(self.obs, "enabled", False):
+            return
+        self.steps += 1
+        m = self.obs.metrics
+        for tenant, tslo in sorted(self._resolved().items()):
+            for objective, target in tslo.objectives().items():
+                s = self._get_series(tenant, objective, target)
+                self._observe(s)
+                state, entered = s.evaluate(self.spec)
+                m.gauge("slo_budget_remaining", tenant=tenant,
+                        objective=objective).set(s.budget_remaining())
+                m.gauge("slo_burn_rate", tenant=tenant,
+                        objective=objective,
+                        window="fast").set(s.burn(s.fast))
+                m.gauge("slo_burn_rate", tenant=tenant,
+                        objective=objective,
+                        window="slow").set(s.burn(s.slow))
+                m.gauge("slo_state", tenant=tenant,
+                        objective=objective).set(_STATE_LEVEL[state])
+                if entered:
+                    self._fire(s)
+                elif state == "ok" and s.episodes \
+                        and "end_step" not in s.episodes[-1]:
+                    ep = s.episodes[-1]
+                    ep["end_step"] = self.steps
+                    ep["end_clock"] = self.clock()
+
+    def _fire(self, s: _Series):
+        """Open a breach episode; emit one ``slo_breach`` event unless a
+        recent one for this series is still inside ``cooldown_s``."""
+        now = self.clock()
+        ep = {"tenant": s.tenant, "objective": s.objective,
+              "start_step": self.steps, "start_clock": now,
+              "burn_fast": round(s.burn(s.fast), 6),
+              "burn_slow": round(s.burn(s.slow), 6),
+              "budget_remaining": round(s.budget_remaining(), 6)}
+        s.episodes.append(ep)
+        key = (s.tenant, s.objective)
+        last = self._last_fire.get(key)
+        if last is not None and now - last < self.spec.cooldown_s:
+            self.suppressed_events += 1
+            ep["event_suppressed"] = True
+            return
+        self._last_fire[key] = now
+        self.obs.event("slo_breach", tenant=s.tenant,
+                       objective=s.objective,
+                       burn_fast=ep["burn_fast"],
+                       burn_slow=ep["burn_slow"],
+                       budget_remaining=ep["budget_remaining"])
+        self.obs.metrics.counter("slo_breach_total", tenant=s.tenant,
+                                 objective=s.objective).inc()
+
+    # ------------------------------------------------------------ report
+    def worst_state(self, tenant_id: str) -> str:
+        level = 0
+        for (tid, _), s in self._series.items():
+            if tid == tenant_id:
+                level = max(level, _STATE_LEVEL[s.state])
+        return STATES[level]
+
+    def tenant_summary(self, tenant_id: str) -> dict:
+        """Compact per-tenant view for ``FleetTelemetry.snapshot()``."""
+        out = {}
+        for (tid, objective), s in sorted(self._series.items()):
+            if tid != tenant_id:
+                continue
+            out[objective] = {
+                "state": s.state,
+                "budget_remaining": round(s.budget_remaining(), 6),
+                "burn_fast": round(s.burn(s.fast), 6),
+                "burn_slow": round(s.burn(s.slow), 6)}
+        return out
+
+    def report(self) -> dict:
+        tenants: dict = {}
+        worst = 0
+        breached = False
+        for (tid, objective), s in sorted(self._series.items()):
+            tenants.setdefault(tid, {})[objective] = s.summary()
+            worst = max(worst, _STATE_LEVEL[s.state])
+            breached = breached or bool(s.episodes)
+        return {"version": 1, "steps": self.steps,
+                "worst_state": STATES[worst], "breached": breached,
+                "suppressed_events": self.suppressed_events,
+                "spec": self.spec.to_obj(), "tenants": tenants}
+
+    def save(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.report(), f, indent=1, sort_keys=True)
+            f.write("\n")
+
+
+# ---------------------------------------------------------------------------
+# report validation (shared with ``repro.obs.check --slo``)
+# ---------------------------------------------------------------------------
+
+def validate_report(report: dict) -> list[str]:
+    """Assert a saved SLO report is structurally sound; returns the
+    ``tenant/objective`` keys found.  Raises AssertionError on the first
+    problem (``repro.obs.check`` turns that into exit 1).
+    """
+    assert isinstance(report, dict), "SLO report must be a JSON object"
+    assert report.get("version") == 1, \
+        f"unsupported SLO report version {report.get('version')!r}"
+    assert report.get("worst_state") in STATES, \
+        f"bad worst_state {report.get('worst_state')!r}"
+    tenants = report.get("tenants")
+    assert isinstance(tenants, dict), "report lacks a tenants object"
+    spec = report.get("spec")
+    assert isinstance(spec, dict), "report lacks its spec"
+    spec_tenants = spec.get("tenants") or {}
+    found = []
+    for tid, objectives in spec_tenants.items():
+        assert tid in tenants, f"spec tenant {tid!r} missing from report"
+        for objective in objectives:
+            assert objective in tenants[tid], \
+                f"tenant {tid!r} objective {objective!r} missing from report"
+    for tid, objectives in tenants.items():
+        assert isinstance(objectives, dict) and objectives, \
+            f"tenant {tid!r} carries no objectives"
+        for objective, row in objectives.items():
+            where = f"{tid}/{objective}"
+            assert objective in OBJECTIVES, \
+                f"{where}: unknown objective"
+            assert row.get("state") in STATES, \
+                f"{where}: bad state {row.get('state')!r}"
+            b = row.get("budget_remaining")
+            assert isinstance(b, (int, float)) and 0.0 <= b <= 1.0, \
+                f"{where}: budget_remaining {b!r} outside [0, 1]"
+            for burn in ("burn_fast", "burn_slow"):
+                v = row.get(burn)
+                assert isinstance(v, (int, float)) and \
+                    math.isfinite(v) and v >= 0.0, \
+                    f"{where}: {burn} {v!r} not a finite non-negative number"
+            eps = row.get("episodes")
+            assert isinstance(eps, list), f"{where}: episodes not a list"
+            for ep in eps:
+                assert isinstance(ep.get("start_step"), int), \
+                    f"{where}: episode lacks start_step"
+                end = ep.get("end_step")
+                assert end is None or (isinstance(end, int)
+                                       and end >= ep["start_step"]), \
+                    f"{where}: episode ends before it starts"
+            found.append(where)
+    return found
+
+
+# ---------------------------------------------------------------------------
+# CLI gate
+# ---------------------------------------------------------------------------
+
+def _demo_breach(path: str) -> int:
+    """Write a synthetic breached report: a real tracker over a fake
+    clock with an injected ITL regression on one of two tenants — the
+    ``make slo-smoke`` negative test (and a worked example of the
+    plane's mechanics)."""
+    from repro.obs import Observability
+
+    t = [0.0]
+    obs = Observability(clock=lambda: t[0])
+    spec = SLOSpec(
+        tenants=(("bronze", TenantSLO(itl_p95_ms=50.0)),
+                 ("gold", TenantSLO(itl_p95_ms=50.0))),
+        fast_steps=8, slow_steps=16, budget_steps=16,
+        warn_burn=2.0, breach_burn=4.0, cooldown_s=1.0)
+    tracker = SLOTracker(spec, obs)
+    gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+    bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+    for step in range(24):
+        t[0] += 1.0
+        gold.record(5.0)                     # healthy tenant stays healthy
+        bronze.record(5.0 if step < 8 else 500.0)   # injected regression
+        tracker.on_step()
+    tracker.save(path)
+    rep = tracker.report()
+    print(f"wrote {path} (worst_state={rep['worst_state']}, "
+          f"breached={rep['breached']})")
+    return 0
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) == 2 and argv[0] == "--demo-breach":
+        return _demo_breach(argv[1])
+    if len(argv) != 1 or argv[0].startswith("-"):
+        print("usage: python -m repro.obs.slo report.json\n"
+              "       python -m repro.obs.slo --demo-breach out.json",
+              file=sys.stderr)
+        return 2
+    try:
+        with open(argv[0]) as f:
+            report = json.load(f)
+        found = validate_report(report)
+    except (AssertionError, json.JSONDecodeError, OSError) as e:
+        print(f"slo: invalid report: {e}", file=sys.stderr)
+        return 1
+    episodes = sum(len(row["episodes"])
+                   for objectives in report["tenants"].values()
+                   for row in objectives.values())
+    print(f"slo: {len(found)} objectives over {report.get('steps', 0)} "
+          f"steps, worst state {report['worst_state']}, "
+          f"{episodes} breach episodes")
+    for tid, objectives in sorted(report["tenants"].items()):
+        for objective, row in sorted(objectives.items()):
+            print(f"  {tid}/{objective}: {row['state']}, budget "
+                  f"{row['budget_remaining']:.3f}, burn "
+                  f"fast {row['burn_fast']:.2f} / "
+                  f"slow {row['burn_slow']:.2f}, "
+                  f"{len(row['episodes'])} episodes")
+    if report.get("breached") or report["worst_state"] == "breach":
+        print("slo: FAIL — at least one objective breached",
+              file=sys.stderr)
+        return 1
+    print("slo: OK — every objective within budget")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

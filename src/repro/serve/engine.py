@@ -212,6 +212,10 @@ class PagedEngine(Engine):
         # closure value, so toggling it is a different engine, never a
         # retrace of a running one
         self.fused_mode = paged_attn.resolve_mode(ecfg.fused_attention)
+        self.fused_fallback = (bool(ecfg.fused_attention)
+                               and self.fused_mode is None)
+        self._fused_fallback_reported = False
+        self.report_attention_mode()
         self._prefill_paged = jax.jit(self._prefill_paged_impl)
         self._step_paged = jax.jit(self._step_paged_impl)
         self._multi_paged = jax.jit(self._multi_paged_impl)
@@ -221,6 +225,26 @@ class PagedEngine(Engine):
         return PagedKVPool(self.cfg, n_pages=self.pcfg.n_pages,
                            page_size=self.pcfg.page_size,
                            kv_bits=bits, kv_group=group, obs=self.obs)
+
+    @property
+    def attention_mode(self) -> str:
+        """The *resolved* paged-decode path this engine actually runs:
+        ``fused-pallas`` / ``fused-interpret`` when the Pallas kernel is
+        live, ``xla-fallback`` when fused was requested but unavailable,
+        plain ``xla`` when never requested."""
+        if self.fused_mode is not None:
+            return f"fused-{self.fused_mode}"
+        return "xla-fallback" if self.fused_fallback else "xla"
+
+    def report_attention_mode(self, obs=None):
+        """One-shot ``fused_fallback`` event + counter for a downgraded
+        engine.  Engines are often built with NOOP obs and get the real
+        one attached post-warmup (Server.set_obs / FleetRouter._wire), so
+        this re-arms until an *enabled* obs actually records it."""
+        if not self.fused_fallback or self._fused_fallback_reported:
+            return
+        self._fused_fallback_reported = paged_attn.report_fallback(
+            obs if obs is not None else self.obs)
 
     # ------------------------------------------------------------- jitted
     def _scatter_bucket(self, pages, cache, page_ids):

@@ -44,6 +44,7 @@ class Server:
                                             obs=self.obs)
         if engine is not None and obs is not None:
             self.engine.obs = obs       # prebuilt engine: adopt our obs
+        self.engine.report_attention_mode(self.obs)
         self.pool = self.engine.new_pool()
         self.scheduler = Scheduler(self.engine, self.pool,
                                    on_token=on_token,
@@ -58,6 +59,7 @@ class Server:
         self.scheduler.obs = obs
         if obs.enabled:
             obs.tracer.name_thread(0, "engine")
+        self.engine.report_attention_mode(obs)
 
     def attach_quality(self, monitor):
         """Attach a :class:`repro.obs.numerics.QualityMonitor`: the
@@ -101,4 +103,5 @@ class Server:
         s = self.scheduler.stats()
         s["pool_bytes"] = self.pool.nbytes()
         s["decode_compilations"] = self.engine.decode_compilations
+        s["attention_mode"] = self.engine.attention_mode
         return s

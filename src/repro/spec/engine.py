@@ -175,6 +175,23 @@ class SpeculativeEngine:
         self.verifier.obs = obs
         self.draft.obs = obs
 
+    @property
+    def attention_mode(self) -> str:
+        """The verifier's resolved paged-attention path (the one that
+        decides token-exactness and dominates device time)."""
+        return self.verifier.attention_mode
+
+    @property
+    def fused_fallback(self) -> bool:
+        """True when either wrapped engine silently downgraded from the
+        requested fused kernel to the XLA gather+dequant path."""
+        return self.verifier.fused_fallback or self.draft.fused_fallback
+
+    def report_attention_mode(self, obs=None):
+        """Forward the one-shot fused-fallback report to both engines."""
+        self.verifier.report_attention_mode(obs)
+        self.draft.report_attention_mode(obs)
+
     # ------------------------------------------------------ pool plumbing
     def new_pool(self) -> PairedKVPool:
         vb, vg = self.verifier._kv_layout
@@ -283,4 +300,6 @@ class SpeculativeEngine:
                     round(self.verify_steps_per_token(), 4),
                 "shared_weight_bytes": self.shared_weight_bytes(),
                 "verify_compilations": self.decode_compilations,
-                "draft_compilations": self.draft_compilations}
+                "draft_compilations": self.draft_compilations,
+                "attention_mode": self.attention_mode,
+                "draft_attention_mode": self.draft.attention_mode}

@@ -1,0 +1,752 @@
+"""Tests for the SLO plane (repro.obs.slo / repro.obs.health): spec
+round-trip, burn-rate/error-budget math under an injected clock, the
+breach state machine + flight-recorder integration, the CLI gates, the
+health/degradation layer, the fused-fallback satellite, and fleet-serve
+bit-identity with the whole judgment plane armed."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.kernels import paged_attention as paged_attn
+from repro.models import transformer
+from repro.models.config import ModelConfig
+from repro.obs import FlightRecorder, Observability
+from repro.obs.health import HealthMonitor
+from repro.obs.slo import (SLOSpec, SLOTracker, TenantSLO, good_count,
+                           good_fraction, validate_report)
+from repro.obs.slo import main as slo_main
+from repro.serve import EngineConfig, PagedConfig, RequestParams, Server
+
+TINY = ModelConfig(name="tiny", family="dense", n_layers=3, d_model=64,
+                   vocab_size=256, n_heads=4, n_kv_heads=2, head_dim=16,
+                   d_ff=128, dtype="float32", remat="none")
+
+
+class FakeClock:
+    def __init__(self, t=100.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+@pytest.fixture(scope="module")
+def params():
+    return transformer.init_params(TINY, jax.random.key(0))
+
+
+def _spec(**kw):
+    base = dict(tenants=(("bronze", TenantSLO(itl_p95_ms=50.0)),
+                         ("gold", TenantSLO(itl_p95_ms=50.0))),
+                fast_steps=4, slow_steps=8, budget_steps=8,
+                warn_burn=2.0, breach_burn=4.0, cooldown_s=0.0)
+    base.update(kw)
+    return SLOSpec(**base)
+
+
+def _obs_tracker(spec=None, telemetry=None):
+    clk = FakeClock()
+    obs = Observability(clock=clk)
+    tracker = SLOTracker(spec or _spec(), obs, telemetry=telemetry)
+    return clk, obs, tracker
+
+
+# ---------------------------------------------------------------------------
+# good-fraction histogram bridge
+# ---------------------------------------------------------------------------
+
+class TestGoodFraction:
+    def test_empty_histogram_is_compliant(self):
+        h = Observability().metrics.histogram("serve_itl_ms")
+        assert good_fraction(h, 50.0) == 1.0
+
+    def test_counts_at_or_under_target(self):
+        h = Observability().metrics.histogram("serve_itl_ms")
+        for v in (5.0, 5.0, 5.0, 500.0):
+            h.record(v)
+        # 50.0 is a default bucket bound: the three 5 ms samples sit at
+        # or under it, the 500 ms one lands past it
+        assert good_count(h, 50.0) == 3
+        assert good_fraction(h, 50.0) == pytest.approx(0.75)
+
+    def test_partial_bucket_counts_as_bad(self):
+        h = Observability().metrics.histogram("serve_itl_ms")
+        h.record(5.0)
+        # target inside the (5, 10] bucket: its samples can't be split,
+        # so the convention is conservative — the bucket counts as bad
+        assert good_count(h, 7.0) == 1       # 5.0 is under the 5.0 bound
+        h.record(9.0)
+        assert good_count(h, 9.5) == 1       # the (5, 10] bucket is bad
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip + validation
+# ---------------------------------------------------------------------------
+
+class TestSpec:
+    def test_json_round_trip(self):
+        spec = _spec(target=0.9, cooldown_s=2.5,
+                     default=TenantSLO(ttft_p95_ms=100.0, tok_per_s=5.0))
+        assert SLOSpec.from_json(spec.to_json()) == spec
+
+    def test_save_load(self, tmp_path):
+        path = str(tmp_path / "slo.json")
+        spec = _spec()
+        spec.save(path)
+        assert SLOSpec.load(path) == spec
+
+    def test_unknown_objective_rejected(self):
+        with pytest.raises(ValueError, match="unknown SLO objectives"):
+            TenantSLO.from_obj({"p99_ms": 1.0})
+
+    def test_unknown_spec_key_rejected(self):
+        with pytest.raises(ValueError, match="unknown SLO spec keys"):
+            SLOSpec.from_obj({"tenants": {}, "burn": 2.0})
+
+    def test_unknown_window_key_rejected(self):
+        with pytest.raises(ValueError, match="unknown SLO spec keys"):
+            SLOSpec.from_obj({"windows": {"fast": 5}})
+
+    @pytest.mark.parametrize("kw", [
+        dict(fast_steps=10, slow_steps=5),
+        dict(warn_burn=7.0, breach_burn=4.0),
+        dict(target=1.5),
+        dict(cooldown_s=-1.0),
+        dict(fast_steps=0),
+    ])
+    def test_bad_config_rejected(self, kw):
+        with pytest.raises(ValueError):
+            _spec(**kw)
+
+    def test_duplicate_tenants_rejected(self):
+        with pytest.raises(ValueError, match="duplicate tenant"):
+            SLOSpec(tenants=(("a", TenantSLO(tok_per_s=1.0)),
+                             ("a", TenantSLO(tok_per_s=2.0))))
+
+    @pytest.mark.parametrize("kw", [
+        dict(itl_p95_ms=-1.0), dict(ttft_p95_ms=float("inf")),
+        dict(availability=1.5), dict(acceptance_rate=0.0),
+    ])
+    def test_bad_targets_rejected(self, kw):
+        with pytest.raises(ValueError):
+            TenantSLO(**kw)
+
+    def test_extra_tenants_merge_and_override(self):
+        inline = TenantSLO(itl_p95_ms=10.0)
+        spec = SLOSpec.from_obj(
+            {"tenants": {"a": {"itl_p95_ms": 99.0}}},
+            extra_tenants=[("a", inline), ("b", TenantSLO(tok_per_s=1.0))])
+        assert spec.tenant_slo("a") == inline          # inline wins
+        assert spec.tenant_slo("b").tok_per_s == 1.0
+
+
+# ---------------------------------------------------------------------------
+# tracker math + breach state machine (fake clock throughout)
+# ---------------------------------------------------------------------------
+
+def _drive(clk, obs, tracker, *, bad_after=8, steps=24, bad_ms=500.0):
+    """gold stays healthy; bronze regresses after ``bad_after`` steps."""
+    gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+    bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+    budgets = []
+    for step in range(steps):
+        clk.advance(1.0)
+        gold.record(5.0)
+        bronze.record(5.0 if step < bad_after else bad_ms)
+        tracker.on_step()
+        budgets.append(tracker._series[("bronze", "itl_p95_ms")]
+                       .budget_remaining())
+    return budgets
+
+
+class TestTracker:
+    def test_healthy_run_stays_ok(self):
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker, bad_after=99)
+        for tid in ("gold", "bronze"):
+            assert tracker.worst_state(tid) == "ok"
+            s = tracker._series[(tid, "itl_p95_ms")]
+            assert s.burn(s.fast) == 0.0 and s.budget_remaining() == 1.0
+        assert not any(e["name"] == "slo_breach"
+                       for e in obs.tracer.events)
+
+    def test_breach_fires_once_and_budget_burns_monotonically(self):
+        clk, obs, tracker = _obs_tracker()
+        budgets = _drive(clk, obs, tracker)
+        s = tracker._series[("bronze", "itl_p95_ms")]
+        assert s.state == "breach"
+        assert len(s.episodes) == 1            # exactly one episode
+        assert tracker.worst_state("gold") == "ok"   # healthy tenant ok
+        fires = [e for e in obs.tracer.events if e["name"] == "slo_breach"]
+        assert len(fires) == 1
+        assert fires[0]["args"]["tenant"] == "bronze"
+        assert obs.metrics.find("slo_breach_total", tenant="bronze",
+                                objective="itl_p95_ms").value == 1
+        # budget only ever decreases once the regression starts
+        after = budgets[8:]
+        assert all(b1 <= b0 + 1e-12 for b0, b1 in zip(after, after[1:]))
+        assert after[-1] < 1.0
+
+    def test_warning_precedes_breach(self):
+        clk, obs, tracker = _obs_tracker()
+        states = []
+        gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+        bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+        for step in range(16):
+            clk.advance(1.0)
+            gold.record(5.0)
+            bronze.record(5.0 if step < 8 else 500.0)
+            tracker.on_step()
+            states.append(tracker._series[("bronze", "itl_p95_ms")].state)
+        assert "warning" in states
+        assert states.index("warning") < states.index("breach")
+
+    def test_recovery_returns_to_ok_and_closes_episode(self):
+        clk, obs, tracker = _obs_tracker()
+        gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+        bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+        for step in range(40):
+            clk.advance(1.0)
+            gold.record(5.0)
+            # regress for 8 steps, then recover
+            bronze.record(500.0 if 8 <= step < 16 else 5.0)
+            tracker.on_step()
+        s = tracker._series[("bronze", "itl_p95_ms")]
+        assert s.state == "ok"
+        (ep,) = s.episodes
+        assert ep["end_step"] >= ep["start_step"]
+        assert "end_clock" in ep
+
+    def test_cooldown_suppresses_repeat_events(self):
+        clk, obs, tracker = _obs_tracker(_spec(cooldown_s=1000.0))
+        gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+        bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+        for step in range(48):
+            clk.advance(1.0)
+            gold.record(5.0)
+            # two distinct breach episodes inside one cooldown window
+            bad = 8 <= step < 16 or 32 <= step < 40
+            bronze.record(500.0 if bad else 5.0)
+            tracker.on_step()
+        s = tracker._series[("bronze", "itl_p95_ms")]
+        assert len(s.episodes) == 2
+        fires = [e for e in obs.tracer.events if e["name"] == "slo_breach"]
+        assert len(fires) == 1                 # second one suppressed
+        assert tracker.suppressed_events == 1
+        assert s.episodes[1].get("event_suppressed") is True
+
+    def test_gauges_exported(self):
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker)
+        m = obs.metrics
+        for tid in ("gold", "bronze"):
+            assert m.find("slo_budget_remaining", tenant=tid,
+                          objective="itl_p95_ms") is not None
+            for window in ("fast", "slow"):
+                assert m.find("slo_burn_rate", tenant=tid,
+                              objective="itl_p95_ms",
+                              window=window) is not None
+        assert m.find("slo_state", tenant="bronze",
+                      objective="itl_p95_ms").value == 2
+        assert m.find("slo_state", tenant="gold",
+                      objective="itl_p95_ms").value == 0
+
+    def test_noop_obs_is_a_noop(self):
+        from repro.obs import NOOP
+        tracker = SLOTracker(_spec(), NOOP, clock=FakeClock())
+        tracker.on_step()
+        assert tracker.steps == 0 and not tracker._series
+
+    def test_availability_from_fleet_telemetry(self):
+        from repro.fleet import FleetTelemetry
+        clk = FakeClock()
+        tel = FleetTelemetry(clk)
+        spec = SLOSpec(tenants=(("a", TenantSLO(availability=0.9)),),
+                       fast_steps=4, slow_steps=8, budget_steps=8,
+                       warn_burn=1.0, breach_burn=2.0)
+        obs = Observability(clock=clk)
+        tracker = SLOTracker(spec, obs, telemetry=tel)
+        for _ in range(10):
+            clk.advance(1.0)
+            tel.note_submit("a")
+            tel.note_reject("a")               # 100% rejected
+            tracker.on_step()
+        s = tracker._series[("a", "availability")]
+        assert s.state == "breach"
+        assert s.budget_remaining() == 0.0
+
+    def test_tok_per_s_floor(self):
+        spec = SLOSpec(tenants=(("a", TenantSLO(tok_per_s=10.0)),),
+                       fast_steps=4, slow_steps=8, budget_steps=8)
+        clk, obs, tracker = _obs_tracker(spec)
+        c = obs.metrics.counter("serve_tokens_total", tenant="a")
+        for _ in range(8):
+            clk.advance(1.0)
+            c.inc(5)                           # 5 tok/s < the 10 floor
+            tracker.on_step()
+        s = tracker._series[("a", "tok_per_s")]
+        assert s.total == 7                    # first poll only sets cursor
+        assert s.good_total == 0
+        assert s.state != "ok"
+
+    def test_acceptance_floor(self):
+        spec = SLOSpec(tenants=(("a", TenantSLO(acceptance_rate=0.9)),),
+                       fast_steps=4, slow_steps=8, budget_steps=8)
+        clk, obs, tracker = _obs_tracker(spec)
+        obs.metrics.gauge("spec_acceptance_rate").set(0.95)
+        for _ in range(4):
+            clk.advance(1.0)
+            tracker.on_step()
+        s = tracker._series[("a", "acceptance_rate")]
+        assert s.good_total == 4 and s.state == "ok"
+        obs.metrics.gauge("spec_acceptance_rate").set(0.5)
+        for _ in range(8):
+            clk.advance(1.0)
+            tracker.on_step()
+        assert s.state == "breach"
+
+    def test_default_applies_to_telemetry_tenants(self):
+        from repro.fleet import FleetTelemetry
+        clk = FakeClock()
+        tel = FleetTelemetry(clk)
+        tel.register("x")
+        tel.register("y")
+        spec = SLOSpec(default=TenantSLO(itl_p95_ms=50.0))
+        obs = Observability(clock=clk)
+        tracker = SLOTracker(spec, obs, telemetry=tel)
+        clk.advance(1.0)
+        tracker.on_step()
+        assert set(tracker._series) == {("x", "itl_p95_ms"),
+                                        ("y", "itl_p95_ms")}
+
+    def test_report_validates_and_summarizes(self):
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker)
+        rep = tracker.report()
+        found = validate_report(rep)
+        assert sorted(found) == ["bronze/itl_p95_ms", "gold/itl_p95_ms"]
+        assert rep["worst_state"] == "breach" and rep["breached"]
+        summary = tracker.tenant_summary("bronze")
+        assert summary["itl_p95_ms"]["state"] == "breach"
+
+
+# ---------------------------------------------------------------------------
+# flight-recorder integration
+# ---------------------------------------------------------------------------
+
+class TestFlightIntegration:
+    def test_breach_dumps_ring_and_metrics_once(self):
+        clk = FakeClock()
+        obs = Observability(clock=clk)
+        flight = obs.attach_flight(FlightRecorder(cooldown_s=5.0))
+        tracker = SLOTracker(_spec(), obs)
+        _drive(clk, obs, tracker)
+        (dump,) = flight.dumps                 # exactly one dump
+        assert dump["reason"] == "slo_breach"
+        assert dump["info"]["tenant"] == "bronze"
+        assert dump["info"]["objective"] == "itl_p95_ms"
+        assert dump["events"]                  # ring captured
+        assert "gauges" in dump["metrics"]     # metrics captured
+
+    def test_per_reason_cooldown_suppresses_burst(self):
+        clk = FakeClock()
+        obs = Observability(clock=clk)
+        flight = obs.attach_flight(FlightRecorder(cooldown_s=1000.0))
+        # tracker cooldown 0: every episode emits an event; the flight
+        # recorder's own per-reason cooldown must absorb the burst
+        tracker = SLOTracker(_spec(cooldown_s=0.0), obs)
+        gold = obs.metrics.histogram("serve_itl_ms", tenant="gold")
+        bronze = obs.metrics.histogram("serve_itl_ms", tenant="bronze")
+        for step in range(48):
+            clk.advance(1.0)
+            gold.record(5.0)
+            bad = 8 <= step < 16 or 32 <= step < 40
+            bronze.record(500.0 if bad else 5.0)
+            tracker.on_step()
+        s = tracker._series[("bronze", "itl_p95_ms")]
+        assert len(s.episodes) == 2            # two events fired...
+        assert len(flight.dumps) == 1          # ...one dump taken
+        assert flight.dropped_dumps >= 1
+
+
+# ---------------------------------------------------------------------------
+# CLI gates
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_usage_error(self, capsys):
+        assert slo_main([]) == 2
+        assert slo_main(["--bogus"]) == 2
+
+    def test_healthy_report_passes(self, tmp_path):
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker, bad_after=99)
+        path = str(tmp_path / "ok.json")
+        tracker.save(path)
+        assert slo_main([path]) == 0
+
+    def test_breached_report_fails(self, tmp_path):
+        path = str(tmp_path / "breach.json")
+        assert slo_main(["--demo-breach", path]) == 0
+        assert slo_main([path]) == 1
+
+    def test_malformed_report_fails(self, tmp_path):
+        path = str(tmp_path / "bad.json")
+        path2 = str(tmp_path / "bad2.json")
+        with open(path, "w") as f:
+            json.dump({"version": 2}, f)
+        assert slo_main([path]) == 1
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker, bad_after=99)
+        rep = tracker.report()
+        rep["tenants"]["gold"]["itl_p95_ms"]["budget_remaining"] = 1.7
+        with open(path2, "w") as f:
+            json.dump(rep, f)
+        assert slo_main([path2]) == 1
+
+    def test_check_slo_flag(self, tmp_path):
+        from repro.obs.check import main as check_main
+        # minimal-but-valid trace/metrics artifacts for the base checks
+        spans = ("prefill", "decode", "queued", "request")
+        trace = {"traceEvents": [
+            {"name": n, "ph": "X", "ts": 0, "dur": 1, "pid": 0, "tid": i}
+            for i, n in enumerate(spans)]}
+        hists = {f'{n}{{tenant="default"}}': {"count": 1, "p50": 1.0,
+                                              "p95": 2.0}
+                 for n in ("serve_ttft_ms", "serve_itl_ms",
+                           "serve_queue_wait_ms", "serve_prefill_ms",
+                           "serve_decode_step_ms")}
+        tpath, mpath = str(tmp_path / "t.json"), str(tmp_path / "m.json")
+        with open(tpath, "w") as f:
+            json.dump(trace, f)
+        with open(mpath, "w") as f:
+            json.dump({"histograms": hists}, f)
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker)              # breached — but check only
+        rpath = str(tmp_path / "r.json")       # gates on STRUCTURE
+        tracker.save(rpath)
+        assert check_main([tpath, mpath]) == 0
+        assert check_main([tpath, mpath, "--slo", rpath]) == 0
+        with open(rpath, "w") as f:
+            json.dump({"version": 1, "worst_state": "ok"}, f)
+        assert check_main([tpath, mpath, "--slo", rpath]) == 1
+        assert check_main([tpath, mpath, "--slo"]) == 2
+
+
+# ---------------------------------------------------------------------------
+# health / silent-degradation layer
+# ---------------------------------------------------------------------------
+
+class _FakePcfg:
+    pages_per_slot = 4
+
+
+class _FakeEngine:
+    fused_fallback = False
+    attention_mode = "xla"
+    pcfg = _FakePcfg()
+
+
+class _FakePool:
+    def __init__(self, occ=0.0, n_free=10):
+        self.occ, self.n_free = occ, n_free
+
+    def occupancy(self):
+        return self.occ
+
+
+class TestHealth:
+    def test_all_healthy(self):
+        obs = Observability()
+        mon = HealthMonitor(obs)
+        mon.register("a", engine=_FakeEngine(), pool=_FakePool())
+        mon.on_step()
+        assert obs.metrics.find("health", tenant="a").value == 1.0
+        snap = mon.snapshot()["tenants"]["a"]
+        assert snap["health"] == 1.0
+        assert set(snap["components"]) == {"fused", "quality", "pool",
+                                           "slo"}
+
+    def test_fused_fallback_degrades(self):
+        obs = Observability()
+        eng = _FakeEngine()
+        eng.fused_fallback = True
+        eng.attention_mode = "xla-fallback"
+        mon = HealthMonitor(obs)
+        mon.register("a", engine=eng, pool=_FakePool())
+        mon.on_step()
+        assert obs.metrics.find("health", tenant="a").value == 0.5
+        assert obs.metrics.find("health_component", tenant="a",
+                                component="fused").value == 0.5
+        assert mon.snapshot()["tenants"]["a"]["attention_mode"] == \
+            "xla-fallback"
+
+    def test_shadow_kl_blowup_degrades(self):
+        obs = Observability()
+        for _ in range(8):
+            obs.metrics.histogram("quality_shadow_kl").record(5.0)
+        mon = HealthMonitor(obs, kl_max=1.0)
+        mon.register("a", engine=_FakeEngine(), pool=_FakePool())
+        mon.on_step()
+        assert obs.metrics.find("health_component", tenant="a",
+                                component="quality").value == 0.5
+
+    def test_pool_pressure_fires_once_per_episode(self):
+        obs = Observability()
+        pool = _FakePool(occ=0.95, n_free=2)   # headroom 2/4 < 1 request
+        mon = HealthMonitor(obs)
+        mon.register("a", engine=_FakeEngine(), pool=pool)
+        mon.on_step()
+        mon.on_step()                          # still pressured: latched
+        events = [e for e in obs.tracer.events
+                  if e["name"] == "pool_pressure"]
+        assert len(events) == 1
+        assert obs.metrics.find("pool_pressure_total",
+                                tenant="a").value == 1
+        assert obs.metrics.find("pool_alloc_headroom",
+                                tenant="a").value == pytest.approx(0.5)
+        assert obs.metrics.find("health", tenant="a").value == 0.5
+        # recover, then pressure again: a second episode fires
+        pool.occ, pool.n_free = 0.1, 10
+        for _ in range(8):
+            mon.on_step()
+        assert obs.metrics.find("health", tenant="a").value == 1.0
+        pool.occ, pool.n_free = 0.95, 2
+        for _ in range(8):
+            mon.on_step()
+        assert obs.metrics.find("pool_pressure_total",
+                                tenant="a").value == 2
+
+    def test_headroom_without_pressure_is_healthy(self):
+        obs = Observability()
+        mon = HealthMonitor(obs)
+        # free pages low but occupancy low too (small pool): no pressure
+        mon.register("a", engine=_FakeEngine(),
+                     pool=_FakePool(occ=0.2, n_free=2))
+        mon.on_step()
+        assert obs.metrics.find("health", tenant="a").value == 1.0
+
+    def test_slo_state_caps_health(self):
+        clk, obs, tracker = _obs_tracker()
+        _drive(clk, obs, tracker)              # bronze breaches
+        mon = HealthMonitor(obs, slo=tracker)
+        mon.register("bronze", engine=_FakeEngine(), pool=_FakePool())
+        mon.register("gold", engine=_FakeEngine(), pool=_FakePool())
+        mon.on_step()
+        assert obs.metrics.find("health", tenant="bronze").value == 0.25
+        assert obs.metrics.find("health", tenant="gold").value == 1.0
+
+
+# ---------------------------------------------------------------------------
+# fused-fallback satellite
+# ---------------------------------------------------------------------------
+
+def _serve_once(params, ecfg, obs=None):
+    pcfg = PagedConfig(max_slots=2, page_size=4, n_pages=24,
+                       max_context=32)
+    server = Server(TINY, params, ecfg, pcfg, obs=obs)
+    rng = np.random.default_rng(3)
+    rid = server.submit(list(map(int, rng.integers(0, 256, size=5))),
+                        RequestParams(max_new_tokens=4))
+    server.drain(max_steps=200)
+    return server, server.output(rid)
+
+
+class TestFusedFallback:
+    def test_genuinely_fused_run_reports_zero_fallbacks(self, params):
+        obs = Observability()
+        ecfg = EngineConfig(max_len=32, kv_bits=8, kv_group=16,
+                            fused_attention=True)
+        server, out = _serve_once(params, ecfg, obs=obs)
+        assert server.engine.fused_mode is not None
+        assert server.engine.fused_fallback is False
+        assert server.engine.attention_mode.startswith("fused-")
+        assert server.stats()["attention_mode"].startswith("fused-")
+        # the counter was never created, let alone incremented
+        assert obs.metrics.find("fused_fallback_total") is None
+        assert not any(e["name"] == "fused_fallback"
+                       for e in obs.tracer.events)
+        assert len(out) == 4
+
+    def test_pallas_unavailable_downgrades_loudly(self, params,
+                                                  monkeypatch):
+        monkeypatch.setattr(paged_attn, "available", lambda: False)
+        obs = Observability()
+        ecfg = EngineConfig(max_len=32, kv_bits=8, kv_group=16,
+                            backend="ref", fused_attention=True)
+        server, out = _serve_once(params, ecfg, obs=obs)
+        assert server.engine.fused_mode is None
+        assert server.engine.fused_fallback is True
+        assert server.engine.attention_mode == "xla-fallback"
+        assert server.stats()["attention_mode"] == "xla-fallback"
+        assert obs.metrics.find("fused_fallback_total").value == 1
+        evs = [e for e in obs.tracer.events if e["name"] == "fused_fallback"]
+        assert len(evs) == 1                   # one-shot, not per step
+        assert len(out) == 4
+
+    def test_one_shot_survives_late_obs_attach(self, params, monkeypatch):
+        monkeypatch.setattr(paged_attn, "available", lambda: False)
+        ecfg = EngineConfig(max_len=32, kv_bits=8, kv_group=16,
+                            backend="ref", fused_attention=True)
+        server, _ = _serve_once(params, ecfg, obs=None)  # NOOP at build
+        obs = Observability()
+        server.set_obs(obs)                    # late attach must report
+        assert obs.metrics.find("fused_fallback_total").value == 1
+        server.set_obs(obs)                    # ...exactly once
+        assert obs.metrics.find("fused_fallback_total").value == 1
+
+    def test_unfused_engine_reports_plain_xla(self, params):
+        ecfg = EngineConfig(max_len=32, kv_bits=8, kv_group=16,
+                            backend="ref")
+        server, _ = _serve_once(params, ecfg)
+        assert server.engine.attention_mode == "xla"
+        assert server.engine.fused_fallback is False
+
+    def test_resolve_mode_reports_through_obs(self, monkeypatch):
+        monkeypatch.setattr(paged_attn, "available", lambda: False)
+        obs = Observability()
+        assert paged_attn.resolve_mode(True, obs=obs) is None
+        assert obs.metrics.find("fused_fallback_total").value == 1
+        # an un-requested fused path is NOT a fallback
+        assert paged_attn.resolve_mode(False, obs=obs) is None
+        assert obs.metrics.find("fused_fallback_total").value == 1
+
+
+# ---------------------------------------------------------------------------
+# manifest + fleet integration
+# ---------------------------------------------------------------------------
+
+def _manifest(tmp_path, slo=True):
+    obj = {"arch": "tiny", "tenants": [
+        {"id": "gold", "scheme": "lq8w", "kv_bits": 8, "kv_group": 16,
+         "max_slots": 2, "page_size": 4, "n_pages": 24, "max_context": 32,
+         "weight": 3},
+        {"id": "bronze", "scheme": "lq2w", "kv_bits": 2, "kv_group": 16,
+         "max_slots": 2, "page_size": 4, "n_pages": 24, "max_context": 32,
+         "slo": {"itl_p95_ms": 40.0}},
+    ]}
+    if slo:
+        obj["slo"] = {"tenants": {"gold": {"ttft_p95_ms": 2000.0,
+                                           "itl_p95_ms": 500.0}},
+                      "windows": {"fast_steps": 4, "slow_steps": 8,
+                                  "budget_steps": 8}}
+    path = tmp_path / "fleet.json"
+    path.write_text(json.dumps(obj))
+    return str(path)
+
+
+class TestManifest:
+    def test_manifest_slo_sections_merge(self, tmp_path):
+        from repro.fleet import load_manifest
+        m = load_manifest(_manifest(tmp_path))
+        assert isinstance(m.slo, SLOSpec)
+        assert m.slo.fast_steps == 4
+        assert m.slo.tenant_slo("gold").ttft_p95_ms == 2000.0
+        assert m.slo.tenant_slo("bronze").itl_p95_ms == 40.0  # inline row
+        specs = {t.tenant_id: t for t in m.tenants}
+        assert specs["bronze"].slo == TenantSLO(itl_p95_ms=40.0)
+        assert specs["gold"].slo is None
+
+    def test_manifest_without_slo(self, tmp_path):
+        from repro.fleet import load_manifest
+        obj = {"arch": "tiny", "tenants": [
+            {"id": "solo", "kv_group": 16, "max_slots": 2, "page_size": 4,
+             "n_pages": 24, "max_context": 32}]}
+        path = tmp_path / "f.json"
+        path.write_text(json.dumps(obj))
+        assert load_manifest(str(path)).slo is None
+
+    def test_inline_only_builds_a_spec(self, tmp_path):
+        from repro.fleet import load_manifest
+        m = load_manifest(_manifest(tmp_path, slo=False))
+        assert isinstance(m.slo, SLOSpec)
+        assert m.slo.tenant_slo("bronze").itl_p95_ms == 40.0
+        assert m.slo.tenant_slo("gold") is None
+
+    def test_bad_inline_slo_rejected(self, tmp_path):
+        from repro.fleet import load_manifest
+        obj = {"arch": "tiny", "tenants": [
+            {"id": "a", "kv_group": 16, "max_slots": 2, "page_size": 4,
+             "n_pages": 24, "max_context": 32,
+             "slo": {"p99_ms": 1.0}}]}
+        path = tmp_path / "f.json"
+        path.write_text(json.dumps(obj))
+        with pytest.raises(ValueError, match="unknown SLO objectives"):
+            load_manifest(str(path))
+
+
+def _fleet_run(params, *, judge=False):
+    from repro.fleet import FleetRegistry, FleetRouter, TenantSpec
+    from repro.obs.health import attach_fleet_health
+    reg = FleetRegistry(TINY, params, backend="ref")
+    for tid, scheme, bits in (("gold", "lq8w", 8), ("bronze", "lq2w", 2)):
+        reg.register(TenantSpec(tid, scheme=scheme, kv_bits=bits,
+                                kv_group=16, max_slots=2, page_size=4,
+                                n_pages=24, max_context=32))
+    obs = Observability() if judge else None
+    router = FleetRouter(reg, obs=obs)
+    tracker = health = None
+    if judge:
+        # the obs (and thus the ITL histograms the tracker consumes) is
+        # armed at engine build, so jit compile time lands in the first
+        # steps — the latency target must dwarf it to stay deterministic
+        spec = SLOSpec(default=TenantSLO(itl_p95_ms=120_000.0,
+                                         availability=0.9),
+                       fast_steps=4, slow_steps=8, budget_steps=8)
+        tracker = SLOTracker(spec, obs, telemetry=router.telemetry)
+        router.telemetry.slo = tracker
+        health = attach_fleet_health(router, slo=tracker)
+    rng = np.random.default_rng(7)
+    for tid in ("gold", "bronze"):
+        router.submit(tid, list(map(int, rng.integers(0, 256, size=6))),
+                      max_new_tokens=5)
+    steps = 0
+    while router.has_work:
+        router.step()
+        if tracker is not None:
+            tracker.on_step()
+            health.on_step()
+        steps += 1
+        assert steps < 1000
+    outs = {tid: router.registry[tid].scheduler.outputs()
+            for tid in ("gold", "bronze")}
+    return router, tracker, health, outs
+
+
+class TestFleetIntegration:
+    def test_bit_identical_with_judgment_plane_armed(self, params):
+        _, _, _, plain = _fleet_run(params, judge=False)
+        router, tracker, health, judged = _fleet_run(params, judge=True)
+        assert judged == plain                 # tokens untouched
+        for t in router.registry:
+            assert t.engine.decode_compilations == 1
+        assert tracker.worst_state("gold") == "ok"
+        assert tracker.worst_state("bronze") == "ok"
+        snap = router.telemetry.snapshot()
+        for tid in ("gold", "bronze"):
+            assert snap["tenants"][tid]["slo"]["itl_p95_ms"]["state"] == \
+                "ok"
+            assert snap["tenants"][tid]["health"] == 1.0
+        stats = router.stats()
+        assert stats["tenants"]["gold"]["attention_mode"] == "xla"
+        rep = tracker.report()
+        validate_report(rep)
+        assert rep["worst_state"] == "ok" and not rep["breached"]
+
+    def test_metrics_server_serves_slo_json(self, params):
+        import urllib.request
+        from repro.obs import MetricsServer
+        _, tracker, _, _ = _fleet_run(params, judge=True)
+        with MetricsServer(tracker.obs, port=0) as msrv:
+            with pytest.raises(urllib.error.HTTPError):
+                urllib.request.urlopen(f"{msrv.url}/slo.json")
+            msrv.attach_slo(tracker)
+            with urllib.request.urlopen(f"{msrv.url}/slo.json") as r:
+                rep = json.loads(r.read().decode())
+        validate_report(rep)
+        assert rep["worst_state"] == "ok"
